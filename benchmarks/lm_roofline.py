@@ -1,0 +1,107 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For each recorded (arch × shape × mesh) cell: the three roofline terms in
+seconds, the dominant term, MODEL_FLOPS/HLO_FLOPS usefulness ratio, and the
+per-device HBM need.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import latmodel
+from repro.core.config import V5E
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh_filter: str = "16x16", tag: str = ""):
+    cells = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("mesh") != mesh_filter:
+            continue
+        if tag and f"__{tag}" not in p.stem:
+            continue
+        if not tag and "__opt" in p.stem:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def wire_bytes(rec: dict) -> float:
+    """Actual bytes-on-ICI from the per-type operand counts.
+
+    all-reduce moves 2(n-1)/n of its operand (ring RS+AG); reduce-scatter
+    (n-1)/n; all-gather (n-1)x its (shard) operand; permute 1x.  n = tp (the
+    collectives here run within the model axis / data axis of equal size 16).
+    The bf16 wire compression factor is applied analytically: the CPU
+    backend promotes sub-f32 collectives to f32 in the compiled HLO, a
+    backend artifact a TPU build does not share.
+    """
+    n = 16.0
+    b = rec["scaled"]["collective_bytes"]
+    total = (b.get("all-reduce", 0.0) * 2 * (n - 1) / n
+             + b.get("reduce-scatter", 0.0) * (n - 1) / n
+             + b.get("all-gather", 0.0) * (n - 1)
+             + b.get("all-to-all", 0.0) * (n - 1) / n
+             + b.get("collective-permute", 0.0))
+    if rec.get("comm", {}).get("compression") == "bf16":
+        total *= 0.5
+    elif rec.get("opts", {}).get("seq_parallel"):
+        # SP's AG/RS ride the bf16 activation dtype; the CPU backend promotes
+        # sub-f32 collectives to f32 in HLO (a TPU build keeps bf16 wire).
+        ag_rs = (b.get("reduce-scatter", 0.0) * (n - 1) / n
+                 + b.get("all-gather", 0.0) * (n - 1))
+        total -= 0.5 * ag_rs
+    return total
+
+
+def analyse(rec: dict) -> dict:
+    n = rec["n_chips"]
+    # trip-count-aware per-device totals (launch.hlo_analysis)
+    flops = rec["scaled"]["flops"]
+    # Memory estimate: matmul operand/result traffic + parameters read once
+    # (TPU-fusion-friendly lower bound). The raw per-op total (hbm_hi) is the
+    # upper bound — CPU fusion boundaries overcount elementwise chains.
+    bytes_lo = (rec["scaled"].get("dot_bytes", 0.0)
+                + rec["memory"]["argument_bytes"])
+    bytes_hi = rec["scaled"]["hbm_bytes"]
+    bytes_acc = bytes_lo if bytes_lo > 0 else bytes_hi
+    coll = wire_bytes(rec)
+    terms = latmodel.roofline_terms(flops, bytes_acc, coll, 1, V5E)
+    # MODEL_FLOPS: 6·N·D for train, 2·N·D for inference forward
+    n_active = rec["active_param_count"]
+    tokens = rec["tokens"]
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    model_flops = mult * n_active * tokens / n   # per device
+    util = model_flops / flops if flops else 0.0
+    step_bound = terms.bound_s
+    mfu = model_flops / (step_bound * V5E.peak_flops) if step_bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "memory_hi_s": bytes_hi / V5E.hbm_bw,
+        "collective_s": terms.collective_s, "dominant": terms.dominant,
+        "model_hlo_ratio": util, "mfu_bound": mfu,
+        "hbm_gib": (rec["memory"]["argument_bytes"]
+                    + rec["memory"]["temp_bytes"]) / 2**30,
+        "fits_16g": (rec["memory"]["argument_bytes"]
+                     + rec["memory"]["temp_bytes"]) < 16 * 2**30,
+    }
+
+
+def run():
+    rows = []
+    for rec in load_cells("16x16"):
+        if rec.get("status") != "ok":
+            rows.append((f"roofline_{rec['arch']}_{rec['shape']}", 0.0,
+                         rec.get("status")))
+            continue
+        a = analyse(rec)
+        rows.append((
+            f"roofline_{a['arch']}_{a['shape']}",
+            a[a["dominant"] + "_s"] * 1e6,
+            f"dom={a['dominant']},mfu={a['mfu_bound']:.3f},"
+            f"useful={a['model_hlo_ratio']:.2f},hbm={a['hbm_gib']:.1f}GiB"))
+    return rows

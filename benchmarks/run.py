@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+Multi-device benches need >1 host device; when launched with a single CPU
+device this driver re-execs itself with 8 host devices (opt out with
+REPRO_BENCH_NO_REEXEC=1 or --single-device).
+"""
+import os
+import sys
+
+
+def _ensure_devices():
+    if os.environ.get("REPRO_BENCH_NO_REEXEC"):
+        return
+    if "--single-device" in sys.argv:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+        os.environ["REPRO_BENCH_NO_REEXEC"] = "1"
+        os.execv(sys.executable, [sys.executable, "-m", "benchmarks.run"]
+                 + sys.argv[1:])
+
+
+def main() -> None:
+    _ensure_devices()
+    from benchmarks import b_eff, lm_roofline, resources, swe_scaling
+
+    print("name,us_per_call,derived")
+    modules = [("b_eff(fig4)", b_eff), ("resources(fig3)", resources),
+               ("swe(fig9,fig10,table1)", swe_scaling),
+               ("lm_roofline", lm_roofline)]
+    only = None
+    for a in sys.argv[1:]:
+        if a.startswith("--only="):
+            only = a.split("=", 1)[1]
+    for label, mod in modules:
+        if only and only not in label:
+            continue
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{label}_ERROR,0,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

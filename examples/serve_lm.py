@@ -1,0 +1,78 @@
+"""Batched serving demo: prefill + greedy decode with the sequence-sharded
+KV cache.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/serve_lm.py --arch qwen3-8b
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_smoke_config
+from repro.core.config import CommConfig
+from repro.launch import input_specs as isp, setup
+from repro.models import layers
+from repro.train import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_smoke_config(args.arch), dtype=jnp.float32)
+    n = jax.device_count()
+    model_axis = 4 if n >= 4 else 1
+    mesh = jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+    comm = CommConfig()
+    sess = setup.build_session(cfg, mesh, comm, concrete=True)
+
+    max_len = args.prompt_len + args.gen
+    shape_p = isp.ShapeSpec("demo", max_len, args.batch, "prefill")
+    shape_d = isp.ShapeSpec("demo", max_len, args.batch, "decode")
+    rt, prefill_fn, _ = serve_mod.build_serve_fn(cfg, mesh, comm, shape_p)
+    _, decode_fn, _ = serve_mod.build_serve_fn(cfg, mesh, comm, shape_d)
+
+    rng = np.random.RandomState(0)
+    tokens = rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len))
+    pad = max_len - args.prompt_len
+    # prefill at prompt length (cache capacity covers generation too)
+    batch = {"tokens": jnp.asarray(
+        np.pad(tokens, ((0, 0), (0, 0))), jnp.int32)}
+
+    t0 = time.perf_counter()
+    state = jax.block_until_ready(prefill_fn(sess.params, batch))
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill*1e3:.1f} ms")
+
+    # greedy decode via vocab-sharded argmax on the host side
+    def pick(logits):
+        return np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+
+    out_tokens = []
+    tok = pick(state.last_logits)
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        out_tokens.append(tok)
+        state = decode_fn(sess.params, jnp.asarray(tok), state)
+        tok = pick(state.last_logits)
+    jax.block_until_ready(state.last_logits)
+    dt = (time.perf_counter() - t0) / args.gen
+    gen = np.stack(out_tokens, 1)
+    print(f"decoded {args.gen} tokens/seq x {args.batch} seqs, "
+          f"{dt*1e3:.1f} ms/token")
+    print("sample generations (token ids):")
+    for b in range(min(2, args.batch)):
+        print(f"  seq{b}: {gen[b][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

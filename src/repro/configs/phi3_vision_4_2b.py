@@ -1,0 +1,29 @@
+"""phi-3-vision-4.2b [vlm] — 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064; phi3-mini backbone + CLIP frontend STUB (input_specs provides
+precomputed patch embeddings per the assignment).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+"""
+from repro.configs import registry
+from repro.models.common import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b", family="vlm",
+        n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab_size=32064, head_dim=96,
+        frontend="vision", num_patches=576, frontend_dim=1024,
+        rope_theta=10_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="phi3v-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, head_dim=16,
+        frontend="vision", num_patches=8, frontend_dim=32, remat=False,
+    )
+
+
+registry.register("phi-3-vision-4.2b", full, smoke)

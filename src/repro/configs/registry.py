@@ -1,0 +1,52 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+Each assigned architecture has its exact public configuration plus a reduced
+SMOKE variant of the same family (small widths/depths, tiny vocab) used by the
+CPU tests; the full configs are exercised only via the dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.models.common import ModelConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {}
+
+_MODULES = [
+    "zamba2_7b", "qwen3_8b", "command_r_plus_104b", "gemma3_1b",
+    "deepseek_coder_33b", "mixtral_8x22b", "deepseek_v3_671b",
+    "phi3_vision_4_2b", "mamba2_130m", "seamless_m4t_large_v2",
+]
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]):
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def get_config(name: str) -> ModelConfig:
+    _load_all()
+    return _REGISTRY[name]()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    _load_all()
+    return _SMOKE[name]()
+
+
+def list_archs():
+    _load_all()
+    return sorted(_REGISTRY)

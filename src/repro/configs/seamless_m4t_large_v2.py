@@ -1,0 +1,30 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, 24L d_model=1024 16H (kv=16)
+d_ff=8192 vocab=256206; multimodal frontend STUB (input_specs provides
+precomputed frame embeddings). [arXiv:2308.11596; hf]
+"""
+from repro.configs import registry
+from repro.models.common import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2", family="audio",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=8192, vocab_size=256206, head_dim=64,
+        is_encoder_decoder=True, n_encoder_layers=24,
+        frontend="audio", frontend_dim=160, mlp_type="gelu",
+        rope_theta=10_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-smoke", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, head_dim=16,
+        is_encoder_decoder=True, n_encoder_layers=2,
+        frontend="audio", frontend_dim=16, mlp_type="gelu", remat=False,
+    )
+
+
+registry.register("seamless-m4t-large-v2", full, smoke)

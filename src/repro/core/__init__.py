@@ -1,0 +1,25 @@
+"""ACCL-X — the paper's communication framework, adapted to TPU/JAX.
+
+Public API:
+    CommConfig / CommMode / Scheduling / Transport / Compression / HardwareSpec
+    Communicator
+    collectives: sendrecv, multi_neighbor_exchange, all_reduce, all_gather,
+                 reduce_scatter, all_to_all, broadcast, hierarchical_all_reduce
+    streaming:   chunked_permute, buffered_permute, pipelined_consume,
+                 overlapped_matmul_allreduce
+    latmodel:    pingping_latency, eq2_throughput, eq3_l_comm, roofline_terms
+    scheduler:   HostScheduledRunner, FusedRunner, make_runner
+"""
+from repro.core.config import (
+    BASELINE_CONFIG, MINIMAL_CONFIG, OPTIMIZED_CONFIG, V5E,
+    CommConfig, CommMode, Compression, HardwareSpec, Scheduling, Transport,
+)
+from repro.core.communicator import Communicator
+from repro.core import collectives, latmodel, plugins, scheduler, streaming
+
+__all__ = [
+    "BASELINE_CONFIG", "MINIMAL_CONFIG", "OPTIMIZED_CONFIG", "V5E",
+    "CommConfig", "CommMode", "Compression", "HardwareSpec", "Scheduling",
+    "Transport", "Communicator", "collectives", "latmodel", "plugins",
+    "scheduler", "streaming",
+]

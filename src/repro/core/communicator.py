@@ -1,0 +1,121 @@
+"""Communicator abstraction — the MPI-like layer of ACCL-X.
+
+A :class:`Communicator` names a (sub)set of mesh axes, exactly like an MPI
+communicator names a process group.  All collectives in
+:mod:`repro.core.collectives` take a communicator; inside ``shard_map`` the
+communicator resolves ranks with ``lax.axis_index``.
+
+The topology helpers mirror the paper's setups:
+
+- ``ring_perm``            — the b_eff virtual ring (paper §3.3).
+- ``neighbor_perms``       — arbitrary point-to-point neighbor lists, as used
+                             by the shallow-water halo exchange (paper §4.1).
+- ``torus_hops``           — hop distance on the physical 2-D ICI torus, which
+                             feeds the latency model's switch/hop term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import jax
+from jax import lax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class Communicator:
+    """A process group over one or more mesh axes.
+
+    ``axis_names`` is ordered major-to-minor; rank = row-major index over the
+    axis sizes, matching ``lax.axis_index(tuple)`` semantics.
+    """
+    axis_names: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, axis_names: Sequence[str] | str) -> "Communicator":
+        if isinstance(axis_names, str):
+            axis_names = (axis_names,)
+        axis_names = tuple(axis_names)
+        sizes = tuple(mesh.shape[a] for a in axis_names)
+        return cls(axis_names=axis_names, axis_sizes=sizes)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.axis_sizes)
+
+    @property
+    def single_axis(self) -> bool:
+        return len(self.axis_names) == 1
+
+    @property
+    def axis(self) -> str:
+        if not self.single_axis:
+            raise ValueError(f"communicator spans axes {self.axis_names}")
+        return self.axis_names[0]
+
+    def rank(self):
+        """Traced rank of the calling device (inside shard_map only)."""
+        r = lax.axis_index(self.axis_names[0])
+        for name in self.axis_names[1:]:
+            r = r * lax.axis_size(name) + lax.axis_index(name)
+        return r
+
+    def split(self, axis_name: str) -> "Communicator":
+        """Sub-communicator over a single axis (MPI_Comm_split analogue)."""
+        if axis_name not in self.axis_names:
+            raise ValueError(f"{axis_name} not in {self.axis_names}")
+        i = self.axis_names.index(axis_name)
+        return Communicator((axis_name,), (self.axis_sizes[i],))
+
+    # ------------------------------------------------------------------
+    # Topology helpers (static, host-side)
+    # ------------------------------------------------------------------
+    def ring_perm(self, step: int = 1) -> list[tuple[int, int]]:
+        n = self.size
+        return [(i, (i + step) % n) for i in range(n)]
+
+    def reverse_ring_perm(self, step: int = 1) -> list[tuple[int, int]]:
+        n = self.size
+        return [(i, (i - step) % n) for i in range(n)]
+
+    def neighbor_perms(self, edges: Sequence[Tuple[int, int]]) -> list[tuple[int, int]]:
+        """Validate an explicit point-to-point pattern (src, dst) pairs.
+
+        ppermute requires each device to be the source of at most one pair per
+        call; halo exchanges with several neighbors issue one ppermute per
+        neighbor index (see collectives.halo_exchange).
+        """
+        srcs = [s for s, _ in edges]
+        if len(set(srcs)) != len(srcs):
+            raise ValueError("each rank may send at most once per ppermute")
+        for s, d in edges:
+            if not (0 <= s < self.size and 0 <= d < self.size):
+                raise ValueError(f"edge ({s},{d}) outside communicator size {self.size}")
+        return list(edges)
+
+    def torus_hops(self, src: int, dst: int, torus_shape: Tuple[int, int] | None = None
+                   ) -> int:
+        """Manhattan hop count between two ranks on the physical 2-D torus.
+
+        Ranks are laid out row-major on ``torus_shape`` (defaults to the
+        squarest factorization of the communicator size).  Feeds the
+        per-hop latency term (the paper's direct-link vs Ethernet-switch
+        comparison: each extra hop adds ~ici_hop_latency).
+        """
+        n = self.size
+        if torus_shape is None:
+            a = int(math.isqrt(n))
+            while n % a:
+                a -= 1
+            torus_shape = (a, n // a)
+        rows, cols = torus_shape
+        (sr, sc), (dr, dc) = divmod(src, cols), divmod(dst, cols)
+        dy = min((sr - dr) % rows, (dr - sr) % rows)
+        dx = min((sc - dc) % cols, (dc - sc) % cols)
+        return dy + dx
+
+    def max_hops(self, edges: Sequence[Tuple[int, int]]) -> int:
+        return max((self.torus_hops(s, d) for s, d in edges), default=0)

@@ -1,0 +1,137 @@
+"""Configuration for the ACCL-X communication layer.
+
+Mirrors the configuration surface of the paper:
+
+- ``mode``       — buffered vs. streaming communication (paper §3.1).
+- ``scheduling`` — host-scheduled (one dispatch per comm op, l_k ≈ 30 µs) vs.
+                   fused/device-scheduled (single compiled program, l_k ≈ sub-µs);
+                   the TPU analogue of host vs. PL command scheduling.
+- ``transport``  — ordered ("TCP"-like: chunks form a dependency chain with an
+                   ack window) vs. unordered ("UDP"-like: chunks are independent,
+                   maximally async, receiver must reorder).
+- ``window``     — number of in-flight chunks before the next chunk waits on an
+                   ack (TCP window scaling analogue).
+- ``chunk_bytes``— chunk/segment size on the wire (jumbo-frame / MSS analogue).
+- plugins        — compression (quantized wire format) and arithmetic
+                   (reduction ops) can be compiled out ("ACCL minimal").
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class CommMode(str, enum.Enum):
+    BUFFERED = "buffered"
+    STREAMING = "streaming"
+
+
+class Scheduling(str, enum.Enum):
+    HOST = "host"    # one jit dispatch per communication op
+    FUSED = "fused"  # collectives inlined into the step program
+
+
+class Transport(str, enum.Enum):
+    ORDERED = "ordered"      # TCP-like: chunk i+window depends on chunk i
+    UNORDERED = "unordered"  # UDP-like: chunks independent, any-order arrival
+
+
+class Compression(str, enum.Enum):
+    NONE = "none"
+    INT8 = "int8"    # per-block int8 wire format (4x fewer bytes vs f32)
+    BF16 = "bf16"    # wire-cast to bf16 (2x fewer bytes vs f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    mode: CommMode = CommMode.STREAMING
+    scheduling: Scheduling = Scheduling.FUSED
+    transport: Transport = Transport.UNORDERED
+    window: int = 4                    # in-flight chunks (ordered transport)
+    chunk_bytes: int = 1 << 20         # 1 MiB wire chunks ("jumbo")
+    max_chunks: int = 16               # cap on chunks per message (compile size)
+    compression: Compression = Compression.NONE
+    # Plugin build flags — "ACCL minimal" removes both (paper Fig. 3).
+    enable_compression_plugin: bool = True
+    enable_arithmetic_plugin: bool = True
+    # Collective algorithm: "native" = XLA built-in (psum/all_gather etc.),
+    # "ring" = explicit ppermute ring algorithms (the CCLO analogue — required
+    # for wire compression, which XLA built-ins cannot express).
+    algorithm: str = "native"
+    # Quantization block size for the int8 wire format.
+    quant_block: int = 256
+
+    def __post_init__(self):
+        if self.compression != Compression.NONE and not self.enable_compression_plugin:
+            raise ValueError(
+                "compression requested but the compression plugin was compiled "
+                "out (enable_compression_plugin=False); rebuild with the plugin "
+                "enabled — mirrors an ACCL 'minimal' build lacking the feature.")
+        if self.compression == Compression.INT8 and self.algorithm == "native":
+            raise ValueError(
+                "int8 wire compression requires algorithm='ring' (XLA native "
+                "collectives cannot carry a quantized wire format).")
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        if self.chunk_bytes < 512:
+            raise ValueError("chunk_bytes must be >= 512")
+
+
+# Paper-faithful baseline: buffered communication scheduled from the host —
+# the MPI+PCIe-style configuration of HPCC FPGA (the paper's baseline).
+BASELINE_CONFIG = CommConfig(
+    mode=CommMode.BUFFERED,
+    scheduling=Scheduling.HOST,
+    transport=Transport.ORDERED,
+    window=1,
+    chunk_bytes=1 << 16,
+    compression=Compression.NONE,
+    algorithm="native",
+)
+
+# The paper's best configuration: streaming + PL(device/fused) scheduling +
+# tuned transport (window scaling + jumbo frames).
+OPTIMIZED_CONFIG = CommConfig(
+    mode=CommMode.STREAMING,
+    scheduling=Scheduling.FUSED,
+    transport=Transport.UNORDERED,
+    window=8,
+    chunk_bytes=1 << 20,
+    compression=Compression.NONE,
+    algorithm="native",
+)
+
+# ACCL "minimal" build: plugins compiled out.
+MINIMAL_CONFIG = CommConfig(
+    mode=CommMode.STREAMING,
+    scheduling=Scheduling.FUSED,
+    transport=Transport.UNORDERED,
+    enable_compression_plugin=False,
+    enable_arithmetic_plugin=False,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for the target chip (TPU v5e defaults).
+
+    The paper's equivalents: link peak 12.5 GB/s (100 Gb/s QSFP), global-memory
+    copy bandwidth 14 GB/s, XRT kernel launch l_k = 30 µs.
+    """
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # B/s per chip
+    ici_bw: float = 50e9                # B/s per link
+    ici_latency: float = 1e-6           # s per hop (direct link)
+    ici_hop_latency: float = 0.5e-6     # extra per additional torus hop
+    dcn_bw: float = 25e9                # B/s per host, cross-pod
+    dcn_latency: float = 10e-6
+    # Command scheduling costs (the paper's l_k):
+    host_dispatch: float = 30e-6        # s per host-side program dispatch
+    fused_dispatch: float = 0.5e-6      # s per in-program DMA issue
+    vmem_bytes: int = 128 * 1024 * 1024  # v5e VMEM per core (for kernel tiling)
+    hbm_bytes: int = 16 * 1024**3
+
+
+V5E = HardwareSpec()

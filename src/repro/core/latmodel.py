@@ -1,0 +1,167 @@
+"""Latency and throughput models — the paper's Equations 1–3 ported to TPU.
+
+Paper (FPGA)                         Here (TPU)
+----------------------------------   ------------------------------------------
+l_k  XRT kernel invocation ~30 µs    host program dispatch (host scheduling) or
+                                     in-program DMA issue (fused scheduling)
+l_m  copy via global memory          HBM staging copy (buffered receive)
+l_c  QSFP link latency + size/bw     ICI hop latency (+0.5 µs per extra torus
+                                     hop — the Ethernet-switch analogue) +
+                                     size/ici_bw
+
+Eq. 1  buffered : L = 2·l_k + l_m + l_c
+       streaming: L = l_k + l_c
+Eq. 2  throughput = f · FLOP_total /
+         (max(E_core + D_ext, L_comm·f) + E_send + E_recv + L_pipe)
+Eq. 3  L_comm = (E_send + E_recv + 2·N_max·l_k·f + N_max·l_m·f)/f + L_pingping
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.config import CommConfig, CommMode, Compression, HardwareSpec, Scheduling, V5E
+
+
+def wire_bytes(msg_bytes: int, cfg: CommConfig) -> float:
+    """Bytes on the wire after the compression plugin (int8: payload/4 of f32
+    + per-block f32 scales; bf16: /2)."""
+    if cfg.compression == Compression.INT8:
+        elems = msg_bytes / 4.0  # wire format defined relative to f32 payloads
+        return elems * 1.0 + (elems / cfg.quant_block) * 4.0
+    if cfg.compression == Compression.BF16:
+        return msg_bytes / 2.0
+    return float(msg_bytes)
+
+
+def l_k(cfg: CommConfig, hw: HardwareSpec = V5E) -> float:
+    """Command-scheduling latency: the paper's 30 µs (host) vs sub-µs (PL)."""
+    return hw.host_dispatch if cfg.scheduling == Scheduling.HOST else hw.fused_dispatch
+
+
+def l_m(msg_bytes: int, hw: HardwareSpec = V5E) -> float:
+    """Staging copy through HBM (write + read back)."""
+    return 2.0 * msg_bytes / hw.hbm_bw
+
+
+def l_c(msg_bytes: int, cfg: CommConfig, hw: HardwareSpec = V5E,
+        hops: int = 1) -> float:
+    """Link latency: first-hop latency + per-extra-hop penalty + serialization."""
+    lat = hw.ici_latency + max(0, hops - 1) * hw.ici_hop_latency
+    return lat + wire_bytes(msg_bytes, cfg) / hw.ici_bw
+
+
+def pingping_latency(msg_bytes: int, cfg: CommConfig, hw: HardwareSpec = V5E,
+                     hops: int = 1) -> float:
+    """Eq. 1. One-directional message latency for the configured mode."""
+    if cfg.mode == CommMode.BUFFERED:
+        return 2.0 * l_k(cfg, hw) + l_m(msg_bytes, hw) + l_c(msg_bytes, cfg, hw, hops)
+    # Streaming: single command, no staging copy; chunking pipelines the wire
+    # so only the first chunk pays full link latency.
+    return l_k(cfg, hw) + l_c(msg_bytes, cfg, hw, hops)
+
+
+def effective_bandwidth(msg_bytes: int, cfg: CommConfig,
+                        hw: HardwareSpec = V5E, hops: int = 1) -> float:
+    """B/s delivered for a message of msg_bytes (the b_eff metric)."""
+    return msg_bytes / pingping_latency(msg_bytes, cfg, hw, hops)
+
+
+def buffered_peak_bw(hw: HardwareSpec = V5E) -> float:
+    """Series-bandwidth cap of buffered mode: (1/bw_link + 1/bw_mem)^-1.
+
+    Paper: (1/12.5 + 1/14)^-1 GB/s = 6.6 GB/s.  TPU: HBM staging (write+read
+    = hbm_bw/2 effective) in series with the ICI link.
+    """
+    return 1.0 / (1.0 / hw.ici_bw + 2.0 / hw.hbm_bw)
+
+
+# ----------------------------------------------------------------------
+# Application model (shallow water, Eq. 2/3)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SWEWorkload:
+    """Static description of one partition's work per timestep (in elements
+    and cycles, as the paper counts them)."""
+    e_total: int        # total mesh elements (global)
+    e_core: int         # core elements on the critical partition
+    e_send: int         # elements sent per step (largest sender)
+    e_recv: int         # elements received per step
+    d_ext: int          # extra pipeline cycles for external data projection
+    l_pipe: int         # pipeline fill depth (cycles)
+    n_max: int          # max neighbor count over partitions
+    flop_per_element: float
+    freq: float         # kernel clock f (element rate, elements/s)
+    msg_bytes: int      # largest single halo message
+
+
+def eq3_l_comm(w: SWEWorkload, cfg: CommConfig, hw: HardwareSpec = V5E,
+               hops: int = 1) -> float:
+    """Eq. 3 — seconds of communication latency on the critical partition."""
+    per_element = (w.e_send + w.e_recv) / w.freq
+    sched = 2.0 * w.n_max * l_k(cfg, hw)
+    staging = w.n_max * (l_m(w.msg_bytes, hw) if cfg.mode == CommMode.BUFFERED else 0.0)
+    return per_element + sched + staging + pingping_latency(w.msg_bytes, cfg, hw, hops)
+
+
+def eq2_throughput(w: SWEWorkload, cfg: CommConfig, hw: HardwareSpec = V5E,
+                   hops: int = 1) -> float:
+    """Eq. 2 — modeled FLOP/s for the partitioned simulation."""
+    l_comm_cycles = eq3_l_comm(w, cfg, hw, hops) * w.freq
+    denom_cycles = (max(w.e_core + w.d_ext, l_comm_cycles)
+                    + w.e_send + w.e_recv + w.l_pipe)
+    flop_total = w.flop_per_element * w.e_total
+    return w.freq * flop_total / denom_cycles
+
+
+def stall_fraction(w: SWEWorkload, cfg: CommConfig, hw: HardwareSpec = V5E,
+                   hops: int = 1) -> float:
+    """Fraction of the step spent stalled on communication (paper: 75–80 %
+    for the MPI+PCIe baseline at ~6000 elements/partition)."""
+    l_comm_cycles = eq3_l_comm(w, cfg, hw, hops) * w.freq
+    compute_cycles = w.e_core + w.d_ext
+    total = max(compute_cycles, l_comm_cycles) + w.e_send + w.e_recv + w.l_pipe
+    return max(0.0, l_comm_cycles - compute_cycles) / total
+
+
+# ----------------------------------------------------------------------
+# Roofline terms (EXPERIMENTS.md §Roofline)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """dominant / sum — 1.0 means perfectly bound by one resource
+        (no wasted time on the others if fully overlapped)."""
+        s = self.compute_s + self.memory_s + self.collective_s
+        return self.bound_s / s if s > 0 else 0.0
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+                   n_chips: int, hw: HardwareSpec = V5E) -> RooflineTerms:
+    """The three-term roofline of the assignment.
+
+    ``hlo_flops``/``hlo_bytes`` are totals from ``compiled.cost_analysis()``
+    (already per-program = per-device for SPMD); ``collective_bytes`` is the
+    summed operand size of collective ops in the lowered HLO.
+    """
+    return RooflineTerms(
+        compute_s=hlo_flops / (n_chips * hw.peak_flops),
+        memory_s=hlo_bytes / (n_chips * hw.hbm_bw),
+        collective_s=collective_bytes / (n_chips * hw.ici_bw),
+    )

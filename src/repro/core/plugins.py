@@ -1,0 +1,107 @@
+"""ACCL-X plugins — compression and arithmetic.
+
+The paper's ACCL ships compression and arithmetic plugins that can be compiled
+out to save resources ("ACCL minimal", Fig. 3).  Here:
+
+- **compression plugin** — a per-block int8 (or bf16-cast) wire format for
+  collectives.  Used by the explicit ring collectives to shrink bytes-on-wire
+  4x (int8) or 2x (bf16); the Pallas kernel twin lives in
+  ``repro.kernels.quant`` (this module is the jnp reference used on CPU).
+- **arithmetic plugin** — the reduction-operator table used by reduce-style
+  collectives (sum/max/min/mean with fp32 accumulation for low-precision
+  inputs).
+
+Disabling a plugin in :class:`~repro.core.config.CommConfig` removes the
+corresponding ops from the compiled program — the TPU analogue of the LUT/DSP
+savings in the paper.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import CommConfig, Compression
+
+# ----------------------------------------------------------------------
+# Compression plugin: per-block symmetric int8 quantization
+# ----------------------------------------------------------------------
+
+def _pad_to(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % multiple
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def quantize_int8(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8 quantization. Returns (q, scales).
+
+    q: int8 of shape (nblocks, block); scales: f32 (nblocks, 1).
+    """
+    flat, _ = _pad_to(x, block)
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def wire_encode(x: jnp.ndarray, cfg: CommConfig):
+    """Encode a message for the wire per the comm config.
+
+    Returns (payload_pytree, decode_fn). With compression disabled this is an
+    identity (and emits zero extra ops — the 'minimal build' property).
+    """
+    if cfg.compression == Compression.NONE:
+        return x, lambda p: p
+    if not cfg.enable_compression_plugin:  # defensive; CommConfig validates too
+        raise ValueError("compression plugin not built")
+    if cfg.compression == Compression.BF16:
+        orig = x.dtype
+        return x.astype(jnp.bfloat16), lambda p: p.astype(orig)
+    if cfg.compression == Compression.INT8:
+        q, s = quantize_int8(x, cfg.quant_block)
+        shape, dtype = x.shape, x.dtype
+        return (q, s), lambda p: dequantize_int8(p[0], p[1], shape, dtype)
+    raise ValueError(f"unknown compression {cfg.compression}")
+
+
+# ----------------------------------------------------------------------
+# Arithmetic plugin: reduction-operator table
+# ----------------------------------------------------------------------
+
+def _acc_sum(a, b):
+    # fp32 accumulation for low-precision inputs (MXU-style accumulate).
+    if a.dtype in (jnp.bfloat16, jnp.float16):
+        return (a.astype(jnp.float32) + b.astype(jnp.float32)).astype(a.dtype)
+    return a + b
+
+
+_REDUCE_OPS: dict[str, Callable] = {
+    "sum": _acc_sum,
+    "max": lax.max,
+    "min": lax.min,
+    "prod": lax.mul,
+}
+
+
+def reduce_op(name: str, cfg: CommConfig) -> Callable:
+    if not cfg.enable_arithmetic_plugin:
+        raise ValueError(
+            f"reduction '{name}' requires the arithmetic plugin, which was "
+            "compiled out (enable_arithmetic_plugin=False)")
+    try:
+        return _REDUCE_OPS[name]
+    except KeyError:
+        raise ValueError(f"unknown reduction '{name}'") from None

@@ -1,0 +1,106 @@
+"""Communication scheduling — host-scheduled vs. fused (device) execution.
+
+The paper's central latency lever: scheduling a communication command from the
+host costs a kernel invocation (~30 µs through XRT), while a control kernel in
+PL issues it in sub-µs.  On TPU the same dichotomy exists between
+
+- **host scheduling**: each phase of a step (compute / comm / compute) is its
+  own jitted program; the host re-dispatches between phases.  Every dispatch
+  pays host-runtime latency and, worse, serializes the device.
+- **fused scheduling**: the entire step is ONE jitted program; the TPU's
+  sequencer issues collective DMAs directly (the "custom control kernel" of
+  Fig. 1b).
+
+Both runners execute the same phase list and produce identical numerics — the
+difference is dispatch count, which the latency model converts to time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.core.config import CommConfig, HardwareSpec, Scheduling, V5E
+from repro.core import latmodel
+
+
+@dataclasses.dataclass
+class Phase:
+    """One schedulable unit: a pure function carry -> carry."""
+    name: str
+    fn: Callable[[Any], Any]
+    is_comm: bool = False
+
+
+class HostScheduledRunner:
+    """One jit (= one host dispatch) per phase — the MPI+PCIe-style baseline.
+
+    ``dispatch_count`` feeds the model: step latency includes
+    n_dispatches · l_k on top of device time.
+    """
+
+    def __init__(self, phases: Sequence[Phase], hw: HardwareSpec = V5E):
+        self.phases = list(phases)
+        self.hw = hw
+        self._jitted = [jax.jit(p.fn) for p in self.phases]
+        self.dispatch_count = 0
+
+    def run_step(self, carry):
+        for f in self._jitted:
+            carry = f(carry)
+            jax.block_until_ready(carry)  # host waits between phases
+            self.dispatch_count += 1
+        return carry
+
+    def modeled_dispatch_overhead(self) -> float:
+        return len(self.phases) * self.hw.host_dispatch
+
+
+class FusedRunner:
+    """All phases fused into a single program — PL-scheduled analogue."""
+
+    def __init__(self, phases: Sequence[Phase], hw: HardwareSpec = V5E):
+        self.phases = list(phases)
+        self.hw = hw
+
+        def fused(carry):
+            for p in self.phases:
+                carry = p.fn(carry)
+            return carry
+
+        self._jitted = jax.jit(fused)
+        self.dispatch_count = 0
+
+    def run_step(self, carry):
+        carry = self._jitted(carry)
+        self.dispatch_count += 1
+        return carry
+
+    def modeled_dispatch_overhead(self) -> float:
+        n_comm = sum(1 for p in self.phases if p.is_comm)
+        return self.hw.host_dispatch + n_comm * self.hw.fused_dispatch
+
+    def lower(self, carry):
+        return self._jitted.lower(carry)
+
+
+def make_runner(phases: Sequence[Phase], cfg: CommConfig,
+                hw: HardwareSpec = V5E):
+    if cfg.scheduling == Scheduling.HOST:
+        return HostScheduledRunner(phases, hw)
+    return FusedRunner(phases, hw)
+
+
+def measure_dispatch_overhead(n: int = 200) -> float:
+    """Calibrate this host's per-dispatch cost (the l_k measurement of §3.4)."""
+    f = jax.jit(lambda x: x + 1)
+    x = jax.numpy.zeros((8,), jax.numpy.float32)
+    x = jax.block_until_ready(f(x))  # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        x = f(x)
+    jax.block_until_ready(x)
+    return (time.perf_counter() - t0) / n

@@ -1,0 +1,22 @@
+"""jit wrappers for the quantization kernels."""
+import functools
+
+import jax
+
+from repro.kernels.quant.quant import quantize_pallas, dequantize_pallas
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize(x, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return quantize_pallas(x, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "interpret"))
+def dequantize(q, s, shape, dtype, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return dequantize_pallas(q, s, shape, dtype, interpret=interp)

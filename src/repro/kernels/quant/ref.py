@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: per-(8x128)-block symmetric int8 quantization."""
+import jax.numpy as jnp
+
+from repro.kernels.quant.quant import BLOCK_ROWS, LANES
+
+
+def quantize_ref(x):
+    flat = x.reshape(-1)
+    blk = BLOCK_ROWS * LANES
+    pad = (-flat.shape[0]) % blk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    tiles = flat.reshape(-1, BLOCK_ROWS, LANES).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(tiles), axis=(1, 2), keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(tiles / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0, 0][:, None]
+
+
+def dequantize_ref(q, s, shape, dtype):
+    x = q.astype(jnp.float32) * s[:, :, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return x.reshape(-1)[:n].reshape(shape).astype(dtype)

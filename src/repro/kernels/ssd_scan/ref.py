@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the SSD scan kernel (flat BH layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x, dt, a, b, c, chunk: int):
+    """x: (BH,S,P); dt: (BH,S); a: (BH,); b/c: (BH,S,N) -> y (BH,S,P)."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+
+    def one(xb, dtb, ab, bb, cb):
+        def to_chunks(z):
+            return z.reshape(nc, chunk, *z.shape[1:])
+        xs = (to_chunks(xb.astype(jnp.float32)),
+              to_chunks(dtb.astype(jnp.float32)),
+              to_chunks(bb.astype(jnp.float32)),
+              to_chunks(cb.astype(jnp.float32)))
+
+        def step(h, inp):
+            xc, dtc, bc, cc = inp
+            da = dtc * ab
+            cum = jnp.cumsum(da)
+            diff = cum[:, None] - cum[None, :]
+            mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+            lmat = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+            w = (cc @ bc.T) * lmat
+            y = w @ (xc * dtc[:, None])
+            y = y + (cc * jnp.exp(cum)[:, None]) @ h
+            decay_end = jnp.exp(cum[-1] - cum)
+            s_c = (bc * (decay_end * dtc)[:, None]).T @ xc
+            h = h * jnp.exp(cum[-1]) + s_c
+            return h, y
+
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = lax.scan(step, h0, xs)
+        return ys.reshape(s, p)
+
+    import jax
+    return jax.vmap(one)(x, dt, a, b, c).astype(x.dtype)

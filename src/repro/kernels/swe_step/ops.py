@@ -1,0 +1,18 @@
+"""jit wrapper for the SWE element-update kernel."""
+import functools
+
+import jax
+
+from repro.kernels.swe_step.swe_step import swe_step_pallas
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "interpret"))
+def swe_step(u, u_n, nx, ny, edge_type, area, valid, h_sea, *, dt,
+             interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return swe_step_pallas(u, u_n, nx, ny, edge_type, area, valid, h_sea,
+                           dt=dt, interpret=interp)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the SWE element-update kernel — delegates to the
+production solver math (single source of truth for the physics)."""
+import jax.numpy as jnp
+
+from repro.swe.dg_solver import reflect, rusanov
+
+
+def swe_step_ref(u, u_n, nx, ny, edge_type, area, valid, h_sea, *, dt: float):
+    n = jnp.stack([nx, ny], axis=-1)                        # (E,3,2)
+    ub = jnp.broadcast_to(u[:, None, :], u_n.shape)
+    u_land = reflect(ub, n)
+    u_sea = jnp.stack([jnp.broadcast_to(h_sea, ub[..., 0].shape),
+                       ub[..., 1], ub[..., 2]], axis=-1)
+    u_r = jnp.where(edge_type[..., None] == 1, u_land,
+                    jnp.where(edge_type[..., None] == 2, u_sea, u_n))
+    f = rusanov(ub, u_r, n)
+    div = jnp.sum(f, axis=1)
+    new = (u - dt / jnp.maximum(area[:, None], 1e-12) * div) * valid[:, None]
+    new = new.at[:, 0].set(jnp.maximum(new[:, 0], 1e-6) * valid)
+    return new

@@ -1,0 +1,279 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch × shape) cell.
+
+Shapes (assigned):
+    train_4k     seq=4096   global_batch=256   -> train_step
+    prefill_32k  seq=32768  global_batch=32    -> prefill (serve)
+    decode_32k   seq=32768  global_batch=128   -> decode_step (serve)
+    long_500k    seq=524288 global_batch=1     -> decode_step, KV timeline
+                 sharded over (data × model) = the whole mesh
+
+``long_500k`` runs only for sub-quadratic archs (SSM / hybrid / sliding-
+window); pure full-attention archs are skipped per the assignment (see
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, mla, ssm
+from repro.models.common import ModelConfig, Runtime
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Sub-quadratic attention only (SSM / hybrid / SWA-dominant).
+LONG_CONTEXT_ARCHS = {"zamba2-7b", "mamba2-130m", "gemma3-1b", "mixtral-8x22b"}
+
+SKIP_REASONS = {
+    ("qwen3-8b", "long_500k"): "pure full attention (quadratic) — skipped per assignment",
+    ("command-r-plus-104b", "long_500k"): "pure full attention — skipped per assignment",
+    ("deepseek-coder-33b", "long_500k"): "pure full attention — skipped per assignment",
+    ("deepseek-v3-671b", "long_500k"): "MLA is full attention — skipped per assignment",
+    ("phi-3-vision-4.2b", "long_500k"): "pure full attention — skipped per assignment",
+    ("seamless-m4t-large-v2", "long_500k"): "enc-dec full attention — skipped per assignment",
+}
+
+
+def applicable(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, SKIP_REASONS.get((arch, shape), "full attention")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# ----------------------------------------------------------------------
+# Train inputs
+# ----------------------------------------------------------------------
+
+def train_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """(abstract batch, batch spec tree) for train_step."""
+    B, S = shape.global_batch, shape.seq_len
+    daxes = _data_axes(mesh)
+    batch = {"tokens": _sds((B, S), jnp.int32),
+             "labels": _sds((B, S), jnp.int32)}
+    spec = {"tokens": P(daxes), "labels": P(daxes)}
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((B, cfg.num_patches, cfg.frontend_dim),
+                                jnp.bfloat16)
+        spec["patches"] = P(daxes)
+    if cfg.family == "audio":
+        # frame embeddings = encoder input; decoder sees `tokens`
+        batch["frames"] = _sds((B, S, cfg.frontend_dim), jnp.bfloat16)
+        spec["frames"] = P(daxes)
+    return batch, spec
+
+
+# ----------------------------------------------------------------------
+# Serve inputs (prefill / decode)
+# ----------------------------------------------------------------------
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    daxes = _data_axes(mesh)
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    spec = {"tokens": P(daxes)}
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((B, cfg.num_patches, cfg.frontend_dim),
+                                jnp.bfloat16)
+        spec["patches"] = P(daxes)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((B, S, cfg.frontend_dim), jnp.bfloat16)
+        spec["frames"] = P(daxes)
+    return batch, spec
+
+
+def decode_seq_axes(shape: ShapeSpec, mesh) -> tuple:
+    """KV-timeline shard axes: model only, unless batch < dp (long context)."""
+    daxes = _data_axes(mesh)
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    if shape.global_batch % dp == 0 and shape.global_batch >= dp:
+        return ("model",)
+    return daxes + ("model",)
+
+
+def decode_batch_axes(shape: ShapeSpec, mesh) -> tuple:
+    daxes = _data_axes(mesh)
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    if shape.global_batch % dp == 0 and shape.global_batch >= dp:
+        return daxes
+    return ()     # batch replicated; the timeline shards over data instead
+
+
+def _kv_cache_abstract(cfg, B, max_len, n_shards, n_layers, bx, sx):
+    hd = cfg.resolved_head_dim
+    L = max(1, -(-max_len // n_shards))
+    lead = (n_layers,) if n_layers else ()
+    pl = (None,) * len(lead)
+    # global seq dim = L * n_shards (padded to a shard multiple)
+    k = _sds(lead + (B, L * n_shards, cfg.n_kv_heads, hd), cfg.dtype)
+    v = _sds(lead + (B, L * n_shards, cfg.n_kv_heads, hd), cfg.dtype)
+    length = _sds(lead, jnp.int32) if lead else _sds((), jnp.int32)
+    spec = attention.KVCache(
+        k=P(*(pl + (bx, sx, None, None))),
+        v=P(*(pl + (bx, sx, None, None))),
+        length=P(*pl) if lead else P())
+    return attention.KVCache(k=k, v=v, length=length), spec
+
+
+def _mla_cache_abstract(cfg, B, max_len, n_shards, n_layers, bx, sx):
+    L = max(1, -(-max_len // n_shards))
+    lead = (n_layers,) if n_layers else ()
+    pl = (None,) * len(lead)
+    val = mla.MLACache(
+        ckv=_sds(lead + (B, L * n_shards, cfg.kv_lora_rank), cfg.dtype),
+        k_rope=_sds(lead + (B, L * n_shards, cfg.qk_rope_dim), cfg.dtype),
+        length=_sds(lead, jnp.int32) if lead else _sds((), jnp.int32))
+    spec = mla.MLACache(
+        ckv=P(*(pl + (bx, sx, None))),
+        k_rope=P(*(pl + (bx, sx, None))),
+        length=P(*pl) if lead else P())
+    return val, spec
+
+
+def _ssm_state_abstract(cfg, B, tp, n_layers, bx):
+    hl, sharded = ssm.ssm_dims(cfg, tp)
+    lead = (n_layers,) if n_layers else ()
+    pl = (None,) * len(lead)
+    hx = "model" if sharded else None
+    val = ssm.SSMState(
+        conv=_sds(lead + (B, cfg.conv_width - 1, cfg.ssm_heads * cfg.ssm_head_dim
+                          ), cfg.dtype),
+        h=_sds(lead + (B, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+               jnp.float32))
+    spec = ssm.SSMState(
+        conv=P(*(pl + (bx, None, hx))),
+        h=P(*(pl + (bx, hx, None, None))))
+    return val, spec
+
+
+def decode_caches_abstract(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """(abstract ServeState caches, cache spec tree) matching decode.prefill
+    output structure for this family."""
+    daxes = _data_axes(mesh)
+    tp = mesh.shape["model"]
+    sx_axes = decode_seq_axes(shape, mesh)
+    bx_axes = decode_batch_axes(shape, mesh)
+    n_shards = 1
+    for a in sx_axes:
+        n_shards *= mesh.shape[a]
+    bx = bx_axes if bx_axes else None
+    sx = sx_axes
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    B = shape.global_batch
+    S = shape.seq_len
+    if cfg.family == "vlm":
+        S = S + cfg.num_patches   # cache covers the patch prefix too
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.local_global_ratio:
+            r = cfg.local_global_ratio
+            nb = cfg.n_layers // (r + 1)
+            trailing = cfg.n_layers - nb * (r + 1)
+            loc_v, loc_s = _kv_cache_abstract(cfg, B, S, n_shards, None, bx, sx)
+            loc_v = jax.tree.map(lambda l: _sds((nb, r) + l.shape, l.dtype), loc_v)
+            loc_s = jax.tree.map(lambda s: P(*((None, None) + tuple(s))), loc_s,
+                                 is_leaf=lambda x: isinstance(x, P))
+            g_v, g_s = _kv_cache_abstract(cfg, B, S, n_shards, nb, bx, sx)
+            caches = {"blocks": {"local": loc_v, "global": g_v},
+                      "trailing": None}
+            specs = {"blocks": {"local": loc_s, "global": g_s},
+                     "trailing": None}
+            if trailing:
+                t_v, t_s = _kv_cache_abstract(cfg, B, S, n_shards, trailing,
+                                              bx, sx)
+                caches["trailing"] = t_v
+                specs["trailing"] = t_s
+            return caches, specs
+        return _kv_cache_abstract(cfg, B, S, n_shards, cfg.n_layers, bx, sx)
+    if cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.n_dense_layers
+        mk = _mla_cache_abstract if cfg.use_mla else _kv_cache_abstract
+        m_v, m_s = mk(cfg, B, S, n_shards, n_moe, bx, sx)
+        caches = {"moe": m_v, "dense": None}
+        specs = {"moe": m_s, "dense": None}
+        if cfg.n_dense_layers:
+            d_v, d_s = mk(cfg, B, S, n_shards, cfg.n_dense_layers, bx, sx)
+            caches["dense"] = d_v
+            specs["dense"] = d_s
+        return caches, specs
+    if cfg.family == "ssm":
+        return _ssm_state_abstract(cfg, B, tp, cfg.n_layers, bx)
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        ng = cfg.n_layers // k
+        trailing = cfg.n_layers - ng * k
+        s_v, s_s = _ssm_state_abstract(cfg, B, tp, None, bx)
+        s_v = jax.tree.map(lambda l: _sds((ng, k) + l.shape, l.dtype), s_v)
+        s_s = jax.tree.map(lambda s: P(*((None, None) + tuple(s))), s_s,
+                           is_leaf=lambda x: isinstance(x, P))
+        a_v, a_s = _kv_cache_abstract(cfg, B, S, n_shards, ng, bx, sx)
+        caches = {"groups": {"ssm": s_v, "attn": a_v}, "trailing": None}
+        specs = {"groups": {"ssm": s_s, "attn": a_s}, "trailing": None}
+        if trailing:
+            t_v, t_s = _ssm_state_abstract(cfg, B, tp, trailing, bx)
+            caches["trailing"] = t_v
+            specs["trailing"] = t_s
+        return caches, specs
+    if cfg.family == "audio":
+        self_v, self_s = _kv_cache_abstract(cfg, B, S, n_shards, cfg.n_layers,
+                                            bx, sx)
+        # cross cache: encoder length (= S frames here)
+        x_v, x_s = _kv_cache_abstract(cfg, B, S, n_shards, cfg.n_layers, bx, sx)
+        return ({"self": self_v, "cross": x_v}, {"self": self_s, "cross": x_s})
+    raise ValueError(cfg.family)
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """(abstract (token, ServeState), spec tree) for decode_step."""
+    from repro.models import decode as dec
+    daxes = _data_axes(mesh)
+    bx_axes = decode_batch_axes(shape, mesh)
+    bx = bx_axes if bx_axes else None
+    B = shape.global_batch
+    tp = mesh.shape["model"]
+    caches, cache_spec = decode_caches_abstract(cfg, shape, mesh)
+    vshard = cfg.vocab_size // tp if cfg.vocab_size % tp == 0 and tp > 1 \
+        else cfg.vocab_size
+    state = dec.ServeState(
+        caches=caches,
+        last_logits=_sds((B, vshard * (tp if vshard < cfg.vocab_size else 1)),
+                         jnp.float32),
+        length=_sds((), jnp.int32))
+    state_spec = dec.ServeState(
+        caches=cache_spec,
+        last_logits=P(bx, "model") if vshard < cfg.vocab_size else P(bx, None),
+        length=P())
+    token = _sds((B,), jnp.int32)
+    token_spec = P(bx)
+    return (token, state), (token_spec, state_spec)

@@ -1,0 +1,470 @@
+"""Attention — GQA / sliding-window / local-global, with TP + SP decode.
+
+Parallel layouts (manual SPMD inside shard_map):
+
+- **Training / prefill**: Q heads sharded over the ``model`` axis when
+  divisible (KV weights replicated when ``n_kv_heads % tp != 0`` — the
+  standard KV-replication of GQA under wide TP); otherwise the whole attention
+  computes replicated (tiny-head archs, e.g. gemma3's 4 heads on tp=16 — the
+  FLOP waste shows up in the roofline's MODEL/HLO ratio and is a hillclimb
+  lever).
+- **Decode**: the KV cache is sharded over the ``model`` axis along the
+  *sequence* dimension (sequence-parallel decode).  Every device attends its
+  slice of the timeline for *all* heads and the partial results are combined
+  with a log-sum-exp reduction — two small ACCL-X all-reduces (max + sum).
+  This is uniform over every kv-head count and is what makes ``long_500k``
+  decode feasible: 512 K tokens of KV split 16 ways.
+
+The jnp path below is the reference; ``rt.use_pallas=True`` routes the core
+attention to the Pallas flash kernel (``repro.kernels.flash_attention``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives
+from repro.models import layers
+from repro.models.common import ModelConfig, Runtime
+
+
+class AttnDims(NamedTuple):
+    n_heads: int          # effective (possibly zero-padded) q heads
+    n_real_heads: int     # q heads carrying real weights
+    n_kv: int             # global kv heads
+    head_dim: int
+    q_sharded: bool       # q heads sharded over tp
+    kv_sharded: bool      # kv heads sharded over tp
+    local_heads: int      # q heads computed on this device
+    local_kv: int         # kv heads computed on this device
+
+
+def attn_dims(cfg: ModelConfig, tp: int) -> AttnDims:
+    """Resolve the TP layout for attention heads.
+
+    When n_heads % tp != 0 and shard_attn='auto', q heads are padded to the
+    next tp multiple with zero-weight heads (wo rows are zero, so padded heads
+    contribute exactly nothing) provided the padded grouping stays GQA-valid.
+    """
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    h_eff = cfg.padded_heads or H   # config-level: same grouping at every tp
+    kv_sharded = KV > 0 and KV % tp == 0 and tp > 1
+    if tp == 1 or KV == 0:
+        return AttnDims(h_eff, H, KV, hd, False, False, h_eff, KV)
+    if h_eff % tp == 0 and cfg.shard_attn != "replicate":
+        local = h_eff // tp
+        group = h_eff // KV
+        if h_eff % KV == 0 and (group % local == 0 or local % group == 0):
+            return AttnDims(h_eff, H, KV, hd, True, kv_sharded, local,
+                            KV // tp if kv_sharded else KV)
+    # Fallback: replicated attention compute on every tp rank.
+    return AttnDims(h_eff, H, KV, hd, False, False, h_eff, KV)
+
+
+def init_attention(key, cfg: ModelConfig, dtype, tp: int = 1):
+    """Full (unsharded) parameter arrays; the launcher shards them.
+
+    Zero-padded head columns/rows are part of the stored arrays so that the
+    global weight shape divides the tp axis.
+    """
+    hd = cfg.resolved_head_dim
+    dims = attn_dims(cfg, tp)
+    ks = jax.random.split(key, 4)
+    wq = layers.dense_init(ks[0], cfg.d_model, dims.n_real_heads * hd, dtype)
+    wo = layers.dense_init(ks[3], dims.n_real_heads * hd, cfg.d_model, dtype)
+    pad = (dims.n_heads - dims.n_real_heads) * hd
+    if pad:
+        wq = jnp.concatenate([wq, jnp.zeros((cfg.d_model, pad), dtype)], axis=1)
+        wo = jnp.concatenate([wo, jnp.zeros((pad, cfg.d_model), dtype)], axis=0)
+    p = {
+        "wq": wq,
+        "wk": layers.dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": layers.dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": wo,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _mask(q_len: int, kv_len: int, q_offset, causal: bool,
+          window: Optional[int]) -> jnp.ndarray:
+    """Additive mask (q_len, kv_len). q_offset = absolute pos of query 0."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    ok = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+_DENSE_SDPA_MAX_T = 4096   # above this, use the tiled (flash-style) path
+_TILE_Q = 1024
+_TILE_K = 1024
+
+
+def _tile_scores(q_tile, k_tile, q0, k0, causal, window, softcap, v_dim):
+    """q_tile: (B,Lq,KV,rep,hd) f32; k_tile: (B,Lk,KV,hd) f32.
+    Returns masked scores (B,KV,rep,Lq,Lk)."""
+    hd = q_tile.shape[-1]
+    s = jnp.einsum("bsgrd,btgd->bgrst", q_tile, k_tile) / (hd ** 0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q0 + jnp.arange(q_tile.shape[1])[:, None]
+    k_pos = k0 + jnp.arange(k_tile.shape[1])[None, :]
+    ok = jnp.ones(q_pos.shape[:1] + k_pos.shape[1:], bool)
+    if causal:
+        ok = ok & (k_pos <= q_pos)
+    if window is not None:
+        ok = ok & (k_pos > q_pos - window)
+    return jnp.where(ok[None, None, None], s, -jnp.inf)
+
+
+def _sdpa_dense(q, k, v, softcap, causal, window):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, S, KV, rep, hd).astype(jnp.float32)
+    s = _tile_scores(qg, k.astype(jnp.float32), 0, 0, causal, window, softcap,
+                     v.shape[-1])
+    probs = jax.nn.softmax(s, axis=-1)
+    probs = jnp.where(jnp.isfinite(s), probs, 0.0)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd if v.shape[-1] == hd else v.shape[-1]
+                       ).astype(q.dtype)
+
+
+def _sdpa_tiled(q, k, v, softcap, causal, window, trimmed: bool):
+    """Flash-style two-level tiling in pure jnp.
+
+    Outer loop over query tiles; inner ``fori_loop`` over KV tiles with a
+    running (m, l, acc) online softmax.  ``trimmed=True`` statically skips KV
+    tiles that are fully masked (causal future / outside the sliding window) —
+    the FLOP-trimming optimization of the perf log; ``False`` visits every
+    tile and masks (baseline).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    vd = v.shape[-1]
+    # Pad KV time to a tile multiple so dynamic_slice never clamps.
+    t_pad = (-T) % _TILE_K
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if t_pad:
+        kf = jnp.pad(kf, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    n_q = -(-S // _TILE_Q)
+    outs = []
+    for qi in range(n_q):
+        q0 = qi * _TILE_Q
+        lq = min(S, q0 + _TILE_Q) - q0
+        qt = q[:, q0:q0 + lq].reshape(B, lq, KV, rep, hd).astype(jnp.float32)
+        # Static KV range for this query tile.
+        hi = min(T, q0 + lq) if (causal and trimmed) else T
+        lo = 0
+        if window is not None and trimmed:
+            lo = max(0, q0 - window + 1) // _TILE_K * _TILE_K
+        n_k = -(-(hi - lo) // _TILE_K)
+
+        def kv_step(i, carry, q0=q0, lq=lq, qt=qt, lo=lo):
+            m, l, acc = carry
+            k0 = lo + i * _TILE_K
+            kt = lax.dynamic_slice_in_dim(kf, k0, _TILE_K, axis=1)
+            vt = lax.dynamic_slice_in_dim(vf, k0, _TILE_K, axis=1)
+            s = _tile_scores(qt, kt, q0, k0, causal, window, softcap, vd)
+            # mask out-of-range kv positions (tail tile)
+            k_pos = k0 + jnp.arange(_TILE_K)
+            s = jnp.where((k_pos < T)[None, None, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.exp(m - m_new)
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrst,btgd->bgrsd", p, vt)
+            acc = acc * corr[..., None] + pv
+            return m_new, l, acc
+
+        m0 = jnp.full((B, KV, rep, lq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, lq), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, lq, vd), jnp.float32)
+        if n_k <= 0:
+            m_f, l_f, acc = m0, l0, a0
+        else:
+            m_f, l_f, acc = lax.fori_loop(0, n_k, lambda i, c: kv_step(i, c),
+                                          (m0, l0, a0))
+        o = acc / jnp.maximum(l_f[..., None], 1e-30)
+        o = jnp.moveaxis(o, 3, 1).reshape(B, lq, H, vd)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def _sdpa(q, k, v, mask, softcap: Optional[float], rt: Runtime,
+          causal: bool, window: Optional[int]):
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd_v) -> (B,S,H,hd_v).  fp32 softmax.
+
+    Dispatch: Pallas flash kernel (TPU) > dense einsum (short seq) > tiled
+    flash-style jnp (long seq; `attn_tiling`='trimmed' statically skips
+    fully-masked tiles).
+    """
+    del mask  # positions are reconstructed inside the tile helpers
+    T = k.shape[1]
+    if rt.use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                      softcap=softcap)
+    tiling = getattr(rt, "attn_tiling", "auto")
+    if (tiling == "dense") or (tiling == "auto" and T <= _DENSE_SDPA_MAX_T):
+        return _sdpa_dense(q, k, v, softcap, causal, window)
+    return _sdpa_tiled(q, k, v, softcap, causal, window,
+                       trimmed=(tiling == "trimmed"))
+
+
+def attention(params, x: jnp.ndarray, positions: jnp.ndarray, rt: Runtime,
+              window: Optional[int] = None, causal: Optional[bool] = None,
+              kv_override: Optional[tuple] = None, return_kv: bool = False,
+              sp: bool = False):
+    """Full self-attention (training / prefill). x: (B,S,D) replicated.
+
+    ``kv_override`` = (k, v, kv_positions) for cross-attention.
+    ``return_kv`` additionally returns post-rope full-head (B,S,KV,hd) k/v
+    for cache construction at prefill (all-gathered if kv was TP-sharded).
+    Returns (B,S,D) replicated (row-parallel combine via ACCL-X).
+    """
+    cfg, mesh = rt.cfg, rt.mesh
+    dims = attn_dims(cfg, mesh.tp)
+    causal = cfg.causal if causal is None else causal
+    B, S, D = x.shape
+    hd = dims.head_dim
+
+    if sp and dims.q_sharded:
+        # Megatron-SP: x arrives seq-sharded; the all-gather's transpose
+        # performs the f-operator's cotangent sum.
+        x = layers.sp_all_gather(x, rt)
+        B, S, D = x.shape
+    else:
+        x = layers.tp_grad_sum(x, rt, dims.q_sharded)
+    q = layers.col_parallel(x, params["wq"]).reshape(B, S, -1, hd)
+    if kv_override is None:
+        k = layers.col_parallel(x, params["wk"]).reshape(B, S, -1, hd)
+        v = layers.col_parallel(x, params["wv"]).reshape(B, S, -1, hd)
+        kv_positions = positions
+    else:
+        k, v, kv_positions = kv_override
+
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    if kv_override is None:
+        k = layers.apply_rope(k, kv_positions, cfg.rope_theta)
+
+    kv_full = None
+    if return_kv:
+        if dims.kv_sharded:
+            kv_full = (collectives.all_gather(k, rt.tp_comm(), rt.comm, axis=2),
+                       collectives.all_gather(v, rt.tp_comm(), rt.comm, axis=2))
+        else:
+            kv_full = (k, v)
+
+    if dims.q_sharded and not dims.kv_sharded:
+        # KV computed replicated; slice the kv heads this device's q group needs.
+        group = dims.n_heads // dims.n_kv
+        shard = lax.axis_index(mesh.axis_model)
+        n_need = max(1, dims.local_heads // group)
+        start = (shard * dims.local_heads) // group
+        k = lax.dynamic_slice_in_dim(k, start, n_need, axis=2)
+        v = lax.dynamic_slice_in_dim(v, start, n_need, axis=2)
+
+    out = _sdpa(q, k, v, None, cfg.attn_logit_softcap, rt, causal, window)
+    if dims.n_heads != dims.n_real_heads:
+        # Zero the zero-weight padded heads' outputs: keeps wo pad rows at
+        # exactly zero gradient (identity math at any tp).
+        if dims.q_sharded:
+            shard = lax.axis_index(mesh.axis_model)
+            gidx = shard * dims.local_heads + jnp.arange(dims.local_heads)
+        else:
+            gidx = jnp.arange(dims.local_heads)
+        out = out * (gidx < dims.n_real_heads)[None, None, :, None]
+    out = out.reshape(B, S, -1)
+    if dims.q_sharded:
+        if sp:
+            partial = jnp.dot(out, params["wo"],
+                              preferred_element_type=jnp.float32)
+            y = layers.sp_reduce_scatter(partial, rt).astype(x.dtype)
+        else:
+            y = layers.row_parallel(out, params["wo"], rt)
+    else:
+        # Replicated attention: wo applied fully on every device, no combine.
+        y = jnp.dot(out, params["wo"], preferred_element_type=jnp.float32
+                    ).astype(x.dtype)
+    if return_kv:
+        return y, kv_full
+    return y
+
+
+# ----------------------------------------------------------------------
+# Decode with sequence-sharded KV cache (SP decode + LSE combine)
+# ----------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_shard, KV, hd) — this device's slice of time
+    v: jnp.ndarray
+    length: jnp.ndarray   # () int32 — global tokens already in cache
+
+    @property
+    def seq_shard(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_shards: int,
+                  dtype) -> KVCache:
+    shard_len = max(1, -(-max_len // n_shards))
+    hd = cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, shard_len, cfg.n_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, shard_len, cfg.n_kv_heads, hd), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def prefill_into_cache(cache: KVCache, k_full: jnp.ndarray, v_full: jnp.ndarray,
+                       rt: Runtime) -> KVCache:
+    """Scatter full-sequence K/V (replicated) into the seq-sharded cache."""
+    sp = rt.sp_comm()
+    shard = sp.rank() if rt.sp_size > 1 else 0
+    S = k_full.shape[1]
+    L = cache.seq_shard
+    start = shard * L
+    # static-shape path: pad k_full to n_shards*L then slice
+    pad = rt.sp_size * L - S
+    if pad > 0:
+        k_full = jnp.pad(k_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_full = jnp.pad(v_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_slice = lax.dynamic_slice_in_dim(k_full, start, L, axis=1)
+    v_slice = lax.dynamic_slice_in_dim(v_full, start, L, axis=1)
+    return KVCache(k=k_slice.astype(cache.k.dtype),
+                   v=v_slice.astype(cache.v.dtype),
+                   length=jnp.asarray(S, jnp.int32))
+
+
+def append_to_cache(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                    rt: Runtime) -> KVCache:
+    """Write one new (B,1,KV,hd) entry at global position cache.length."""
+    shard = rt.sp_comm().rank() if rt.sp_size > 1 else 0
+    L = cache.seq_shard
+    owner = cache.length // L
+    off = cache.length % L
+    k_upd = lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            off, axis=1)
+    v_upd = lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            off, axis=1)
+    mine = owner == shard
+    return KVCache(k=jnp.where(mine, k_upd, cache.k),
+                   v=jnp.where(mine, v_upd, cache.v),
+                   length=cache.length + 1)
+
+
+def decode_attention(params, x: jnp.ndarray, cache: KVCache, rt: Runtime,
+                     window: Optional[int] = None, append: bool = True,
+                     q_pos=None) -> tuple[jnp.ndarray, KVCache]:
+    """One decode step. x: (B,1,D) replicated. Returns (B,1,D), new cache.
+
+    All projections are computed replicated (decode is memory-bound; the q/kv
+    matmuls are tiny), attention runs over each device's sequence shard, and
+    partials combine with the LSE trick: two ACCL-X all-reduces.
+
+    ``append=False`` attends a frozen cache (cross-attention); ``q_pos``
+    overrides the query's rope position (defaults to cache.length).
+    """
+    cfg, mesh = rt.cfg, rt.mesh
+    hd = cfg.resolved_head_dim
+    B = x.shape[0]
+    dims = attn_dims(cfg, mesh.tp)
+
+    # Replicated projections: full q/k/v on every device (all heads).
+    if dims.q_sharded:
+        q_loc = layers.col_parallel(x, params["wq"]).reshape(B, 1, dims.local_heads, hd)
+        q = collectives.all_gather(q_loc, rt.tp_comm(), rt.comm, axis=2)
+    else:
+        q = jnp.dot(x, params["wq"], preferred_element_type=jnp.float32
+                    ).astype(x.dtype).reshape(B, 1, dims.n_heads, hd)
+    if dims.kv_sharded:
+        k_loc = layers.col_parallel(x, params["wk"]).reshape(B, 1, dims.local_kv, hd)
+        v_loc = layers.col_parallel(x, params["wv"]).reshape(B, 1, dims.local_kv, hd)
+        k_new = collectives.all_gather(k_loc, rt.tp_comm(), rt.comm, axis=2)
+        v_new = collectives.all_gather(v_loc, rt.tp_comm(), rt.comm, axis=2)
+    else:
+        k_new = jnp.dot(x, params["wk"], preferred_element_type=jnp.float32
+                        ).astype(x.dtype).reshape(B, 1, dims.n_kv, hd)
+        v_new = jnp.dot(x, params["wv"], preferred_element_type=jnp.float32
+                        ).astype(x.dtype).reshape(B, 1, dims.n_kv, hd)
+
+    pos = cache.length[None] if q_pos is None else jnp.asarray(q_pos)[None]
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k_new = layers.rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, jnp.broadcast_to(pos[None], (B, 1)), cfg.rope_theta)
+    if append:
+        k_new = layers.apply_rope(
+            k_new, jnp.broadcast_to(cache.length[None][None], (B, 1)),
+            cfg.rope_theta)
+        cache = append_to_cache(cache, k_new, v_new, rt)
+
+    # Local attention over this device's slice of the timeline.
+    tp = mesh.tp
+    sp = rt.sp_size
+    shard = rt.sp_comm().rank() if sp > 1 else 0
+    L = cache.seq_shard
+    k_pos = shard * L + jnp.arange(L)
+    valid = k_pos < cache.length
+    if window is not None:
+        valid &= k_pos > cache.length - 1 - window
+    bias = jnp.where(valid, 0.0, -jnp.inf).astype(jnp.float32)
+
+    KV = dims.n_kv
+    rep = dims.n_heads // KV
+    qg = q.reshape(B, KV, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bgrd,btgd->bgrt", qg, cache.k.astype(jnp.float32))
+    scores = scores / (hd ** 0.5) + bias[None, None, None, :]
+    if cfg.attn_logit_softcap:
+        scores = cfg.attn_logit_softcap * jnp.tanh(scores / cfg.attn_logit_softcap)
+    m_loc = jnp.max(scores, axis=-1)                      # (B,KV,rep)
+    if sp > 1:
+        m = collectives.all_reduce(m_loc, rt.sp_comm(), rt.comm, op="max")
+    else:
+        m = m_loc
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(jnp.isfinite(scores), p, 0.0)
+    s_loc = jnp.sum(p, axis=-1)                           # (B,KV,rep)
+    o_loc = jnp.einsum("bgrt,btgd->bgrd", p, cache.v.astype(jnp.float32))
+    if sp > 1:
+        s = collectives.all_reduce(s_loc, rt.sp_comm(), rt.comm)
+        o = collectives.all_reduce(o_loc, rt.sp_comm(), rt.comm)
+    else:
+        s, o = s_loc, o_loc
+    out = o / jnp.maximum(s[..., None], 1e-30)
+    out = out.reshape(B, 1, dims.n_heads, hd)
+    if dims.n_heads != dims.n_real_heads:
+        out = out * (jnp.arange(dims.n_heads) < dims.n_real_heads
+                     )[None, None, :, None]
+    out = out.reshape(B, 1, dims.n_heads * hd).astype(x.dtype)
+
+    if dims.q_sharded:
+        # Row-parallel output projection: slice my heads from the combined out.
+        mshard = lax.axis_index(mesh.axis_model)
+        start = mshard * dims.local_heads * hd
+        out_loc = lax.dynamic_slice_in_dim(out, start, dims.local_heads * hd, axis=2)
+        y = layers.row_parallel(out_loc, params["wo"], rt)
+    else:
+        y = jnp.dot(out, params["wo"], preferred_element_type=jnp.float32
+                    ).astype(x.dtype)
+    return y, cache

@@ -1,0 +1,395 @@
+"""Serving path: prefill (build caches) + single-token decode, all families.
+
+Caches are pytrees with a leading layer axis so the per-layer loop is a
+``lax.scan`` with caches as scanned inputs/outputs — compile time stays O(1)
+in depth for 81-layer models.
+
+Memory layout: every KV/latent cache is **sequence-sharded over the model
+axis** (see attention.py) — a 512 K-token cache splits 16 ways; partial
+attention combines via two small ACCL-X all-reduces (LSE trick).  SSM decode
+state is (heads, state, head_dim), sharded over heads when divisible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention, layers, mla, moe, ssm
+from repro.models.common import ModelConfig, Runtime
+from repro.models.transformer import _shared_attn_fwd
+
+
+# ----------------------------------------------------------------------
+# Prefill block helpers (mirror transformer.py blocks, capturing caches)
+# ----------------------------------------------------------------------
+
+def _prefill_dense(p, x, positions, rt: Runtime, max_len: int, window=None):
+    cfg = rt.cfg
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, (k, v) = attention.attention(p["attn"], h, positions, rt, window=window,
+                                    return_kv=True)
+    x = x + a
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.mlp(p["mlp"], h, rt, cfg.mlp_type)
+    cache = attention.init_kv_cache(cfg, x.shape[0], max_len, rt.sp_size,
+                                    cfg.dtype)
+    cache = attention.prefill_into_cache(cache, k, v, rt)
+    return x, cache
+
+
+def _prefill_mla(p, x, positions, rt: Runtime, max_len: int):
+    cfg = rt.cfg
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, (ckv, k_rope) = mla.mla_attention(p["attn"], h, positions, rt,
+                                         return_latents=True)
+    x = x + a
+    cache = mla.init_mla_cache(cfg, x.shape[0], max_len, rt.sp_size, cfg.dtype)
+    cache = mla.mla_prefill_cache(cache, ckv, k_rope, rt)
+    return x, cache
+
+
+def _decode_dense(p, x, cache, rt: Runtime, window=None):
+    cfg = rt.cfg
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, cache = attention.decode_attention(p["attn"], h, cache, rt, window=window)
+    x = x + a
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.mlp(p["mlp"], h, rt, cfg.mlp_type)
+    return x, cache
+
+
+# ----------------------------------------------------------------------
+# Prefill
+# ----------------------------------------------------------------------
+
+class ServeState(NamedTuple):
+    caches: Any            # family-specific pytree (leading layer axes)
+    last_logits: jnp.ndarray   # (B, V/tp) vocab-sharded
+    length: jnp.ndarray
+
+
+def prefill(params, batch: dict, rt: Runtime, max_len: int) -> ServeState:
+    cfg = rt.cfg
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = layers.embed(params["embed"], tokens, rt)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = jnp.dot(batch["patches"].astype(x.dtype), params["frontend"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        positions = jnp.arange(x.shape[1])[None, :].repeat(B, 0)
+
+    caches: Any
+    if cfg.family in ("dense", "vlm"):
+        if cfg.local_global_ratio:
+            x, caches = _prefill_local_global(params, x, positions, rt, max_len)
+        else:
+            def body(h, p):
+                return _prefill_dense(p, h, positions, rt, max_len,
+                                      cfg.sliding_window)
+            x, caches = lax.scan(body, x, params["layers"])
+    elif cfg.family == "moe":
+        dense_caches = None
+        if "dense_layers" in params:
+            def dbody(h, p):
+                if cfg.use_mla:
+                    h2, c = _prefill_mla(p, h, positions, rt, max_len)
+                else:
+                    h2, c = _prefill_dense_self(p, h, positions, rt, max_len)
+                hh = layers.rms_norm(h2, p["ln2"], cfg.norm_eps)
+                return h2 + layers.mlp(p["mlp"], hh, rt, cfg.mlp_type), c
+            x, dense_caches = lax.scan(dbody, x, params["dense_layers"])
+
+        def mbody(h, p):
+            if cfg.use_mla:
+                h2, c = _prefill_mla(p, h, positions, rt, max_len)
+            else:
+                cfg_w = cfg.sliding_window
+                hh = layers.rms_norm(h, p["ln1"], cfg.norm_eps)
+                a, (k, v) = attention.attention(p["attn"], hh, positions, rt,
+                                                window=cfg_w, return_kv=True)
+                h2 = h + a
+                c = attention.init_kv_cache(cfg, h.shape[0], max_len,
+                                            rt.sp_size, cfg.dtype)
+                c = attention.prefill_into_cache(c, k, v, rt)
+            hh = layers.rms_norm(h2, p["ln2"], cfg.norm_eps)
+            y, _aux = moe.moe_block(p["moe"], hh, rt)
+            return h2 + y, c
+        x, moe_caches = lax.scan(mbody, x, params["layers"])
+        caches = {"moe": moe_caches, "dense": dense_caches}
+    elif cfg.family == "ssm":
+        def sbody(h, p):
+            hh = layers.rms_norm(h, p["ln"], cfg.norm_eps)
+            y, (conv, hstate) = ssm.ssm_forward(p["ssm"], hh, rt,
+                                                return_state=True)
+            # ssd state layout (b,h,n,p) -> SSMState layout (b,h,n,p)
+            return h + y, ssm.SSMState(conv=conv, h=hstate)
+        x, caches = lax.scan(sbody, x, params["layers"])
+    elif cfg.family == "hybrid":
+        x_embed = x
+
+        def gbody(h, p):
+            states = []
+            for j in range(cfg.hybrid_attn_every):
+                pj = jax.tree.map(lambda a: a[j], p["ssm"])
+                hh = layers.rms_norm(h, pj["ln"], cfg.norm_eps)
+                y, (conv, hstate) = ssm.ssm_forward(pj["ssm"], hh, rt,
+                                                    return_state=True)
+                h = h + y
+                states.append(ssm.SSMState(conv=conv, h=hstate))
+            # shared attention block with its own per-group cache
+            sp = params["shared_attn"]
+            hcat = jnp.concatenate([h, x_embed], axis=-1)
+            hin = jnp.dot(hcat, sp["proj_in"],
+                          preferred_element_type=jnp.float32).astype(h.dtype)
+            hn = layers.rms_norm(hin, sp["block"]["ln1"], cfg.norm_eps)
+            a, (k, v) = attention.attention(sp["block"]["attn"], hn, positions,
+                                            rt, return_kv=True)
+            hin = hin + a
+            hn = layers.rms_norm(hin, sp["block"]["ln2"], cfg.norm_eps)
+            hin = hin + layers.mlp(sp["block"]["mlp"], hn, rt, cfg.mlp_type)
+            h = h + hin
+            c = attention.init_kv_cache(cfg, h.shape[0], max_len, rt.sp_size,
+                                        cfg.dtype)
+            c = attention.prefill_into_cache(c, k, v, rt)
+            return h, {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *states),
+                       "attn": c}
+        x, gcaches = lax.scan(gbody, x, params["groups"])
+        tcaches = None
+        if "trailing" in params:
+            def tbody(h, p):
+                hh = layers.rms_norm(h, p["ln"], cfg.norm_eps)
+                y, (conv, hstate) = ssm.ssm_forward(p["ssm"], hh, rt,
+                                                    return_state=True)
+                return h + y, ssm.SSMState(conv=conv, h=hstate)
+            x, tcaches = lax.scan(tbody, x, params["trailing"])
+        caches = {"groups": gcaches, "trailing": tcaches}
+    elif cfg.family == "audio":
+        enc = jnp.dot(batch["frames"].astype(x.dtype), params["frontend"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+        T = enc.shape[1]
+        enc_pos = jnp.arange(T)[None, :].repeat(B, 0)
+
+        def ebody(h, p):
+            from repro.models.transformer import _dense_block
+            return _dense_block(p, h, enc_pos, rt, causal=False), None
+        enc, _ = lax.scan(ebody, enc, params["encoder"])
+        enc = layers.rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+        def xbody(h, p):
+            h, self_c = _prefill_dense_self(p, h, positions, rt, max_len)
+            # cross-attention + cache of encoder K/V (seq-sharded, frozen)
+            hd = attention.attn_dims(cfg, rt.mesh.tp).head_dim
+            k = layers.col_parallel(enc, p["xattn"]["wk"]).reshape(B, T, -1, hd)
+            v = layers.col_parallel(enc, p["xattn"]["wv"]).reshape(B, T, -1, hd)
+            hn = layers.rms_norm(h, p["ln_x"], cfg.norm_eps)
+            a = attention.attention(p["xattn"], hn, positions, rt, causal=False,
+                                    kv_override=(k, v, enc_pos))
+            h = h + a
+            dims = attention.attn_dims(cfg, rt.mesh.tp)
+            if dims.kv_sharded:
+                from repro.core import collectives
+                k = collectives.all_gather(k, rt.tp_comm(), rt.comm, axis=2)
+                v = collectives.all_gather(v, rt.tp_comm(), rt.comm, axis=2)
+            xc = attention.init_kv_cache(cfg, B, T, rt.sp_size, cfg.dtype)
+            xc = attention.prefill_into_cache(xc, k, v, rt)
+            hn = layers.rms_norm(h, p["ln2"], cfg.norm_eps)
+            h = h + layers.mlp(p["mlp"], hn, rt, cfg.mlp_type)
+            return h, {"self": self_c, "cross": xc}
+        x, caches = lax.scan(xbody, x, params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = layers.logits_shard(params["embed"], x[:, -1], rt)
+    return ServeState(caches=caches, last_logits=last,
+                      length=jnp.asarray(tokens.shape[1], jnp.int32))
+
+
+def _prefill_dense_self(p, x, positions, rt: Runtime, max_len: int):
+    cfg = rt.cfg
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, (k, v) = attention.attention(p["attn"], h, positions, rt, return_kv=True)
+    x = x + a
+    cache = attention.init_kv_cache(cfg, x.shape[0], max_len, rt.sp_size,
+                                    cfg.dtype)
+    cache = attention.prefill_into_cache(cache, k, v, rt)
+    return x, cache
+
+
+def _prefill_local_global(params, x, positions, rt: Runtime, max_len: int):
+    cfg = rt.cfg
+    r = cfg.local_global_ratio
+
+    def body(h, p):
+        local_caches = []
+        for j in range(r):
+            pj = jax.tree.map(lambda a: a[j], p["local"])
+            h, c = _prefill_dense(pj, h, positions, rt, max_len,
+                                  cfg.sliding_window)
+            local_caches.append(c)
+        h, gc = _prefill_dense(p["global"], h, positions, rt, max_len, None)
+        return h, {"local": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                         *local_caches), "global": gc}
+    x, caches = lax.scan(body, x, params["blocks"])
+    tcaches = None
+    if "trailing" in params:
+        def tb(h, p):
+            return _prefill_dense(p, h, positions, rt, max_len,
+                                  cfg.sliding_window)
+        x, tcaches = lax.scan(tb, x, params["trailing"])
+    return x, {"blocks": caches, "trailing": tcaches}
+
+
+# ----------------------------------------------------------------------
+# Decode step
+# ----------------------------------------------------------------------
+
+def decode_step(params, token: jnp.ndarray, state: ServeState, rt: Runtime
+                ) -> ServeState:
+    """token: (B,) int32 — append one token, return updated state."""
+    cfg = rt.cfg
+    B = token.shape[0]
+    x = layers.embed(params["embed"], token[:, None], rt)
+    caches = state.caches
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.local_global_ratio:
+            x, caches = _decode_local_global(params, x, caches, rt)
+        else:
+            def body(h, pc):
+                p, c = pc
+                return _decode_dense(p, h, c, rt, cfg.sliding_window)
+            x, new = lax.scan(body, x, (params["layers"], caches))
+            caches = new
+    elif cfg.family == "moe":
+        new_dense = None
+        if "dense_layers" in params:
+            def dbody(h, pc):
+                p, c = pc
+                if cfg.use_mla:
+                    hh = layers.rms_norm(h, p["ln1"], cfg.norm_eps)
+                    a, c = mla.mla_decode(p["attn"], hh, c, rt)
+                    h = h + a
+                else:
+                    h, c = _decode_dense(p, h, c, rt)
+                    return h, c
+                hh = layers.rms_norm(h, p["ln2"], cfg.norm_eps)
+                return h + layers.mlp(p["mlp"], hh, rt, cfg.mlp_type), c
+            x, new_dense = lax.scan(dbody, x, (params["dense_layers"],
+                                               caches["dense"]))
+
+        def mbody(h, pc):
+            p, c = pc
+            if cfg.use_mla:
+                hh = layers.rms_norm(h, p["ln1"], cfg.norm_eps)
+                a, c = mla.mla_decode(p["attn"], hh, c, rt)
+                h = h + a
+            else:
+                hh = layers.rms_norm(h, p["ln1"], cfg.norm_eps)
+                a, c = attention.decode_attention(p["attn"], hh, c, rt,
+                                                  window=cfg.sliding_window)
+                h = h + a
+            hh = layers.rms_norm(h, p["ln2"], cfg.norm_eps)
+            y, _aux = moe.moe_block(p["moe"], hh, rt)
+            return h + y, c
+        x, new_moe = lax.scan(mbody, x, (params["layers"], caches["moe"]))
+        caches = {"moe": new_moe, "dense": new_dense}
+    elif cfg.family == "ssm":
+        def sbody(h, pc):
+            p, c = pc
+            hh = layers.rms_norm(h, p["ln"], cfg.norm_eps)
+            y, c = ssm.ssm_decode(p["ssm"], hh, c, rt)
+            return h + y, c
+        x, caches = lax.scan(sbody, x, (params["layers"], caches))
+    elif cfg.family == "hybrid":
+        x_embed = x
+
+        def gbody(h, pc):
+            p, c = pc
+            new_states = []
+            for j in range(cfg.hybrid_attn_every):
+                pj = jax.tree.map(lambda a: a[j], p["ssm"])
+                cj = jax.tree.map(lambda a: a[j], c["ssm"])
+                hh = layers.rms_norm(h, pj["ln"], cfg.norm_eps)
+                y, cj = ssm.ssm_decode(pj["ssm"], hh, cj, rt)
+                h = h + y
+                new_states.append(cj)
+            sp = params["shared_attn"]
+            hcat = jnp.concatenate([h, x_embed], axis=-1)
+            hin = jnp.dot(hcat, sp["proj_in"],
+                          preferred_element_type=jnp.float32).astype(h.dtype)
+            hn = layers.rms_norm(hin, sp["block"]["ln1"], cfg.norm_eps)
+            a, ac = attention.decode_attention(sp["block"]["attn"], hn,
+                                               c["attn"], rt)
+            hin = hin + a
+            hn = layers.rms_norm(hin, sp["block"]["ln2"], cfg.norm_eps)
+            hin = hin + layers.mlp(sp["block"]["mlp"], hn, rt, cfg.mlp_type)
+            h = h + hin
+            return h, {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *new_states), "attn": ac}
+        x, gnew = lax.scan(gbody, x, (params["groups"], caches["groups"]))
+        tnew = caches["trailing"]
+        if "trailing" in params:
+            def tbody(h, pc):
+                p, c = pc
+                hh = layers.rms_norm(h, p["ln"], cfg.norm_eps)
+                y, c = ssm.ssm_decode(p["ssm"], hh, c, rt)
+                return h + y, c
+            x, tnew = lax.scan(tbody, x, (params["trailing"],
+                                          caches["trailing"]))
+        caches = {"groups": gnew, "trailing": tnew}
+    elif cfg.family == "audio":
+        def xbody(h, pc):
+            p, c = pc
+            hh = layers.rms_norm(h, p["ln1"], cfg.norm_eps)
+            a, sc = attention.decode_attention(p["attn"], hh, c["self"], rt)
+            h = h + a
+            hh = layers.rms_norm(h, p["ln_x"], cfg.norm_eps)
+            a, _ = attention.decode_attention(p["xattn"], hh, c["cross"], rt,
+                                              append=False,
+                                              q_pos=c["self"].length)
+            h = h + a
+            hh = layers.rms_norm(h, p["ln2"], cfg.norm_eps)
+            h = h + layers.mlp(p["mlp"], hh, rt, cfg.mlp_type)
+            return h, {"self": sc, "cross": c["cross"]}
+        x, caches = lax.scan(xbody, x, (params["layers"], caches))
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.logits_shard(params["embed"], x[:, -1], rt)
+    return ServeState(caches=caches, last_logits=logits,
+                      length=state.length + 1)
+
+
+def _decode_local_global(params, x, caches, rt: Runtime):
+    cfg = rt.cfg
+    r = cfg.local_global_ratio
+
+    def body(h, pc):
+        p, c = pc
+        new_local = []
+        for j in range(r):
+            pj = jax.tree.map(lambda a: a[j], p["local"])
+            cj = jax.tree.map(lambda a: a[j], c["local"])
+            h, cj = _decode_dense(pj, h, cj, rt, cfg.sliding_window)
+            new_local.append(cj)
+        h, gc = _decode_dense(p["global"], h, c["global"], rt, None)
+        return h, {"local": jax.tree.map(lambda *xs: jnp.stack(xs), *new_local),
+                   "global": gc}
+    x, new_blocks = lax.scan(body, x, (params["blocks"], caches["blocks"]))
+    new_trailing = caches["trailing"]
+    if "trailing" in params:
+        def tb(h, pc):
+            p, c = pc
+            return _decode_dense(p, h, c, rt, cfg.sliding_window)
+        x, new_trailing = lax.scan(tb, x, (params["trailing"],
+                                           caches["trailing"]))
+    return x, {"blocks": new_blocks, "trailing": new_trailing}

@@ -1,0 +1,211 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Prefill computes standard multi-head attention from the decompressed latents;
+decode caches only the compressed latent (kv_lora_rank + rope_dim per token)
+and uses the absorbed-matmul trick:
+
+    score_h(t) = (q_nope_h @ W_uk_h) · c_kv(t) + q_rope_h · k_rope(t)
+    out_h      = W_uv_h @ (Σ_t p_h(t) · c_kv(t))
+
+The latent cache is sequence-sharded over the ``model`` axis like the GQA
+cache (SP decode + LSE combine through ACCL-X).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives
+from repro.models import layers
+from repro.models.common import ModelConfig, Runtime
+
+
+def local_heads(cfg: ModelConfig, tp: int) -> int:
+    assert cfg.n_heads % tp == 0, "MLA requires n_heads % tp == 0"
+    return cfg.n_heads // tp
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": layers.dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "w_uq": layers.dense_init(ks[1], cfg.q_lora_rank, H * qk, dtype),
+        "w_dkv": layers.dense_init(ks[2], d, cfg.kv_lora_rank, dtype),
+        "w_kr": layers.dense_init(ks[3], d, cfg.qk_rope_dim, dtype),
+        "w_uk": layers.dense_init(ks[4], cfg.kv_lora_rank,
+                                  H * cfg.qk_nope_dim, dtype),
+        "w_uv": layers.dense_init(ks[5], cfg.kv_lora_rank,
+                                  H * cfg.v_head_dim, dtype),
+        "wo": layers.dense_init(ks[6], H * cfg.v_head_dim, d, dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+    }
+
+
+def _project(params, x, positions, cfg: ModelConfig, hl: int):
+    """Shared q/kv projection. Returns per-device q (B,S,hl,qk), k, v."""
+    B, S, _ = x.shape
+    nope, ropd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = layers.rms_norm(jnp.dot(x, params["w_dq"],
+                                 preferred_element_type=jnp.float32
+                                 ).astype(x.dtype),
+                         params["q_norm"], cfg.norm_eps)
+    q = layers.col_parallel(cq, params["w_uq"]).reshape(B, S, hl, nope + ropd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = layers.rms_norm(jnp.dot(x, params["w_dkv"],
+                                  preferred_element_type=jnp.float32
+                                  ).astype(x.dtype),
+                          params["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.dot(x, params["w_kr"], preferred_element_type=jnp.float32
+                     ).astype(x.dtype)                       # (B,S,ropd) shared
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions,
+                               cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_attention(params, x: jnp.ndarray, positions: jnp.ndarray,
+                  rt: Runtime, return_latents: bool = False):
+    """Training/prefill MLA. Heads sharded over tp; one row-parallel combine.
+
+    ``return_latents`` additionally returns (ckv, k_rope) for the latent
+    decode cache."""
+    cfg = rt.cfg
+    tp = rt.mesh.tp
+    hl = local_heads(cfg, tp)
+    B, S, _ = x.shape
+    nope, ropd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    x = layers.tp_grad_sum(x, rt, tp > 1)
+    q_nope, q_rope, ckv, k_rope = _project(params, x, positions, cfg, hl)
+    k_nope = layers.col_parallel(ckv, params["w_uk"]).reshape(B, S, hl, nope)
+    v = layers.col_parallel(ckv, params["w_uv"]).reshape(B, S, hl, vd)
+
+    # Fold the shared rope head into per-head keys so the tiled flash path
+    # (attention._sdpa) handles MLA identically to standard attention:
+    # score = [q_nope|q_rope] · [k_nope|k_rope]  with scale 1/sqrt(nope+ropd).
+    from repro.models.attention import _sdpa
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, hl, ropd))],
+        axis=-1)
+    out = _sdpa(q_cat, k_cat, v, None, None, rt, True, None)
+    out = out.reshape(B, S, hl * vd).astype(x.dtype)
+    y = layers.row_parallel(out, params["wo"], rt)
+    if return_latents:
+        return y, (ckv, k_rope)
+    return y
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray      # (B, L_shard, kv_lora_rank)
+    k_rope: jnp.ndarray   # (B, L_shard, rope_dim)
+    length: jnp.ndarray
+
+    @property
+    def seq_shard(self) -> int:
+        return self.ckv.shape[1]
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, n_shards: int,
+                   dtype) -> MLACache:
+    L = max(1, -(-max_len // n_shards))
+    return MLACache(
+        ckv=jnp.zeros((batch, L, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, L, cfg.qk_rope_dim), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mla_prefill_cache(cache: MLACache, ckv: jnp.ndarray, k_rope: jnp.ndarray,
+                      rt: Runtime) -> MLACache:
+    shard = rt.sp_comm().rank() if rt.sp_size > 1 else 0
+    L, S = cache.seq_shard, ckv.shape[1]
+    pad = rt.sp_size * L - S
+    if pad > 0:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    return MLACache(
+        ckv=lax.dynamic_slice_in_dim(ckv, shard * L, L, 1).astype(cache.ckv.dtype),
+        k_rope=lax.dynamic_slice_in_dim(k_rope, shard * L, L, 1
+                                        ).astype(cache.k_rope.dtype),
+        length=jnp.asarray(S, jnp.int32))
+
+
+def mla_decode(params, x: jnp.ndarray, cache: MLACache, rt: Runtime
+               ) -> tuple[jnp.ndarray, MLACache]:
+    """One decode step with the absorbed latent cache. x: (B,1,D)."""
+    cfg = rt.cfg
+    tp = rt.mesh.tp
+    hl = local_heads(cfg, tp)
+    B = x.shape[0]
+    nope, ropd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    pos = jnp.broadcast_to(cache.length[None][None], (B, 1))
+    q_nope, q_rope, ckv_new, kr_new = _project(params, x, pos, cfg, hl)
+
+    # Append the new latent to the sharded cache.
+    sp = rt.sp_size
+    shard = rt.sp_comm().rank() if sp > 1 else 0
+    L = cache.seq_shard
+    owner, off = cache.length // L, cache.length % L
+    ckv_upd = lax.dynamic_update_slice_in_dim(
+        cache.ckv, ckv_new.astype(cache.ckv.dtype), off, axis=1)
+    kr_upd = lax.dynamic_update_slice_in_dim(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), off, axis=1)
+    mine = owner == shard
+    cache = MLACache(k_rope=jnp.where(mine, kr_upd, cache.k_rope),
+                     ckv=jnp.where(mine, ckv_upd, cache.ckv),
+                     length=cache.length + 1)
+
+    # Absorb W_uk into q: q_abs (B,hl,r); every device needs all heads.
+    w_uk = params["w_uk"].reshape(r, hl, nope)
+    q_abs_loc = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                           w_uk.transpose(0, 1, 2).astype(jnp.float32)
+                           )[:, 0]  # (B,hl,r)
+    qr_loc = q_rope[:, 0]  # (B,hl,ropd)
+    if tp > 1:
+        q_abs = collectives.all_gather(q_abs_loc, rt.tp_comm(), rt.comm, axis=1)
+        qr = collectives.all_gather(qr_loc.astype(jnp.float32), rt.tp_comm(),
+                                    rt.comm, axis=1)
+    else:
+        q_abs, qr = q_abs_loc, qr_loc.astype(jnp.float32)
+    H = q_abs.shape[1]
+
+    scale = 1.0 / ((nope + ropd) ** 0.5)
+    k_pos = shard * L + jnp.arange(L)
+    valid = k_pos < cache.length
+    bias = jnp.where(valid, 0.0, -jnp.inf).astype(jnp.float32)
+
+    s = (jnp.einsum("bhr,btr->bht", q_abs, cache.ckv.astype(jnp.float32))
+         + jnp.einsum("bhd,btd->bht", qr, cache.k_rope.astype(jnp.float32))
+         ) * scale + bias[None, None]
+    m_loc = jnp.max(s, axis=-1)
+    m = (collectives.all_reduce(m_loc, rt.sp_comm(), rt.comm, op="max")
+         if sp > 1 else m_loc)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - m[..., None]), 0.0)
+    s_loc = jnp.sum(p, axis=-1)
+    lat_loc = jnp.einsum("bht,btr->bhr", p, cache.ckv.astype(jnp.float32))
+    if sp > 1:
+        denom = collectives.all_reduce(s_loc, rt.sp_comm(), rt.comm)
+        lat = collectives.all_reduce(lat_loc, rt.sp_comm(), rt.comm)
+    else:
+        denom, lat = s_loc, lat_loc
+    lat = lat / jnp.maximum(denom[..., None], 1e-30)      # (B,H,r)
+
+    # Decompress with my local W_uv heads and combine row-parallel.
+    mshard = lax.axis_index(rt.mesh.axis_model) if tp > 1 else 0
+    start = (mshard * hl) if tp > 1 else 0
+    lat_loc = lax.dynamic_slice_in_dim(lat, start, hl, axis=1)
+    w_uv = params["w_uv"].reshape(r, hl, vd)
+    o = jnp.einsum("bhr,rhv->bhv", lat_loc, w_uv.astype(jnp.float32))
+    o = o.reshape(B, 1, hl * vd).astype(x.dtype)
+    y = layers.row_parallel(o, params["wo"], rt)
+    return y, cache

@@ -1,0 +1,225 @@
+"""Mixture-of-Experts with expert parallelism over the ``model`` axis.
+
+Expert placement is a flattened (expert × ff-shard) layout so one scheme
+covers both assigned MoE architectures on tp=16:
+
+- deepseek-v3: 256 experts → 16 whole experts per device (EP16, tp_inner=1).
+- mixtral-8x22b: 8 experts → each expert split into 2 ff-shards across
+  device pairs (EP8 × TP2, tp_inner=2).
+
+Activations are replicated across the model axis between blocks, so dispatch
+is a *local* capacity-bounded gather (no all-to-all needed for EP-over-TP) and
+the combine is a single ACCL-X all-reduce that simultaneously sums expert
+contributions and intra-expert ff-shards.  An alternative all-to-all dispatch
+(EP over the data axis — tokens travel) is provided for the collective-bound
+experiments; it is the MoE pattern whose latency the paper's streaming levers
+target.
+
+Capacity semantics follow Switch/GShard: per expert at most
+C = capacity_factor · T · top_k / n_experts tokens; overflow tokens drop that
+expert's contribution (their other experts still fire).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives
+from repro.models import layers
+from repro.models.common import ModelConfig, Runtime
+
+
+def moe_layout(cfg: ModelConfig, tp: int):
+    """(experts_per_device, tp_inner). Requires n_experts % tp == 0 or
+    tp % n_experts == 0."""
+    E = cfg.n_experts
+    if E % tp == 0:
+        return E // tp, 1
+    if tp % E == 0:
+        return 1, tp // E
+    raise ValueError(f"n_experts={E} incompatible with tp={tp}")
+
+
+def init_moe(key, cfg: ModelConfig, dtype, tp: int):
+    """Global arrays shaped (tp, E_loc, d, ff_slice) — shard dim 0 by model."""
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e_loc, tp_inner = moe_layout(cfg, tp)
+    ffs = ff // tp_inner
+    ks = jax.random.split(key, 6)
+    scale_in = (1.0 / d) ** 0.5
+    scale_out = (1.0 / ff) ** 0.5
+
+    def draw(k, a, b, scale):
+        # Canonical (E, a, b) draw, rearranged to the flattened (tp, e_loc,
+        # a, b_slice) layout — values are independent of tp.
+        full = jax.random.normal(k, (cfg.n_experts, a, b), jnp.float32) * scale
+        full = full.reshape(cfg.n_experts, a, tp_inner, b // tp_inner)
+        full = jnp.moveaxis(full, 2, 1)           # (E, tp_inner, a, b_slice)
+        full = full.reshape(tp, e_loc, a, b // tp_inner)
+        return full.astype(dtype)
+
+    def draw_t(k, a, b, scale):
+        # Same for (…, a_slice, b) row-sharded layout (w_down).
+        full = jax.random.normal(k, (cfg.n_experts, a, b), jnp.float32) * scale
+        full = full.reshape(cfg.n_experts, tp_inner, a // tp_inner, b)
+        return full.reshape(tp, e_loc, a // tp_inner, b).astype(dtype)
+
+    p = {
+        "router": layers.dense_init(ks[0], d, cfg.n_experts, jnp.float32),
+        "w_gate": draw(ks[1], d, ff, scale_in),
+        "w_up": draw(ks[2], d, ff, scale_in),
+        "w_down": draw_t(ks[3], ff, d, scale_out),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_mlp(ks[4], d, ff * cfg.n_shared_experts,
+                                      cfg.mlp_type, dtype)
+    return p
+
+
+def _expert_mlp(xg, wg, wu, wd, mlp_type):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.dot(xg, wg, preferred_element_type=jnp.float32))
+        h = h * jnp.dot(xg, wu, preferred_element_type=jnp.float32)
+    else:
+        h = jax.nn.gelu(jnp.dot(xg, wu, preferred_element_type=jnp.float32))
+    return jnp.dot(h.astype(xg.dtype), wd, preferred_element_type=jnp.float32)
+
+
+def moe_block(params, x: jnp.ndarray, rt: Runtime) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) replicated across model axis. Returns (out, aux_loss)."""
+    cfg = rt.cfg
+    tp = rt.mesh.tp
+    e_loc, tp_inner = moe_layout(cfg, tp)
+    B, S, D = x.shape
+    x_pre_f = x
+    x = layers.tp_grad_sum(x, rt, tp > 1)
+    T = B * S
+    xt = x.reshape(T, D)
+
+    # --- Routing (replicated; fp32) -----------------------------------
+    logits = jnp.dot(xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_p, top_e = lax.top_k(probs, cfg.n_experts_per_tok)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Load-balance auxiliary loss (Switch): E · Σ_e f_e · P_e
+    dispatch_mask = jax.nn.one_hot(top_e, cfg.n_experts, dtype=jnp.float32)
+    f_e = jnp.mean(jnp.sum(dispatch_mask, axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    # Full VALUE on every rank (loss parity across tp); 1/tp on the GRADIENT
+    # because this path is computed identically on all ranks while grads are
+    # summed over the model axis at sync time.
+    aux = cfg.n_experts * jnp.sum(f_e * p_e)
+    if tp > 1:
+        aux = layers.scale_grad(aux, 1.0 / tp)
+
+    # Per-token gate weight for every expert (0 if not selected).
+    gates = jnp.sum(dispatch_mask * top_p[..., None], axis=1)    # (T, E)
+
+    # --- Local experts -------------------------------------------------
+    cap = int(cfg.capacity_factor * T * cfg.n_experts_per_tok / cfg.n_experts)
+    cap = min(T, max(8, cap))   # never more than the tokens we have (decode)
+    shard = lax.axis_index(rt.mesh.axis_model) if tp > 1 else 0
+    # Device `shard` owns slice index `shard`: experts
+    # [shard // tp_inner * e_loc ... ] — with the flattened layout, local
+    # expert j has global id (shard // tp_inner) * e_loc + j.
+    first_expert = (shard // tp_inner) * e_loc
+
+    wg = params["w_gate"][0] if tp == 1 else params["w_gate"].reshape(
+        e_loc, D, -1)
+    wu = params["w_up"][0] if tp == 1 else params["w_up"].reshape(e_loc, D, -1)
+    wd = params["w_down"][0] if tp == 1 else params["w_down"].reshape(
+        e_loc, -1, D)
+
+    out = jnp.zeros((T, D), jnp.float32)
+    for j in range(e_loc):
+        e_id = first_expert + j
+        g_e = jnp.take_along_axis(
+            gates, jnp.broadcast_to(e_id, (T,))[:, None], axis=1)[:, 0] \
+            if tp > 1 else gates[:, j]
+        # Capacity-bounded gather of this expert's tokens.
+        sel_g, sel_idx = lax.top_k(g_e, cap)
+        keep = sel_g > 0
+        xg = jnp.take(xt, sel_idx, axis=0)
+        y = _expert_mlp(xg, wg[j], wu[j], wd[j], cfg.mlp_type)
+        y = y * (sel_g * keep)[:, None]
+        out = out.at[sel_idx].add(jnp.where(keep[:, None], y, 0.0))
+
+    if tp > 1:
+        out = collectives.all_reduce(out, rt.tp_comm(), rt.comm)
+        # tp_inner shards of one expert both gathered the same tokens and the
+        # all-reduce sums their ff-halves — EP-combine and TP-combine in one op.
+
+    y = out.astype(x.dtype).reshape(B, S, D)
+    if cfg.n_shared_experts:
+        # NOTE: pass the PRE-f input — layers.mlp applies its own f operator;
+        # stacking two would double-psum the shared-expert cotangent.
+        ff_sh = (cfg.moe_d_ff or cfg.d_ff) * cfg.n_shared_experts
+        y = y + layers.mlp(params["shared"], x_pre_f, rt, cfg.mlp_type,
+                           sharded=ff_sh % tp == 0 and tp > 1)
+    return y, aux.astype(jnp.float32)
+
+
+def moe_block_a2a(params, x_shard: jnp.ndarray, rt: Runtime
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """All-to-all dispatch variant (EP over the *data* axis; tokens travel).
+
+    x_shard: (T_loc, D) — this data-rank's tokens.  Tokens are bucketed per
+    destination expert-owner, exchanged with ``all_to_all``, processed by the
+    local experts, and returned.  This surfaces the MoE a2a in the HLO for the
+    collective roofline; used by the perf experiments.
+    """
+    cfg = rt.cfg
+    dp = rt.mesh.dp
+    comm = rt.dp_comm()
+    assert cfg.n_experts % dp == 0, "a2a variant needs n_experts % dp == 0"
+    e_loc = cfg.n_experts // dp
+    T, D = x_shard.shape
+
+    logits = jnp.dot(x_shard.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, cfg.n_experts_per_tok)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    dispatch_mask = jax.nn.one_hot(top_e, cfg.n_experts, dtype=jnp.float32)
+    f_e = jnp.mean(jnp.sum(dispatch_mask, axis=1), axis=0)
+    aux = cfg.n_experts * jnp.sum(f_e * jnp.mean(probs, axis=0))
+    gates = jnp.sum(dispatch_mask * top_p[..., None], axis=1)
+
+    cap = max(8, int(cfg.capacity_factor * T * cfg.n_experts_per_tok
+                     / cfg.n_experts))
+    # Bucket per destination rank: (dp, e_loc·cap, D)
+    send = jnp.zeros((dp, e_loc * cap, D), x_shard.dtype)
+    send_gate = jnp.zeros((dp, e_loc * cap), jnp.float32)
+    send_idx = jnp.zeros((dp, e_loc * cap), jnp.int32)
+    for e in range(cfg.n_experts):
+        owner, slot = e // e_loc, e % e_loc
+        g_e = gates[:, e]
+        sel_g, sel_i = lax.top_k(g_e, cap)
+        xg = jnp.take(x_shard, sel_i, axis=0)
+        send = lax.dynamic_update_slice(send, xg[None], (owner, slot * cap, 0))
+        send_gate = lax.dynamic_update_slice(send_gate, sel_g[None],
+                                             (owner, slot * cap))
+        send_idx = lax.dynamic_update_slice(send_idx, sel_i[None],
+                                            (owner, slot * cap))
+
+    recv = collectives.all_to_all(send, comm, rt.comm)          # (dp, e_loc·cap, D)
+    wg = params["w_gate"].reshape(-1, D, params["w_gate"].shape[-1])
+    wu = params["w_up"].reshape(-1, D, params["w_up"].shape[-1])
+    wd = params["w_down"].reshape(-1, params["w_down"].shape[-2], D)
+    ys = []
+    for j in range(e_loc):
+        xg = recv[:, j * cap:(j + 1) * cap].reshape(-1, D)
+        y = _expert_mlp(xg, wg[j], wu[j], wd[j], cfg.mlp_type)
+        ys.append(y.reshape(dp, cap, D))
+    y_out = jnp.concatenate(ys, axis=1)                         # (dp, e_loc·cap, D)
+    back = collectives.all_to_all(y_out.astype(x_shard.dtype), comm, rt.comm)
+
+    out = jnp.zeros((T, D), jnp.float32)
+    for r in range(dp):
+        for j in range(e_loc):
+            seg = back[r, j * cap:(j + 1) * cap].astype(jnp.float32)
+            g = lax.dynamic_slice(send_gate, (r, j * cap), (1, cap))[0]
+            i = lax.dynamic_slice(send_idx, (r, j * cap), (1, cap))[0]
+            out = out.at[i].add(seg * jnp.where(g > 0, g, 0.0)[:, None])
+    return out.astype(x_shard.dtype), aux

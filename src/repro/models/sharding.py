@@ -1,0 +1,234 @@
+"""Parameter sharding rules — single source of truth.
+
+``param_specs`` builds the PartitionSpec tree used to place parameters on the
+mesh (also the shard_map in_specs).  ``build_fsdp_plan`` precomputes, from the
+*full* stored shapes, which dimension of each layer-stack weight carries an
+extra ``data``-axis factor; ``apply_fsdp`` is the in-scan companion that
+all-gathers those dims back to full at use time (one layer materialized at a
+time — ZeRO-3 style, the per-layer all-gather XLA overlaps with the previous
+layer's compute).  All three share ``_base_spec`` so placement and gathering
+cannot disagree.
+
+TP rules (model axis):
+  embed.table        (V, D)         -> P('model', None)        vocab-sharded
+  attn wq            (D, Heff*hd)   -> P(None, 'model')        col-parallel
+  attn wk/wv         (D, KV*hd)     -> P(None, 'model') if kv_sharded else repl.
+  attn wo            (Heff*hd, D)   -> P('model', None)        row-parallel
+  mlp w_up/w_gate    (D, F)         -> P(None, 'model')
+  mlp w_down         (F, D)         -> P('model', None)
+  moe w_*            (tp, E, D, F)  -> P('model', …)           flattened EP
+  mla w_uq/w_uk/w_uv (r, H*dh)      -> P(None, 'model')
+  mla wo             (H*vd, D)      -> P('model', None)
+  ssm w_z/w_x/conv_x (D|W, DI)      -> P(None, 'model') if heads shardable
+  ssm w_out          (DI, D)        -> P('model', None) if heads shardable
+  norms/scales/bias                 -> replicated
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+from repro.core.communicator import Communicator
+from repro.models import attention, ssm
+from repro.models.common import ModelConfig, MeshContext, Runtime
+
+_STACK_KEYS = ("layers", "blocks", "groups", "trailing", "encoder",
+               "dense_layers")
+_MIN_FSDP_SHARD = 8   # don't data-shard below this many rows per device
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def _n_stack_dims(names: list[str]) -> int:
+    n = 0
+    if any(k in names for k in _STACK_KEYS):
+        n = 1
+        if "blocks" in names and "local" in names:
+            n = 2
+        if "groups" in names and "ssm" in names:
+            n = 2
+    return n
+
+
+def _base_spec(names: list[str], cfg: ModelConfig, tp: int):
+    """TP spec entries for the unstacked (body) dims, or None = replicated."""
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    dims = attention.attn_dims(cfg, tp)
+    _, ssm_sharded = ssm.ssm_dims(cfg, tp)
+    mlp_shardable = bool(cfg.d_ff) and cfg.d_ff % tp == 0 and tp > 1
+
+    if leaf == "table":
+        return ("model", None) if tp > 1 and cfg.vocab_size % tp == 0 \
+            else (None, None)
+    if leaf == "router":
+        return (None, None)
+    if parent == "moe" and leaf in ("w_gate", "w_up", "w_down"):
+        return ("model", None, None, None) if tp > 1 else (None,) * 4
+    if leaf == "wq":
+        return (None, "model") if dims.q_sharded else (None, None)
+    if leaf in ("wk", "wv"):
+        return (None, "model") if dims.kv_sharded else (None, None)
+    if leaf == "wo":
+        if cfg.use_mla:
+            return ("model", None) if tp > 1 else (None, None)
+        return ("model", None) if dims.q_sharded else (None, None)
+    if leaf in ("w_uq", "w_uk", "w_uv"):
+        return (None, "model") if tp > 1 else (None, None)
+    if leaf in ("w_dq", "w_dkv", "w_kr"):
+        return (None, None)
+    if leaf in ("w_up", "w_gate"):
+        return (None, "model") if mlp_shardable else (None, None)
+    if leaf == "w_down":
+        return ("model", None) if mlp_shardable else (None, None)
+    if leaf in ("w_z", "w_x", "conv_x"):
+        return (None, "model") if ssm_sharded else (None, None)
+    if leaf == "w_out":
+        return ("model", None) if ssm_sharded else (None, None)
+    if leaf in ("w_B", "w_C", "w_dt", "proj_in", "frontend"):
+        return (None, None)
+    return None  # norms, scales, A_log, D, dt_bias, …
+
+
+def _fsdp_dim(base, body_shape, tp: int, dp: int):
+    """First body dim that can take a 'data' factor; -1 if none."""
+    if len(body_shape) < 2 or dp <= 1:
+        return -1
+    entries = list(base) if base is not None else [None] * len(body_shape)
+    for j, dim in enumerate(body_shape):
+        local = dim // tp if entries[j] == "model" else dim
+        if entries[j] not in (None, "model"):
+            continue
+        if local % dp == 0 and local // dp >= _MIN_FSDP_SHARD:
+            return j
+    return -1
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: MeshContext,
+                fsdp: bool = False):
+    tp = mesh.model_size
+    dp = mesh.data_sizes[-1] if mesh.data_sizes else 1
+
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        n_stack = _n_stack_dims(names)
+        base = _base_spec(names, cfg, tp)
+        body = list(base) if base is not None else [None] * (leaf.ndim - n_stack)
+        if fsdp and n_stack > 0:
+            j = _fsdp_dim(base, leaf.shape[n_stack:], tp, dp)
+            if j >= 0:
+                body[j] = ("model", "data") if body[j] == "model" else "data"
+        return P(*((None,) * n_stack + tuple(body)))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def build_fsdp_plan(params: Any, cfg: ModelConfig, mesh: MeshContext):
+    """Pytree of int codes matching ``params``: -1 = no gather, else
+    gather_dim*100 + body_ndim.  gather_dim is in *body* coordinates (stack
+    dims stripped); apply_fsdp offsets by leftover leading dims at use."""
+    tp = mesh.model_size
+    dp = mesh.data_sizes[-1] if mesh.data_sizes else 1
+
+    def plan_of(path, leaf):
+        names = _path_names(path)
+        n_stack = _n_stack_dims(names)
+        if n_stack == 0:
+            return -1
+        base = _base_spec(names, cfg, tp)
+        body_shape = leaf.shape[n_stack:]
+        j = _fsdp_dim(base, body_shape, tp, dp)
+        return j * 100 + len(body_shape) if j >= 0 else -1
+
+    return jax.tree_util.tree_map_with_path(plan_of, params)
+
+
+def subplan(plan, key: str):
+    return None if plan is None else plan.get(key)
+
+
+def apply_fsdp(layer_params: Any, plan: Any, rt: Runtime):
+    """All-gather 'data'-factored weight dims inside a layer scan body."""
+    if plan is None or rt.mesh.data_sizes[-1] == 1:
+        return layer_params
+    data_axis = rt.mesh.data_axes[-1]
+    comm = Communicator((data_axis,), (rt.mesh.data_sizes[-1],))
+
+    def fix(leaf, code):
+        if code < 0:
+            return leaf
+        j, body_ndim = divmod(code, 100)
+        extra = leaf.ndim - body_ndim   # leftover stack dims at this site
+        return collectives.all_gather(leaf, comm, rt.comm, axis=j + extra,
+                                      tiled=True)
+
+    return jax.tree.map(fix, layer_params, plan)
+
+
+def grad_model_sum_mask(params: Any, cfg: ModelConfig, tp: int,
+                        seq_parallel: bool = False):
+    """1 where the gradient must be SUMMED over the model axis at sync time.
+
+    These are params stored replicated but *used* shardwise (each TP rank
+    back-propagates only the slice it consumed): replicated-KV weights under
+    head-sharded attention, MLA down-projections, sliced SSM scalars, and the
+    MoE router.  Everything else is either storage-sharded (grads local) or
+    replicated-identical (grads equal on every rank).
+    """
+    dims = attention.attn_dims(cfg, tp)
+    _, ssm_sharded = ssm.ssm_dims(cfg, tp)
+    # Under Megatron-SP the per-block layernorms run on seq SHARDS: their
+    # grads are token-partial and must be summed over the model axis.
+    sp_active = (seq_parallel and tp > 1 and dims.q_sharded
+                 and cfg.family in ("dense", "vlm")
+                 and not cfg.local_global_ratio)
+
+    def mask_of(path, leaf):
+        if tp == 1:
+            return 0
+        names = _path_names(path)
+        leaf_name = names[-1]
+        parent = names[-2] if len(names) >= 2 else ""
+        if sp_active and leaf_name in ("ln1", "ln2") and "layers" in names:
+            return 1
+        if cfg.use_mla and leaf_name in ("w_dq", "w_dkv", "w_kr", "q_norm",
+                                         "kv_norm"):
+            return 1
+        if not cfg.use_mla and leaf_name in ("q_norm", "k_norm")                 and dims.q_sharded:
+            return 1
+        if leaf_name in ("wk", "wv") and dims.q_sharded and not dims.kv_sharded:
+            return 1
+        if ssm_sharded and parent == "ssm" and leaf_name in (
+                "w_B", "w_C", "w_dt", "A_log", "D", "dt_bias", "norm"):
+            return 1
+        if leaf_name == "router":
+            return 1
+        return 0
+
+    return jax.tree_util.tree_map_with_path(mask_of, params)
+
+
+def model_sharded_mask(pspec_tree):
+    """1 where the param (hence its grad) is sharded over the model axis.
+
+    Used for the global grad-norm: model-sharded leaves hold disjoint grad
+    shards (sum their ||.||^2 over the model axis); replicated leaves hold
+    identical grads (count once).
+    """
+    def of(spec):
+        for e in spec:
+            if e == "model" or (isinstance(e, tuple) and "model" in e):
+                return 1
+        return 0
+    return jax.tree.map(of, pspec_tree)

@@ -1,0 +1,248 @@
+"""Mamba2 (SSD — state-space duality) layers.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the output is
+an attention-like masked matmul (MXU-friendly — the reason SSD maps well to
+TPU), across chunks a small recurrence carries the (heads, d_head, state)
+chunk state.  The chunk-state hand-off is the same communication pattern as
+the paper's halo exchange — it is what makes the hybrid/SSM architectures
+natural targets for ACCL-X sequence parallelism.
+
+TP layout: heads (= d_inner / head_dim) sharded over ``model`` when divisible
+(zamba2: 112 heads / 16); otherwise the layer computes replicated (mamba2-130m
+has 24 heads — tiny, so replication costs little; recorded as FLOP waste).
+B/C/dt projections are small and always computed replicated.
+
+``rt.use_pallas=True`` routes the intra-chunk matmuls to the Pallas SSD
+kernel (``repro.kernels.ssd_scan``); the code below is the jnp reference.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+from repro.models.common import ModelConfig, Runtime
+
+
+def ssm_dims(cfg: ModelConfig, tp: int):
+    """(local_heads, sharded?)"""
+    nh = cfg.ssm_heads
+    if tp > 1 and nh % tp == 0:
+        return nh // tp, True
+    return nh, False
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    nh, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": layers.dense_init(ks[0], d, di, dtype),
+        "w_x": layers.dense_init(ks[1], d, di, dtype),
+        "w_B": layers.dense_init(ks[2], d, g * n, dtype),
+        "w_C": layers.dense_init(ks[3], d, g * n, dtype),
+        "w_dt": layers.dense_init(ks[4], d, nh, dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_x": (jax.random.normal(ks[5], (cfg.conv_width, di), jnp.float32)
+                   * (1.0 / cfg.conv_width) ** 0.5).astype(dtype),
+        "norm": jnp.zeros((di,), dtype),
+        "w_out": layers.dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, state=None):
+    """Causal depthwise conv. x: (B,S,C), w: (W,C). state: (B,W-1,C) or None.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        y = y + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+def ssd_chunked_ref(x, dt, A, B, C, chunk: int):
+    """Reference chunked SSD (scan over chunks; memory O(chunk²)).
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) negative;
+    B, C: (b, s, g, n) with g == 1 (broadcast over heads).
+    Returns y: (b, s, h, p) and final state (b, h, n, p).
+
+    Within a chunk the output is an attention-like masked matmul (the SSD
+    duality — MXU-friendly); across chunks a (h, n, p) state is carried, the
+    neighbor-exchange-shaped recurrence noted in DESIGN.md.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+    xs = (to_chunks(x.astype(jnp.float32)),
+          to_chunks(dt.astype(jnp.float32)),
+          to_chunks(B.astype(jnp.float32))[..., 0, :],
+          to_chunks(C.astype(jnp.float32))[..., 0, :])
+
+    def step(h_prev, inp):
+        xc, dtc, Bc, Cc = inp          # (b,l,h,p),(b,l,h),(b,l,n),(b,l,n)
+        dA = dtc * A[None, None, :]
+        cum = jnp.cumsum(dA, axis=1)                       # (b,l,h)
+        # Intra-chunk: L[i,j] = exp(cum_i - cum_j), i >= j.  Mask the
+        # exponent (not the result): exp() of future entries can overflow,
+        # and 0*inf would NaN the backward pass.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]     # (b,i,j,h)
+        Lmat = jnp.exp(jnp.where(mask[None, :, :, None], diff, -jnp.inf))
+        cb = jnp.einsum("bin,bjn->bij", Cc, Bc)
+        w = cb[..., None] * Lmat                           # (b,i,j,h)
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", w, dtc, xc)
+        # Inter-chunk: y_i += C_i exp(cum_i) h_prev
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", Cc, jnp.exp(cum), h_prev)
+        # Chunk state hand-off
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)          # (b,l,h)
+        s_c = jnp.einsum("bjh,bjh,bjn,bjhp->bhnp", decay_end, dtc, Bc, xc)
+        h_new = h_prev * jnp.exp(cum[:, -1, :])[..., None, None] + s_c
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    h_final, ys = lax.scan(step, h0, xs)                   # ys: (nc,b,l,h,p)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssm_forward(params, x: jnp.ndarray, rt: Runtime,
+                conv_state=None, ssm_state=None, return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (B,S,D) replicated -> (B,S,D)."""
+    cfg = rt.cfg
+    tp = rt.mesh.tp
+    hl, sharded = ssm_dims(cfg, tp)
+    B, S, D = x.shape
+    p_dim = cfg.ssm_head_dim
+
+    x = layers.tp_grad_sum(x, rt, sharded)
+    z = layers.col_parallel(x, params["w_z"]) if sharded else jnp.dot(
+        x, params["w_z"], preferred_element_type=jnp.float32).astype(x.dtype)
+    xin = layers.col_parallel(x, params["w_x"]) if sharded else jnp.dot(
+        x, params["w_x"], preferred_element_type=jnp.float32).astype(x.dtype)
+    Bp = jnp.dot(x, params["w_B"], preferred_element_type=jnp.float32
+                 ).astype(x.dtype).reshape(B, S, cfg.ssm_groups, cfg.ssm_state)
+    Cp = jnp.dot(x, params["w_C"], preferred_element_type=jnp.float32
+                 ).astype(x.dtype).reshape(B, S, cfg.ssm_groups, cfg.ssm_state)
+    dt_all = jnp.dot(x, params["w_dt"], preferred_element_type=jnp.float32)
+
+    if sharded:
+        shard = lax.axis_index(rt.mesh.axis_model)
+        dt = lax.dynamic_slice_in_dim(dt_all, shard * hl, hl, axis=2)
+        A_log = lax.dynamic_slice_in_dim(params["A_log"], shard * hl, hl, 0)
+        Dp = lax.dynamic_slice_in_dim(params["D"], shard * hl, hl, 0)
+        dt_bias = lax.dynamic_slice_in_dim(params["dt_bias"], shard * hl, hl, 0)
+        norm_w = lax.dynamic_slice_in_dim(params["norm"], shard * hl * p_dim,
+                                          hl * p_dim, 0)
+        conv_w = params["conv_x"]  # stored already column-sharded by launcher
+    else:
+        dt, A_log, Dp, dt_bias, conv_w, norm_w = (
+            dt_all, params["A_log"], params["D"], params["dt_bias"],
+            params["conv_x"], params["norm"])
+
+    xin, new_conv = _depthwise_conv(xin, conv_w, conv_state)
+    dt = jax.nn.softplus(dt + dt_bias[None, None])
+    A = -jnp.exp(A_log)
+
+    xh = xin.reshape(B, S, hl, p_dim)
+    if rt.use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, h_final = ssd_ops.ssd_chunked(xh, dt, A, Bp, Cp, cfg.ssm_chunk)
+    else:
+        y, h_final = ssd_chunked_ref(xh, dt, A, Bp, Cp, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * Dp[None, None, :, None]
+    y = y.reshape(B, S, hl * p_dim).astype(x.dtype)
+
+    # Gated per-head RMSNorm (grouped per SSD head, so the result is
+    # identical under any tp) + output projection.
+    yg = (y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+          ).reshape(B, S, hl, p_dim)
+    yg = layers.rms_norm(yg, norm_w.reshape(hl, p_dim), cfg.norm_eps)
+    y = yg.reshape(B, S, hl * p_dim)
+    out = (layers.row_parallel(y, params["w_out"], rt) if sharded
+           else jnp.dot(y, params["w_out"], preferred_element_type=jnp.float32
+                        ).astype(x.dtype))
+    if return_state:
+        return out, (new_conv, h_final)
+    return out
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray     # (B, W-1, d_inner_local)
+    h: jnp.ndarray        # (B, local_heads, state, head_dim) fp32
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, tp: int) -> SSMState:
+    hl, _ = ssm_dims(cfg, tp)
+    di_l = hl * cfg.ssm_head_dim
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di_l), cfg.dtype),
+        h=jnp.zeros((batch, hl, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32))
+
+
+def ssm_decode(params, x: jnp.ndarray, state: SSMState, rt: Runtime
+               ) -> tuple[jnp.ndarray, SSMState]:
+    """Single-token recurrent step. x: (B,1,D)."""
+    cfg = rt.cfg
+    tp = rt.mesh.tp
+    hl, sharded = ssm_dims(cfg, tp)
+    B = x.shape[0]
+    p_dim = cfg.ssm_head_dim
+
+    z = layers.col_parallel(x, params["w_z"]) if sharded else jnp.dot(
+        x, params["w_z"], preferred_element_type=jnp.float32).astype(x.dtype)
+    xin = layers.col_parallel(x, params["w_x"]) if sharded else jnp.dot(
+        x, params["w_x"], preferred_element_type=jnp.float32).astype(x.dtype)
+    Bp = jnp.dot(x, params["w_B"], preferred_element_type=jnp.float32
+                 )[:, 0].reshape(B, cfg.ssm_groups, cfg.ssm_state)[:, 0]
+    Cp = jnp.dot(x, params["w_C"], preferred_element_type=jnp.float32
+                 )[:, 0].reshape(B, cfg.ssm_groups, cfg.ssm_state)[:, 0]
+    dt_all = jnp.dot(x, params["w_dt"], preferred_element_type=jnp.float32)[:, 0]
+
+    if sharded:
+        shard = lax.axis_index(rt.mesh.axis_model)
+        dt = lax.dynamic_slice_in_dim(dt_all, shard * hl, hl, axis=1)
+        A_log = lax.dynamic_slice_in_dim(params["A_log"], shard * hl, hl, 0)
+        Dp = lax.dynamic_slice_in_dim(params["D"], shard * hl, hl, 0)
+        dt_bias = lax.dynamic_slice_in_dim(params["dt_bias"], shard * hl, hl, 0)
+        norm_w = lax.dynamic_slice_in_dim(params["norm"], shard * hl * p_dim,
+                                          hl * p_dim, 0)
+    else:
+        dt, A_log, Dp, dt_bias, norm_w = (dt_all, params["A_log"], params["D"],
+                                          params["dt_bias"], params["norm"])
+
+    xin, new_conv = _depthwise_conv(xin, params["conv_x"], state.conv)
+    dt = jax.nn.softplus(dt + dt_bias[None])          # (B, hl)
+    A = -jnp.exp(A_log)
+
+    xh = xin[:, 0].reshape(B, hl, p_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None])                     # (B, hl)
+    # h: (B, hl, n, p);  h' = decay·h + dt·B ⊗ x
+    dBx = jnp.einsum("bh,bn,bhp->bhnp", dt, Bp, xh)
+    h_new = state.h * decay[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cp, h_new)         # (B, hl, p)
+    y = y + xh * Dp[None, :, None]
+    y = y.reshape(B, 1, hl * p_dim).astype(x.dtype)
+
+    yg = (y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+          ).reshape(B, 1, hl, p_dim)
+    yg = layers.rms_norm(yg, norm_w.reshape(hl, p_dim), cfg.norm_eps)
+    y = yg.reshape(B, 1, hl * p_dim)
+    out = (layers.row_parallel(y, params["w_out"], rt) if sharded
+           else jnp.dot(y, params["w_out"], preferred_element_type=jnp.float32
+                        ).astype(x.dtype))
+    return out, SSMState(conv=new_conv, h=h_new)

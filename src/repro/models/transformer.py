@@ -1,0 +1,428 @@
+"""Model assembly for all assigned architecture families.
+
+Families:
+  dense   — [attn, mlp] stack, scanned (qwen3, command-r+, deepseek-coder,
+            phi-3-vision backbone); sliding-window (mixtral) and 5:1
+            local:global (gemma3) attention patterns supported.
+  moe     — attn + MoE block (mixtral, deepseek-v3 with MLA + dense head
+            layers + shared expert).
+  ssm     — Mamba2 stack (mamba2-130m).
+  hybrid  — Zamba2: groups of Mamba2 layers with one weight-shared attention
+            block applied between groups (input = concat(hidden, embedding)
+            re-projected).
+  audio   — encoder-decoder (seamless): bidirectional encoder over frame
+            embeddings (frontend stub), causal decoder with cross-attention.
+  vlm     — patch-embedding stub prepended to token embeddings, dense stack.
+
+Layers are stacked and scanned (`lax.scan`) so compile time is O(1) in depth;
+`cfg.remat` wraps each block in jax.checkpoint for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention, layers, mla, moe, sharding, ssm
+from repro.models.common import ModelConfig, Runtime
+
+
+# ----------------------------------------------------------------------
+# Initialization
+# ----------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _init_dense_layer(key, cfg: ModelConfig, tp: int):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": (mla.init_mla(k1, cfg, cfg.dtype) if cfg.use_mla
+                 else attention.init_attention(k1, cfg, cfg.dtype, tp)),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.dtype),
+    }
+
+
+def _init_moe_layer(key, cfg: ModelConfig, tp: int):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "moe": moe.init_moe(k2, cfg, cfg.dtype, tp),
+    }
+    if cfg.use_mla:
+        p["attn"] = mla.init_mla(k1, cfg, cfg.dtype)
+    else:
+        p["attn"] = attention.init_attention(k1, cfg, cfg.dtype, tp)
+    return p
+
+
+def _init_ssm_layer(key, cfg: ModelConfig):
+    return {"ln": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "ssm": ssm.init_ssm(key, cfg, cfg.dtype)}
+
+
+def _init_cross_layer(key, cfg: ModelConfig, tp: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": attention.init_attention(k1, cfg, cfg.dtype, tp),
+        "ln_x": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "xattn": attention.init_attention(k2, cfg, cfg.dtype, tp),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "mlp": layers.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.dtype),
+    }
+
+
+def init_model(key, cfg: ModelConfig, tp: int = 1):
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": layers.init_embedding(keys[0], cfg.vocab_size, cfg.d_model,
+                                       cfg.dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    lk = jax.random.split(keys[1], max(cfg.n_layers, 1))
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.local_global_ratio:
+            r = cfg.local_global_ratio
+            blk = r + 1
+            n_blocks = cfg.n_layers // blk
+            trailing = cfg.n_layers - n_blocks * blk
+            params["blocks"] = _stack([
+                {"local": _stack([_init_dense_layer(jax.random.fold_in(lk[i], j),
+                                                    cfg, tp) for j in range(r)]),
+                 "global": _init_dense_layer(jax.random.fold_in(lk[i], r), cfg, tp)}
+                for i in range(n_blocks)])
+            if trailing:
+                params["trailing"] = _stack([
+                    _init_dense_layer(lk[n_blocks * blk + j], cfg, tp)
+                    for j in range(trailing)])
+        else:
+            params["layers"] = _stack([_init_dense_layer(lk[i], cfg, tp)
+                                       for i in range(cfg.n_layers)])
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.n_dense_layers
+        params["layers"] = _stack([_init_moe_layer(lk[i], cfg, tp)
+                                   for i in range(n_moe)])
+        if cfg.n_dense_layers:
+            dense_cfg = cfg
+            params["dense_layers"] = _stack([
+                _init_moe_dense_layer(lk[n_moe + i], cfg, tp)
+                for i in range(cfg.n_dense_layers)])
+    elif cfg.family == "ssm":
+        params["layers"] = _stack([_init_ssm_layer(lk[i], cfg)
+                                   for i in range(cfg.n_layers)])
+    elif cfg.family == "hybrid":
+        k_groups = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // k_groups
+        trailing = cfg.n_layers - n_groups * k_groups
+        params["groups"] = _stack([
+            {"ssm": _stack([_init_ssm_layer(jax.random.fold_in(lk[i], j), cfg)
+                            for j in range(k_groups)])}
+            for i in range(n_groups)])
+        if trailing:
+            params["trailing"] = _stack([
+                _init_ssm_layer(lk[n_groups * k_groups + j], cfg)
+                for j in range(trailing)])
+        # One weight-shared attention block (applied after every group).
+        kx = jax.random.split(keys[2], 3)
+        params["shared_attn"] = {
+            "proj_in": layers.dense_init(kx[0], 2 * cfg.d_model, cfg.d_model,
+                                         cfg.dtype),
+            "block": _init_dense_layer(kx[1], cfg, tp),
+        }
+    elif cfg.family == "audio":
+        ek = jax.random.split(keys[3], cfg.n_encoder_layers)
+        params["encoder"] = _stack([_init_dense_layer(ek[i], cfg, tp)
+                                    for i in range(cfg.n_encoder_layers)])
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+        params["layers"] = _stack([_init_cross_layer(lk[i], cfg, tp)
+                                   for i in range(cfg.n_layers)])
+        params["frontend"] = layers.dense_init(keys[4], cfg.frontend_dim,
+                                               cfg.d_model, cfg.dtype)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "vlm":
+        params["frontend"] = layers.dense_init(keys[4], cfg.frontend_dim,
+                                               cfg.d_model, cfg.dtype)
+    return params
+
+
+def _init_moe_dense_layer(key, cfg: ModelConfig, tp: int):
+    """Dense (non-MoE) leading layers of deepseek-v3."""
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.dtype),
+    }
+    if cfg.use_mla:
+        p["attn"] = mla.init_mla(k1, cfg, cfg.dtype)
+    else:
+        p["attn"] = attention.init_attention(k1, cfg, cfg.dtype, tp)
+    return p
+
+
+# ----------------------------------------------------------------------
+# Forward blocks
+# ----------------------------------------------------------------------
+
+def _attn_block(p, x, positions, rt: Runtime, window=None, causal=None):
+    h = layers.rms_norm(x, p["ln1"], rt.cfg.norm_eps)
+    if rt.cfg.use_mla:
+        h = mla.mla_attention(p["attn"], h, positions, rt)
+    else:
+        h = attention.attention(p["attn"], h, positions, rt, window=window,
+                                causal=causal)
+    x = x + h
+    return x
+
+
+def _dense_block(p, x, positions, rt: Runtime, window=None, causal=None):
+    x = _attn_block(p, x, positions, rt, window, causal)
+    h = layers.rms_norm(x, p["ln2"], rt.cfg.norm_eps)
+    x = x + layers.mlp(p["mlp"], h, rt, rt.cfg.mlp_type)
+    return x
+
+
+def _dense_block_sp(p, x_s, positions, rt: Runtime, window=None, causal=None):
+    """Megatron-SP dense block: x_s is (B, S/tp, D) seq-sharded.
+
+    LN runs on the shard; attention/MLP all-gather in and psum-scatter out —
+    same wire volume as the all-reduce they replace, but the residual carried
+    through the layer scan is tp× smaller (the memory-roofline lever of
+    EXPERIMENTS.md §Perf)."""
+    cfg = rt.cfg
+    h = layers.rms_norm(x_s, p["ln1"], cfg.norm_eps)
+    a = attention.attention(p["attn"], h, positions, rt, window=window,
+                            causal=causal, sp=True)
+    x_s = x_s + a
+    h = layers.rms_norm(x_s, p["ln2"], cfg.norm_eps)
+    x_s = x_s + layers.mlp(p["mlp"], h, rt, cfg.mlp_type, sp=True)
+    return x_s
+
+
+def _moe_layer_fwd(p, x, positions, rt: Runtime, window=None):
+    x = _attn_block(p, x, positions, rt, window)
+    h = layers.rms_norm(x, p["ln2"], rt.cfg.norm_eps)
+    y, aux = moe.moe_block(p["moe"], h, rt)
+    return x + y, aux
+
+
+def _cross_block(p, x, positions, enc_out, enc_pos, rt: Runtime):
+    x = _attn_block(p, x, positions, rt)
+    h = layers.rms_norm(x, p["ln_x"], rt.cfg.norm_eps)
+    dims = attention.attn_dims(rt.cfg, rt.mesh.tp)
+    hd = dims.head_dim
+    Bsz, T = enc_out.shape[0], enc_out.shape[1]
+    # f operator: enc_out enters a model-sharded branch (kv projections) —
+    # without it the whole encoder would receive rank-partial cotangents.
+    enc_out = layers.tp_grad_sum(enc_out, rt, dims.kv_sharded)
+    k = layers.col_parallel(enc_out, p["xattn"]["wk"]).reshape(Bsz, T, -1, hd)
+    v = layers.col_parallel(enc_out, p["xattn"]["wv"]).reshape(Bsz, T, -1, hd)
+    h = attention.attention(p["xattn"], h, positions, rt, causal=False,
+                            kv_override=(k, v, enc_pos))
+    x = x + h
+    h = layers.rms_norm(x, p["ln2"], rt.cfg.norm_eps)
+    return x + layers.mlp(p["mlp"], h, rt, rt.cfg.mlp_type)
+
+
+def _shared_attn_fwd(p, x, x_embed, positions, rt: Runtime):
+    """Zamba2 shared block: concat(hidden, embedding) -> proj -> attn+mlp."""
+    h = jnp.concatenate([x, x_embed], axis=-1)
+    h = jnp.dot(h, p["proj_in"], preferred_element_type=jnp.float32
+                ).astype(x.dtype)
+    return _dense_block(p["block"], h, positions, rt)
+
+
+def _maybe_remat(fn, rt: Runtime, train: bool):
+    if rt.cfg.remat and train:
+        if rt.cfg.remat_policy == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(fn)
+    return fn
+
+
+# ----------------------------------------------------------------------
+# Full forward (training / prefill logits)
+# ----------------------------------------------------------------------
+
+class ForwardOut(NamedTuple):
+    logits: jnp.ndarray     # vocab-sharded (B, S, V/tp)
+    aux_loss: jnp.ndarray   # MoE load-balance loss (0 for non-MoE)
+
+
+def forward(params, batch: dict, rt: Runtime, train: bool = True) -> ForwardOut:
+    cfg = rt.cfg
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = layers.embed(params["embed"], tokens, rt)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = jnp.dot(batch["patches"].astype(x.dtype), params["frontend"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.local_global_ratio:
+            x = _local_global_stack(params, x, positions, rt, train)
+        else:
+            use_sp = (getattr(rt, "seq_parallel", False) and rt.mesh.tp > 1
+                      and x.shape[1] % rt.mesh.tp == 0
+                      and attention.attn_dims(cfg, rt.mesh.tp).q_sharded)
+            block = _dense_block_sp if use_sp else _dense_block
+            blk = _maybe_remat(
+                functools.partial(block, positions=positions, rt=rt,
+                                  window=cfg.sliding_window), rt, train)
+
+            plan = sharding.subplan(rt.fsdp_plan, "layers")
+            if use_sp:
+                # shard the residual over seq for the whole stack
+                x = layers.sp_shard_seq(x, rt)
+            x, _ = lax.scan(
+                lambda h, p: (blk(sharding.apply_fsdp(p, plan, rt), h), None),
+                x, params["layers"])
+            if use_sp:
+                x = layers.sp_unshard_seq(x, rt)
+    elif cfg.family == "moe":
+        if "dense_layers" in params:
+            dplan = sharding.subplan(rt.fsdp_plan, "dense_layers")
+
+            def dense_body(h, p):
+                p = sharding.apply_fsdp(p, dplan, rt)
+                h = _attn_block(p, h, positions, rt)
+                hh = layers.rms_norm(h, p["ln2"], rt.cfg.norm_eps)
+                return h + layers.mlp(p["mlp"], hh, rt, rt.cfg.mlp_type), None
+            x, _ = lax.scan(dense_body, x, params["dense_layers"])
+
+        mplan = sharding.subplan(rt.fsdp_plan, "layers")
+
+        def moe_body(carry, p):
+            h, aux = carry
+            p = sharding.apply_fsdp(p, mplan, rt)
+            fn = _maybe_remat(functools.partial(
+                _moe_layer_fwd, positions=positions, rt=rt,
+                window=cfg.sliding_window), rt, train)
+            h, a = fn(p, h)
+            return (h, aux + a), None
+        (x, aux_total), _ = lax.scan(moe_body, (x, aux_total), params["layers"])
+    elif cfg.family == "ssm":
+        splan = sharding.subplan(rt.fsdp_plan, "layers")
+
+        def ssm_body(h, p):
+            p = sharding.apply_fsdp(p, splan, rt)
+            fn = _maybe_remat(lambda pp, hh: hh + ssm.ssm_forward(
+                pp["ssm"], layers.rms_norm(hh, pp["ln"], cfg.norm_eps), rt),
+                rt, train)
+            return fn(p, h), None
+        x, _ = lax.scan(ssm_body, x, params["layers"])
+    elif cfg.family == "hybrid":
+        x_embed = x
+
+        gplan = sharding.subplan(rt.fsdp_plan, "groups")
+
+        def group_body(h, p):
+            p = sharding.apply_fsdp(p, gplan, rt)
+
+            def inner(pp, hh):
+                for j in range(cfg.hybrid_attn_every):
+                    pj = jax.tree.map(lambda a: a[j], pp["ssm"])
+                    hh = hh + ssm.ssm_forward(
+                        pj["ssm"], layers.rms_norm(hh, pj["ln"], cfg.norm_eps), rt)
+                hh = hh + _shared_attn_fwd(params["shared_attn"], hh, x_embed,
+                                           positions, rt)
+                return hh
+            return _maybe_remat(inner, rt, train)(p, h), None
+        x, _ = lax.scan(group_body, x, params["groups"])
+        if "trailing" in params:
+            tplan = sharding.subplan(rt.fsdp_plan, "trailing")
+
+            def tr_body(h, p):
+                p = sharding.apply_fsdp(p, tplan, rt)
+                return h + ssm.ssm_forward(
+                    p["ssm"], layers.rms_norm(h, p["ln"], cfg.norm_eps), rt), None
+            x, _ = lax.scan(tr_body, x, params["trailing"])
+    elif cfg.family == "audio":
+        enc = jnp.dot(batch["frames"].astype(x.dtype), params["frontend"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+        T = enc.shape[1]
+        enc_pos = jnp.arange(T)[None, :].repeat(B, 0)
+
+        eplan = sharding.subplan(rt.fsdp_plan, "encoder")
+
+        def enc_body(h, p):
+            p = sharding.apply_fsdp(p, eplan, rt)
+            fn = _maybe_remat(functools.partial(
+                _dense_block, positions=enc_pos, rt=rt, causal=False), rt, train)
+            return fn(p, h), None
+        enc, _ = lax.scan(enc_body, enc, params["encoder"])
+        enc = layers.rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+        xplan = sharding.subplan(rt.fsdp_plan, "layers")
+
+        def dec_body(h, p):
+            p = sharding.apply_fsdp(p, xplan, rt)
+            fn = _maybe_remat(functools.partial(
+                _cross_block, positions=positions, enc_out=enc,
+                enc_pos=enc_pos, rt=rt), rt, train)
+            return fn(p, h), None
+        x, _ = lax.scan(dec_body, x, params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.logits_shard(params["embed"], x, rt)
+    return ForwardOut(logits=logits, aux_loss=aux_total)
+
+
+def _local_global_stack(params, x, positions, rt: Runtime, train: bool):
+    """gemma3 pattern: scan over (r local + 1 global) super-blocks."""
+    cfg = rt.cfg
+    r = cfg.local_global_ratio
+    bplan = sharding.subplan(rt.fsdp_plan, "blocks")
+    tplan = sharding.subplan(rt.fsdp_plan, "trailing")
+
+    def body(h, p):
+        p = sharding.apply_fsdp(p, bplan, rt)
+
+        def inner(pp, hh):
+            for j in range(r):
+                pj = jax.tree.map(lambda a: a[j], pp["local"])
+                hh = _dense_block(pj, hh, positions, rt,
+                                  window=cfg.sliding_window)
+            return _dense_block(pp["global"], hh, positions, rt, window=None)
+        return _maybe_remat(inner, rt, train)(p, h), None
+
+    x, _ = lax.scan(body, x, params["blocks"])
+    if "trailing" in params:
+        def tr(h, p):
+            p = sharding.apply_fsdp(p, tplan, rt)
+            return _dense_block(p, h, positions, rt,
+                                window=cfg.sliding_window), None
+        x, _ = lax.scan(tr, x, params["trailing"])
+    return x
+
+
+def loss_fn(params, batch: dict, rt: Runtime):
+    out = forward(params, batch, rt, train=True)
+    labels = batch["labels"]
+    logits = out.logits
+    if logits.shape[1] != labels.shape[1]:
+        # multimodal prefix (vlm): labels align to the trailing text tokens
+        logits = logits[:, -labels.shape[1]:]
+    mask = batch.get("loss_mask")
+    ce = layers.cross_entropy_vocab_sharded(logits, labels, rt, mask)
+    return ce + 0.01 * out.aux_loss, {"ce": ce, "aux": out.aux_loss}

@@ -1,0 +1,344 @@
+"""AdamW with ZeRO-1 optimizer-state sharding over the data axis.
+
+Two modes (manual SPMD — runs inside shard_map):
+
+- **plain**: full fp32 moments per device; gradients synced with an ACCL-X
+  all-reduce (hierarchical across pods when the mesh has a pod axis).
+- **zero1**: gradients are flattened into one vector, reduce-scattered over
+  the ``data`` axis (each data rank owns 1/dp of every model shard's
+  optimizer state — this is where the paper's ring reduce-scatter and its
+  int8 wire compression plug in), Adam runs on the owned slice, and the
+  updated slice is all-gathered back.  Cross-pod: the scattered slice is
+  all-reduced over ``pod`` between the RS and the update.
+
+FSDP-sharded leaves (grad already reduced over ``data`` by the all-gather
+transpose) keep per-rank moments and update in place — ZeRO-3 naturally.
+
+Moments can be stored bf16 (``moment_dtype``) — the optimizer-state analogue
+of the compression plugin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives
+from repro.core.communicator import Communicator
+from repro.core.config import CommConfig
+from repro.models.common import Runtime
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    zero1: bool = True
+    moment_dtype: Any = jnp.float32
+    # Separate wire config for the gradient reduce-scatter/all-gather (e.g.
+    # ring + int8 compression) without touching the forward TP collectives.
+    grad_comm: Optional[CommConfig] = None
+
+
+def schedule(step, oc: OptConfig):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, oc.warmup_steps))
+    t = jnp.clip((step - oc.warmup_steps)
+                 / max(1, oc.total_steps - oc.warmup_steps), 0.0, 1.0)
+    cos = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr * warm * cos
+
+
+# ----------------------------------------------------------------------
+# Flat packing helpers (ZeRO-1)
+# ----------------------------------------------------------------------
+
+def _flatten(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def _unflatten(flat, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        n = l.size
+        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def init_state(params, oc: OptConfig, rt: Runtime, fsdp_plan=None):
+    """Optimizer state pytree.
+
+    zero1: flat slices of size ceil(P/dp) per data rank for non-FSDP leaves;
+    per-leaf moments for FSDP leaves (already data-sharded in storage).
+    """
+    dp = rt.mesh.data_sizes[-1]
+    step = jnp.zeros((), jnp.int32)
+    if not oc.zero1 or dp == 1:
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, oc.moment_dtype), params)
+        v = jax.tree.map(lambda p: jnp.zeros(p.shape, oc.moment_dtype), params)
+        return {"m": m, "v": v, "step": step}
+    reg, fs = partition_params(params, fsdp_plan)
+    n = sum(l.size for l in jax.tree.leaves(reg))
+    pad = (-n) % dp
+    k = (n + pad) // dp
+    # Leading (1, 1) dims: the slice differs across BOTH the model and data
+    # axes, so its global representation is (tp, dp, k) with spec
+    # P('model', 'data', None); locally it is (1, 1, k).
+    return {
+        "m_slice": jnp.zeros((1, 1, k), oc.moment_dtype),
+        "v_slice": jnp.zeros((1, 1, k), oc.moment_dtype),
+        "m_fsdp": jax.tree.map(lambda p: jnp.zeros(p.shape, oc.moment_dtype), fs),
+        "v_fsdp": jax.tree.map(lambda p: jnp.zeros(p.shape, oc.moment_dtype), fs),
+        "step": step,
+    }
+
+
+def partition_params(params, fsdp_plan):
+    """Split the tree into (regular, fsdp) by the fsdp plan codes."""
+    if fsdp_plan is None:
+        return params, jax.tree.map(lambda p: None, params)
+    reg = jax.tree.map(lambda p, c: None if c >= 0 else p, params, fsdp_plan)
+    fs = jax.tree.map(lambda p, c: p if c >= 0 else None, params, fsdp_plan)
+    return reg, fs
+
+
+def _merge(reg, fs):
+    return jax.tree.map(lambda a, b: a if b is None else b, reg, fs,
+                        is_leaf=lambda x: x is None)
+
+
+def _adam_update(g, m, v, p32, lr, oc: OptConfig, step):
+    b1, b2 = oc.b1, oc.b2
+    m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+    v32 = v.astype(jnp.float32) * b2 + g * g * (1 - b2)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m32 / (1 - b1 ** t)
+    vhat = v32 / (1 - b2 ** t)
+    upd = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p32
+    return p32 - lr * upd, m32.astype(m.dtype), v32.astype(v.dtype)
+
+
+def apply_updates(params, grads, state, oc: OptConfig, rt: Runtime,
+                  fsdp_plan=None, ms_mask=None):
+    """One optimizer step.  All cross-device traffic goes through ACCL-X.
+
+    ``grads`` must already be model-axis-correct (see train_step); this
+    routine handles the data/pod-axis reduction per mode.
+    """
+    dp = rt.mesh.data_sizes[-1]
+    data_axis = rt.mesh.data_axes[-1]
+    pod_axes = rt.mesh.data_axes[:-1]
+    step = state["step"]
+    lr = schedule(step, oc)
+
+    def pod_reduce(x):
+        if not pod_axes:
+            return x
+        comm = Communicator(pod_axes, rt.mesh.data_sizes[:-1])
+        return collectives.all_reduce(x, comm, rt.comm)
+
+    if "m_slice" not in state:
+        dp_total = rt.mesh.dp
+        if dp_total > 1:
+            grads = jax.tree.map(
+                lambda g: collectives.all_reduce(
+                    g.astype(jnp.float32), rt.dp_comm(), rt.comm) / dp_total,
+                grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = sharded_global_norm(grads, ms_mask, rt)
+        scale = clip_scale(gnorm, oc)
+        new_p, new_m, new_v = {}, {}, {}
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        outs = []
+        for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+            p2, m2, v2 = _adam_update(g * scale, m, v, p.astype(jnp.float32),
+                                      lr, oc, step)
+            outs.append((p2.astype(p.dtype), m2, v2))
+        params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        return params, {"m": m, "v": v, "step": step + 1}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+    # ---- zero1 ----
+    reg_p, fs_p = partition_params(params, fsdp_plan)
+    reg_g, fs_g = partition_params(grads, fsdp_plan)
+
+    # FSDP leaves: grad already summed over data (all_gather transpose);
+    # sum across pods, then normalize to the global mean. Shard updates in
+    # place (each data rank owns disjoint rows — ZeRO-3 naturally).
+    fs_g = jax.tree.map(
+        lambda g: None if g is None
+        else pod_reduce(g.astype(jnp.float32)) / rt.mesh.dp,
+        fs_g, is_leaf=lambda x: x is None)
+
+    # Regular leaves: flat ring reduce-scatter (mean) over data.
+    gcfg = oc.grad_comm or rt.comm
+    flat_g = _flatten(reg_g)
+    n = flat_g.shape[0]
+    pad = (-n) % dp
+    if pad:
+        flat_g = jnp.pad(flat_g, (0, pad))
+    if dp > 1:
+        g_slice = collectives.reduce_scatter(flat_g, rt_comm_data(rt), gcfg)
+        g_slice = g_slice / rt.mesh.dp
+    else:
+        g_slice = flat_g / rt.mesh.dp
+    g_slice = pod_reduce(g_slice)
+
+    # Global grad norm.  Weight per element: 1 for model-sharded leaves
+    # (disjoint shards -> sum over the model axis), 1/tp for model-replicated
+    # leaves (identical grads on every model rank -> count once after the
+    # model-axis psum).  Slices are summed over data; pods hold identical
+    # slices after pod_reduce.
+    tp = rt.mesh.tp
+    reg_ms, fs_ms = (partition_params(ms_mask, fsdp_plan)
+                     if ms_mask is not None else (None, None))
+    w_flat = _flat_weights(reg_g, reg_ms, tp)
+    if pad:
+        w_flat = jnp.pad(w_flat, (0, pad))
+    if dp > 1:
+        k0 = w_flat.shape[0] // dp
+        w_slice = jax.lax.dynamic_slice_in_dim(
+            w_flat, jax.lax.axis_index(data_axis) * k0, k0, 0)
+    else:
+        w_slice = w_flat
+    sq = jnp.sum(w_slice * g_slice * g_slice)
+    fs_leaves_g = jax.tree.leaves(fs_g)
+    fs_leaves_m = jax.tree.leaves(fs_ms) if fs_ms is not None else [1] * len(fs_leaves_g)
+    for g, m in zip(fs_leaves_g, fs_leaves_m):
+        sq = sq + (1.0 if m else 1.0 / tp) * jnp.sum(g * g)
+    if dp > 1:
+        sq = collectives.all_reduce(sq, rt_comm_data(rt), rt.comm)
+    if tp > 1:
+        sq = collectives.all_reduce(
+            sq, Communicator((rt.mesh.axis_model,), (tp,)), rt.comm)
+    gnorm = jnp.sqrt(sq)
+    scale = clip_scale(gnorm, oc)
+
+    # Adam on the owned flat slice.
+    flat_p = _flatten(reg_p)
+    if pad:
+        flat_p = jnp.pad(flat_p, (0, pad))
+    k = flat_p.shape[0] // dp
+    if dp > 1:
+        idx = jax.lax.axis_index(data_axis) * k
+        p_slice = jax.lax.dynamic_slice_in_dim(flat_p, idx, k, 0)
+    else:
+        p_slice = flat_p
+    p2, m2, v2 = _adam_update(g_slice * scale, state["m_slice"][0, 0],
+                              state["v_slice"][0, 0], p_slice, lr, oc, step)
+    delta = p2 - p_slice
+    if dp > 1:
+        delta_full = collectives.all_gather(
+            delta, rt_comm_data(rt), oc.grad_comm or rt.comm, axis=0,
+            tiled=True)
+    else:
+        delta_full = delta
+    new_flat = flat_p + delta_full
+    new_reg = _unflatten(new_flat[:n], reg_p)
+
+    # FSDP leaves in place.
+    new_fs, new_m_fs, new_v_fs = {}, {}, {}
+    fs_leaves, fs_def = jax.tree.flatten(fs_p, is_leaf=lambda x: x is None)
+    g_leaves = jax.tree.leaves(fs_g, is_leaf=lambda x: x is None)
+    m_leaves = jax.tree.leaves(state["m_fsdp"], is_leaf=lambda x: x is None)
+    v_leaves = jax.tree.leaves(state["v_fsdp"], is_leaf=lambda x: x is None)
+    outs = []
+    for pl, gl, ml, vl in zip(fs_leaves, g_leaves, m_leaves, v_leaves):
+        if pl is None:
+            outs.append((None, None, None))
+            continue
+        p2, m2l, v2l = _adam_update(gl * scale, ml, vl,
+                                    pl.astype(jnp.float32), lr, oc, step)
+        outs.append((p2.astype(pl.dtype), m2l, v2l))
+    new_fs = jax.tree.unflatten(fs_def, [o[0] for o in outs])
+    new_m_fs = jax.tree.unflatten(fs_def, [o[1] for o in outs])
+    new_v_fs = jax.tree.unflatten(fs_def, [o[2] for o in outs])
+
+    params = _merge(new_reg, new_fs)
+    new_state = {"m_slice": m2[None, None],
+                 "v_slice": v2[None, None],
+                 "m_fsdp": new_m_fs, "v_fsdp": new_v_fs, "step": step + 1}
+    return params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def rt_comm_data(rt: Runtime) -> Communicator:
+    return Communicator((rt.mesh.data_axes[-1],), (rt.mesh.data_sizes[-1],))
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def _flat_weights(grad_tree, ms_tree, tp: int):
+    """Per-element norm weights for the flattened grad vector."""
+    g_leaves = jax.tree.leaves(grad_tree)
+    if ms_tree is None:
+        m_leaves = [1] * len(g_leaves)
+    else:
+        m_leaves = jax.tree.leaves(ms_tree)
+    parts = [jnp.full((g.size,), 1.0 if m else 1.0 / tp, jnp.float32)
+             for g, m in zip(g_leaves, m_leaves)]
+    return jnp.concatenate(parts)
+
+
+def sharded_global_norm(grads, ms_mask, rt: Runtime):
+    """Global norm with model-axis awareness (plain mode)."""
+    tp = rt.mesh.tp
+    if ms_mask is None or tp == 1:
+        return global_norm(grads)
+    sq_sharded = sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                     for g, m in zip(jax.tree.leaves(grads),
+                                     jax.tree.leaves(ms_mask)) if m)
+    sq_repl = sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                  for g, m in zip(jax.tree.leaves(grads),
+                                  jax.tree.leaves(ms_mask)) if not m)
+    sq_sharded = collectives.all_reduce(
+        jnp.asarray(sq_sharded, jnp.float32),
+        Communicator((rt.mesh.axis_model,), (tp,)), rt.comm)
+    return jnp.sqrt(sq_sharded + sq_repl)
+
+
+def clip_scale(gnorm, oc: OptConfig):
+    if oc.clip_norm is None:
+        return jnp.ones(())
+    return jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+
+
+def state_specs(param_spec_tree, oc: OptConfig, rt: Runtime, fsdp_plan=None):
+    """PartitionSpec tree matching init_state's output."""
+    from jax.sharding import PartitionSpec as P
+    dp = rt.mesh.data_sizes[-1]
+    if not oc.zero1 or dp == 1:
+        return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}
+    if fsdp_plan is None:
+        fs_spec = jax.tree.map(lambda s: None, param_spec_tree)
+    else:
+        fs_spec = jax.tree.map(lambda s, c: s if c >= 0 else None,
+                               param_spec_tree, fsdp_plan)
+    return {
+        "m_slice": P(rt.mesh.axis_model, rt.mesh.data_axes[-1], None),
+        "v_slice": P(rt.mesh.axis_model, rt.mesh.data_axes[-1], None),
+        "m_fsdp": fs_spec,
+        "v_fsdp": fs_spec,
+        "step": P(),
+    }

@@ -1,0 +1,149 @@
+"""Fault-tolerance runtime: straggler watchdog, preemption handler, elastic
+re-meshing.
+
+At 1000+ nodes, *something* is always failing.  The framework's contract:
+
+1. **Checkpoint/restart** — async sharded checkpoints every N steps
+   (repro.checkpoint) + restore-with-resharding onto whatever mesh survives.
+2. **Preemption** — SIGTERM triggers a synchronous emergency checkpoint at
+   the next step boundary (the loop polls a flag; the handler never touches
+   jax state from the signal context).
+3. **Straggler mitigation** — a step-time watchdog keeps a robust running
+   estimate (median + MAD); steps slower than ``median + k·MAD`` are logged
+   with their host metadata.  On a real deployment this feeds the scheduler
+   that re-shards around the slow host; here it drives tests and metrics.
+4. **Elastic re-mesh** — given a checkpoint and a NEW device topology,
+   ``elastic_restore`` rebuilds the session on the surviving mesh and
+   reshards every array (ZeRO slices are re-flattened automatically since
+   the optimizer state layout is a pure function of (params, mesh)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import statistics
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# Straggler watchdog
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    threshold: float
+
+
+class StepWatchdog:
+    """Robust step-time outlier detection (median + k·MAD)."""
+
+    def __init__(self, k: float = 5.0, warmup: int = 5, window: int = 50):
+        self.k = k
+        self.warmup = warmup
+        self.window = window
+        self.durations: list[float] = []
+        self.events: list[StragglerEvent] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start_step(self, step: int):
+        self._step = step
+        self._t0 = time.perf_counter()
+
+    def end_step(self) -> Optional[StragglerEvent]:
+        if self._t0 is None:
+            return None
+        dt = time.perf_counter() - self._t0
+        hist = self.durations[-self.window:]
+        event = None
+        if len(hist) >= self.warmup:
+            med = statistics.median(hist)
+            mad = statistics.median([abs(x - med) for x in hist]) or 1e-9
+            thr = med + self.k * mad
+            if dt > thr:
+                event = StragglerEvent(self._step, dt, thr)
+                self.events.append(event)
+        self.durations.append(dt)
+        return event
+
+    @property
+    def median_step(self) -> float:
+        return statistics.median(self.durations) if self.durations else 0.0
+
+
+# ----------------------------------------------------------------------
+# Preemption handling
+# ----------------------------------------------------------------------
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> set a flag; the training loop checkpoints and exits
+    at the next step boundary."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._requested = threading.Event()
+        self._old = {}
+        self._signals = signals
+
+    def __enter__(self):
+        for sig in self._signals:
+            self._old[sig] = signal.signal(sig, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for sig, old in self._old.items():
+            signal.signal(sig, old)
+        return False
+
+    def _handler(self, signum, frame):
+        self._requested.set()
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested.is_set()
+
+    def request(self):   # for tests / software-triggered drain
+        self._requested.set()
+
+
+# ----------------------------------------------------------------------
+# Elastic re-meshing
+# ----------------------------------------------------------------------
+
+def elastic_restore(ckpt_dir, cfg, new_mesh, comm, oc, step: Optional[int] = None,
+                    fsdp: bool = False):
+    """Rebuild a training session on a NEW mesh from a checkpoint.
+
+    The checkpoint stores full (unsharded) arrays; the session on the
+    surviving topology re-shards them via device_put. The ZeRO optimizer
+    slices are NOT restored (their layout depends on the dead mesh) — they
+    are reconstructed deterministically, which costs one step of Adam
+    history on re-scale; params and step counter survive exactly.
+    """
+    from jax.sharding import NamedSharding
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.launch import setup
+
+    ck = Checkpointer(ckpt_dir)
+    step = ck.latest_step() if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    sess = setup.build_session(cfg, new_mesh, comm, oc=oc, fsdp=fsdp,
+                               concrete=True)
+    shardings = jax.tree.map(lambda s: NamedSharding(new_mesh, s),
+                             sess.param_spec)
+    params = ck.restore(step, sess.params, target_sharding=shardings)
+    sess.params = params
+    sess.opt_state = setup.init_opt_state(sess)
+    # carry the step counter forward
+    import jax.numpy as jnp
+    sess.opt_state["step"] = jax.device_put(
+        jnp.asarray(step, jnp.int32),
+        NamedSharding(new_mesh, jax.sharding.PartitionSpec()))
+    return sess, step

@@ -1,0 +1,82 @@
+"""Serving entry points: shard_map'd prefill and decode_step builders.
+
+Used by the dry-run (abstract lowering) and by examples/serve_lm.py
+(concrete batched serving with greedy sampling).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.config import CommConfig
+from repro.launch import input_specs as isp
+from repro.models import decode as dec
+from repro.models import sharding, transformer
+from repro.models.common import MeshContext, ModelConfig, Runtime
+
+
+def cache_len(cfg: ModelConfig, shape: isp.ShapeSpec) -> int:
+    if cfg.family == "vlm":
+        return shape.seq_len + cfg.num_patches
+    return shape.seq_len
+
+
+def serve_runtime(cfg: ModelConfig, mesh, comm: CommConfig,
+                  shape: isp.ShapeSpec, attn_tiling: str = "auto") -> Runtime:
+    mesh_ctx = MeshContext.from_mesh(mesh)
+    return Runtime(cfg=cfg, mesh=mesh_ctx, comm=comm,
+                   attn_tiling=attn_tiling,
+                   seq_axes=isp.decode_seq_axes(shape, mesh))
+
+
+def build_serve_fn(cfg: ModelConfig, mesh, comm: CommConfig,
+                   shape: isp.ShapeSpec, attn_tiling: str = "auto"):
+    """Returns (rt, jitted_fn, abstract_args) for the dry-run / serving.
+
+    prefill kind: fn(params, batch) -> ServeState
+    decode kind:  fn(params, token, state) -> ServeState
+    """
+    rt = serve_runtime(cfg, mesh, comm, shape, attn_tiling)
+    mesh_ctx = rt.mesh
+    abstract_params = jax.eval_shape(
+        lambda k: transformer.init_model(k, cfg, mesh.shape["model"]),
+        jax.random.PRNGKey(0))
+    pspec = sharding.param_specs(abstract_params, cfg, mesh_ctx, fsdp=False)
+
+    caches_abs, cache_spec = isp.decode_caches_abstract(cfg, shape, mesh)
+    bx_axes = isp.decode_batch_axes(shape, mesh)
+    bx = bx_axes if bx_axes else None
+    tp = mesh.shape["model"]
+    vocab_sharded = cfg.vocab_size % tp == 0 and tp > 1
+    logits_spec = P(bx, "model") if vocab_sharded else P(bx, None)
+    state_spec = dec.ServeState(caches=cache_spec, last_logits=logits_spec,
+                                length=P())
+
+    if shape.kind == "prefill":
+        batch, bspec = isp.prefill_inputs(cfg, shape, mesh)
+        max_len = cache_len(cfg, shape)
+
+        def fn(params, batch):
+            return dec.prefill(params, batch, rt, max_len)
+
+        sm = jax.shard_map(fn, mesh=mesh, in_specs=(pspec, bspec),
+                           out_specs=state_spec, check_vma=False)
+        return rt, jax.jit(sm), (abstract_params, batch)
+
+    # decode
+    (token, state_abs0), (token_spec, state_spec_in) = isp.decode_inputs(
+        cfg, shape, mesh)
+    state_abs = dec.ServeState(caches=caches_abs,
+                               last_logits=state_abs0.last_logits,
+                               length=state_abs0.length)
+
+    def fn(params, token, state):
+        return dec.decode_step(params, token, state, rt)
+
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=(pspec, token_spec, state_spec),
+                       out_specs=state_spec, check_vma=False)
+    return rt, jax.jit(sm), (abstract_params, token, state_abs)

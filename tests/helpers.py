@@ -1,0 +1,32 @@
+"""Test helpers: subprocess isolation for multi-device tests.
+
+The main pytest process must keep seeing ONE CPU device (smoke tests and
+benches), so every test that needs a multi-device mesh launches a fresh
+python subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 540) -> str:
+    """Run `code` in a subprocess with n host devices; returns stdout.
+
+    Raises AssertionError with combined output on failure.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=str(REPO))
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout

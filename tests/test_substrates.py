@@ -1,0 +1,166 @@
+"""Data pipeline, checkpointing, fault tolerance, elastic re-meshing."""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from helpers import run_multidevice
+
+
+def test_data_pipeline_deterministic_and_shardable():
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=8)
+    src = SyntheticLM(cfg)
+    b1 = src.batch_at(5)
+    b2 = src.batch_at(5)
+    assert np.array_equal(b1["tokens"], b2["tokens"])          # deterministic
+    # host-sharded slices reassemble the global batch
+    halves = [src.batch_at(5, host_id=h, n_hosts=2) for h in (0, 1)]
+    glob = np.concatenate([h["tokens"] for h in halves])
+    assert np.array_equal(glob, b1["tokens"])
+    # labels = next-token of tokens
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_pipeline_prefetch():
+    from repro.data.pipeline import DataConfig, PrefetchLoader, SyntheticLM
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
+    loader = PrefetchLoader(SyntheticLM(cfg), start_step=3)
+    b = next(loader)
+    assert b["_step"] == 3
+    b = next(loader)
+    assert b["_step"] == 4
+    loader.close()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    import jax.numpy as jnp
+    from repro.checkpoint.checkpointer import Checkpointer
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    ck = Checkpointer(tmp_path)
+    ck.save(7, tree)
+    assert ck.latest_step() == 7
+    out = ck.restore(7, tree)
+    for x, y in zip(np.asarray(out["a"]), np.asarray(tree["a"])):
+        assert x == y
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_async_checkpoint_and_emergency(tmp_path):
+    import jax.numpy as jnp
+    from repro.checkpoint.checkpointer import (AsyncCheckpointer,
+                                               emergency_save)
+    tree = {"w": jnp.full((256,), 3.0)}
+    ck = AsyncCheckpointer(tmp_path)
+    ck.save(1, tree)
+    ck.wait()
+    assert ck.latest_step() == 1
+    emergency_save(tmp_path, 2, tree)
+    assert ck.latest_step() == 2
+
+
+def test_watchdog_detects_straggler():
+    from repro.runtime.fault_tolerance import StepWatchdog
+    wd = StepWatchdog(k=5.0, warmup=5)
+    for i in range(10):
+        wd.start_step(i)
+        time.sleep(0.002)
+        wd.end_step()           # noisy-host jitter may flag some — ignored
+    wd.start_step(10)
+    time.sleep(0.08)            # 40x median
+    ev = wd.end_step()
+    assert ev is not None and ev.step == 10
+    assert wd.median_step < 0.02
+
+
+def test_preemption_guard_drains_training(tmp_path):
+    """Software-triggered preemption: the loop checkpoints and stops early."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_smoke_config
+    from repro.core.config import CommConfig
+    from repro.data.pipeline import DataConfig
+    from repro.launch import setup
+    from repro.optim import adamw
+    from repro.train import loop as loop_mod
+    from repro.runtime import fault_tolerance as ft
+
+    cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), dtype=jnp.float32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sess = setup.build_session(cfg, mesh, CommConfig(),
+                               oc=adamw.OptConfig(lr=1e-3, zero1=False))
+    # patch: trigger preemption after 3 steps via the guard's request()
+    orig_enter = ft.PreemptionGuard.__enter__
+    state = {"n": 0}
+
+    class Probe(ft.PreemptionGuard):
+        @property
+        def preempted(self):
+            state["n"] += 1
+            return state["n"] > 3
+
+    real = ft.PreemptionGuard
+    loop_mod.PreemptionGuard = Probe
+    try:
+        hist = loop_mod.train(
+            sess, DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                             global_batch=4),
+            loop_mod.LoopConfig(n_steps=50, ckpt_every=100,
+                                ckpt_dir=str(tmp_path), log_every=100,),
+            log=lambda *_: None)
+    finally:
+        loop_mod.PreemptionGuard = real
+    assert len(hist) <= 5            # drained early, not 50 steps
+    from repro.checkpoint.checkpointer import Checkpointer
+    assert Checkpointer(tmp_path).latest_step() is not None   # emergency save
+
+
+def test_elastic_restore_reshards():
+    """Train on a 2x4 mesh, checkpoint, lose half the machine, resume on 2x2;
+    losses keep decreasing and params carry over exactly."""
+    out = run_multidevice("""
+import dataclasses, tempfile
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs.registry import get_smoke_config
+from repro.core.config import CommConfig
+from repro.launch import setup
+from repro.optim import adamw
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.runtime.fault_tolerance import elastic_restore
+
+cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), dtype=jnp.float32)
+comm = CommConfig()
+oc = adamw.OptConfig(lr=1e-3, zero1=True)
+rng = np.random.RandomState(0)
+batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 32))),
+         "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 32)))}
+
+mesh1 = jax.make_mesh((2, 4), ("data", "model"))
+sess = setup.build_session(cfg, mesh1, comm, oc=oc)
+bspec = jax.tree.map(lambda _: P(("data",)), batch)
+step = setup.make_sharded_train_step(sess, donate=False)(bspec)
+p, o = sess.params, sess.opt_state
+for _ in range(3):
+    p, o, m = step(p, o, batch)
+tmp = tempfile.mkdtemp()
+Checkpointer(tmp).save(3, p)
+
+# "failure": only 4 devices remain -> 2x2 mesh
+mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+sess2, start = elastic_restore(tmp, cfg, mesh2, comm, oc)
+assert start == 3
+# params identical after resharding
+for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(sess2.params)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+step2 = setup.make_sharded_train_step(sess2, donate=False)(bspec)
+p2, o2, m2 = step2(sess2.params, sess2.opt_state, batch)
+assert np.isfinite(float(m2["loss"]))
+assert float(m2["loss"]) < float(m["loss"]) + 0.5
+print("ELASTIC OK", float(m["loss"]), float(m2["loss"]))
+""")
+    assert "ELASTIC OK" in out

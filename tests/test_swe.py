@@ -1,0 +1,145 @@
+"""Shallow-water reproduction correctness (the paper's application)."""
+import numpy as np
+import pytest
+
+from helpers import run_multidevice
+
+
+def test_mesh_generation_properties():
+    from repro.swe.mesh_gen import generate_bight_mesh
+    mesh = generate_bight_mesh(800, seed=1)
+    assert mesh.n_elements > 300
+    assert (mesh.neighbors == -2).sum() > 0          # has open-sea edges
+    assert (mesh.neighbors == -1).sum() > 0          # has land edges
+    assert (mesh.area > 0).all()
+    # outward normals: each element's normals sum to ~0 (closed polygon)
+    assert np.abs(mesh.normals.sum(axis=1)).max() < 1e-9
+    # adjacency is symmetric
+    for e in range(0, mesh.n_elements, 7):
+        for j in range(3):
+            n = mesh.neighbors[e, j]
+            if n >= 0:
+                assert e in mesh.neighbors[n], (e, n)
+
+
+def test_partition_schedule_valid():
+    from repro.swe.mesh_gen import generate_bight_mesh
+    from repro.swe.partition import partition_mesh
+    from repro.swe.dg_solver import initial_state
+    mesh = generate_bight_mesh(800, seed=1)
+    pm = partition_mesh(mesh, 8, initial_state(mesh))
+    # every round is a valid ppermute (each rank sends/receives <= once)
+    for perm in pm.rounds:
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        assert len(set(srcs)) == len(srcs)
+        assert len(set(dsts)) == len(dsts)
+    assert pm.n_max >= 1
+    assert pm.n_rounds >= pm.n_max   # rounds cover the neighbor count
+    # element conservation
+    assert int(pm.valid.sum()) == mesh.n_elements
+
+
+def test_hypothesis_partition_balance():
+    from hypothesis import given, settings, strategies as st
+    from repro.swe.partition import _rcb
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 16), st.integers(50, 400))
+    def check(parts, n):
+        rng = np.random.RandomState(n)
+        cent = rng.rand(n, 2)
+        pid = _rcb(cent, parts)
+        counts = np.bincount(pid, minlength=parts)
+        assert counts.max() - counts.min() <= max(2, n // parts // 4 + 1)
+        assert counts.sum() == n
+
+    check()
+
+
+def test_partitioned_equals_single_and_modes():
+    out = run_multidevice("""
+import jax, numpy as np
+from repro.core.config import CommConfig, CommMode, BASELINE_CONFIG
+from repro.swe import driver
+from repro.swe.partition import _rcb
+
+def flatten(sim, s):
+    part = _rcb(sim.mesh.centroids, sim.pm.n_parts)
+    counts = np.zeros(sim.pm.n_parts, int)
+    vals = np.zeros((sim.mesh.n_elements, 3))
+    for e in range(sim.mesh.n_elements):
+        p = part[e]
+        vals[e] = s[p, counts[p]]
+        counts[p] += 1
+    return vals
+
+mesh1 = jax.make_mesh((1,), ("data",))
+sim1 = driver.build_simulation(500, mesh1, CommConfig())
+v1 = flatten(sim1, np.asarray(driver.make_sim_runner(sim1, 20)(sim1.state, 0.0)))
+
+mesh8 = jax.make_mesh((8,), ("data",))
+for cfg in (CommConfig(), CommConfig(mode=CommMode.BUFFERED)):
+    sim8 = driver.build_simulation(500, mesh8, cfg)
+    v8 = flatten(sim8, np.asarray(driver.make_sim_runner(sim8, 20)(sim8.state, 0.0)))
+    assert np.abs(v1 - v8).max() < 1e-4, cfg.mode
+
+# host-scheduled baseline
+simh = driver.build_simulation(500, mesh8, BASELINE_CONFIG)
+runner = driver.make_host_scheduled_runner(simh)
+sh, _ = runner.run(simh.state, 0.0, 20)
+assert np.abs(v1 - flatten(simh, np.asarray(sh))).max() < 1e-4
+assert runner.dispatches == 40
+print("SWE PARITY OK")
+""")
+    assert "SWE PARITY OK" in out
+
+
+def test_mass_conservation_multidevice():
+    out = run_multidevice("""
+import jax, numpy as np
+from repro.core.config import CommConfig
+from repro.swe import driver
+mesh = jax.make_mesh((8,), ("data",))
+sim = driver.build_simulation(600, mesh, CommConfig())
+m0 = float(np.sum(np.asarray(sim.state)[..., 0] * sim.pm.area * sim.pm.valid))
+s = driver.make_sim_runner(sim, 50)(sim.state, 0.0)
+m1 = float(np.sum(np.asarray(s)[..., 0] * sim.pm.area * sim.pm.valid))
+assert abs(m1 - m0) / m0 < 5e-3, (m0, m1)
+assert np.isfinite(np.asarray(s)).all()
+print("MASS OK", m0, m1)
+""")
+    assert "MASS OK" in out
+
+
+def test_eq2_eq3_model_properties():
+    """The latency model reproduces the paper's qualitative claims."""
+    from repro.core import latmodel
+    from repro.core.config import (BASELINE_CONFIG, CommConfig, CommMode,
+                                   Scheduling, V5E)
+    streaming = CommConfig()
+    w = latmodel.SWEWorkload(
+        e_total=6000 * 8, e_core=5600, e_send=270, e_recv=270, d_ext=0,
+        l_pipe=100, n_max=4, flop_per_element=260.0, freq=256e6,
+        msg_bytes=270 * 12 // 4)
+    # 1) buffered+host (MPI baseline) latency >> streaming+fused
+    l_base = latmodel.eq3_l_comm(w, BASELINE_CONFIG, V5E)
+    l_accl = latmodel.eq3_l_comm(w, streaming, V5E)
+    assert l_base > 3 * l_accl
+    # 2) the baseline stalls the pipeline like the paper (75-80% there)
+    assert latmodel.stall_fraction(w, BASELINE_CONFIG, V5E) > 0.4
+    assert latmodel.stall_fraction(w, streaming, V5E) < 0.1
+    # 3) throughput monotonically degrades with N_max (Fig. 10 steps)
+    thr = []
+    for nmax in (1, 2, 4, 8, 12):
+        import dataclasses
+        w2 = dataclasses.replace(w, n_max=nmax)
+        thr.append(latmodel.eq2_throughput(w2, BASELINE_CONFIG, V5E))
+    assert all(a >= b for a, b in zip(thr, thr[1:]))
+    # 4) buffered mode caps below link bandwidth. NOTE the hardware
+    # adaptation: on the FPGA the staging copy HALVED peak (6.6 vs 12.5 GB/s,
+    # mem ~ link speed); on TPU HBM is 16x faster than ICI so the buffered
+    # THROUGHPUT penalty is ~11% — the buffered LATENCY penalty (l_m + the
+    # extra l_k) is what dominates instead (asserted in 1-2 above).
+    assert latmodel.buffered_peak_bw(V5E) < V5E.ici_bw
+    assert latmodel.buffered_peak_bw(V5E) > 0.8 * V5E.ici_bw
