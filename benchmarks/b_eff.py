@@ -47,6 +47,7 @@ def modeled_rows():
 
 def measured_rows():
     import jax
+    from repro import compat
     import jax.numpy as jnp
     from functools import partial
     from jax.sharding import PartitionSpec as P
@@ -67,7 +68,7 @@ def measured_rows():
     cfg = CommConfig()
     x = jnp.zeros((n, 1 << 14), jnp.float32)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
     def ring_once(xs):
         return collectives.sendrecv(xs[0], comm.ring_perm(), comm, cfg)[None]
 

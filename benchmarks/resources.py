@@ -16,6 +16,7 @@ import numpy as np
 
 def run():
     import jax
+    from repro import compat
     import jax.numpy as jnp
     from functools import partial
     from jax.sharding import PartitionSpec as P
@@ -45,7 +46,7 @@ def run():
     x = jnp.zeros((n, 1 << 16), jnp.float32)
     rows = []
     for name, cfg in builds.items():
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+        @partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
         def f(xs):
             return collectives.all_reduce(xs[0], comm, cfg)[None]
 

@@ -1,11 +1,14 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and writes the same rows to
+``BENCH_comm.json`` (override with --json=PATH, disable with --json=) so the
+perf trajectory is machine-trackable across PRs.
 
 Multi-device benches need >1 host device; when launched with a single CPU
 device this driver re-execs itself with 8 host devices (opt out with
 REPRO_BENCH_NO_REEXEC=1 or --single-device).
 """
+import json
 import os
 import sys
 
@@ -33,17 +36,45 @@ def main() -> None:
                ("swe(fig9,fig10,table1)", swe_scaling),
                ("lm_roofline", lm_roofline)]
     only = None
+    json_path = "BENCH_comm.json"
     for a in sys.argv[1:]:
         if a.startswith("--only="):
             only = a.split("=", 1)[1]
+        if a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+    results = {}
+    ok_labels = []
     for label, mod in modules:
         if only and only not in label:
             continue
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.3f},{derived}")
+                results[name] = {"us_per_call": round(us, 3),
+                                 "derived": derived}
+            ok_labels.append(label)
         except Exception as e:  # noqa: BLE001
             print(f"{label}_ERROR,0,{type(e).__name__}:{e}")
+            results[f"{label}_ERROR"] = {
+                "us_per_call": 0.0, "derived": f"{type(e).__name__}:{e}"}
+    if json_path:
+        # Merge into any existing file so a partial (--only=...) run updates
+        # its rows without destroying the rest of the benchmark record.
+        rows = {}
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as f:
+                    rows = json.load(f).get("rows", {})
+            except (json.JSONDecodeError, OSError):
+                rows = {}
+        rows.update(results)
+        for label in ok_labels:   # a clean run clears the module's old error
+            rows.pop(f"{label}_ERROR", None)
+        with open(json_path, "w") as f:
+            json.dump({"schema": "repro-bench-v1", "rows": rows}, f,
+                      indent=1, sort_keys=True)
+        print(f"# wrote {len(results)} rows ({len(rows)} total) -> {json_path}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

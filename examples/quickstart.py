@@ -10,6 +10,7 @@ compression, and the modeled latency difference (Eq. 1).
 import functools
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
@@ -30,7 +31,7 @@ def main():
     for mode in (CommMode.STREAMING, CommMode.BUFFERED):
         cfg = CommConfig(mode=mode)
 
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P("x"),
+        @functools.partial(compat.shard_map, mesh=mesh, in_specs=P("x"),
                            out_specs=P("x"))
         def ring(xs):
             return collectives.sendrecv(xs[0], comm.ring_perm(), comm, cfg)[None]
@@ -45,7 +46,7 @@ def main():
     for compression in (Compression.NONE, Compression.INT8):
         cfg = CommConfig(algorithm="ring", compression=compression)
 
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P("x"),
+        @functools.partial(compat.shard_map, mesh=mesh, in_specs=P("x"),
                            out_specs=P("x"))
         def allreduce(xs):
             return collectives.all_reduce(xs[0], comm, cfg)[None]

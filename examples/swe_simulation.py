@@ -22,11 +22,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--elements", type=int, default=2000)
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--comm", default="streaming",
+                    choices=("streaming", "baseline", "auto"),
+                    help="halo-exchange config: the paper's streaming/baseline"
+                         " constants, or 'auto' = pick from the TuneDB sweep"
+                         " (python -m repro.tune.sweep)")
     args = ap.parse_args()
 
     n = jax.device_count()
     mesh = jax.make_mesh((n,), ("data",))
-    sim = driver.build_simulation(args.elements, mesh, CommConfig())
+    cfg = {"streaming": CommConfig(), "baseline": BASELINE_CONFIG,
+           "auto": "auto"}[args.comm]
+    sim = driver.build_simulation(args.elements, mesh, cfg)
+    print(f"comm config ({args.comm}): {sim.comm_cfg}")
     print(f"mesh: {sim.mesh.n_elements} elements over {n} partitions "
           f"(N_max={sim.pm.n_max}, rounds={sim.pm.n_rounds})")
 

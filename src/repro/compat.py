@@ -1,0 +1,76 @@
+"""Version-compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the modern spelling ``jax.shard_map`` (with
+the ``check_vma`` keyword).  On jax 0.4.x the function lives at
+``jax.experimental.shard_map.shard_map`` and the keyword is ``check_rep``.
+This module resolves whichever is available and translates the keyword, so
+every caller does::
+
+    from repro.compat import shard_map
+
+and never touches the jax version split directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+# Modern jax defaults to the partitionable threefry, making RNG output
+# independent of the mesh/sharding it is computed under.  jax 0.4.x defaults
+# to False, which breaks cross-mesh parity (params initialized on a (2,4)
+# mesh differ from a (1,1) mesh).  Force the modern behavior.
+if not getattr(jax.config, "jax_threefry_partitionable", True):
+    jax.config.update("jax_threefry_partitionable", True)
+
+_NATIVE_SHARD_MAP = getattr(jax, "shard_map", None)
+if _NATIVE_SHARD_MAP is None:
+    from jax.experimental.shard_map import shard_map as _LEGACY_SHARD_MAP
+else:
+    _LEGACY_SHARD_MAP = None
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None, check_rep: bool | None = None,
+              **kwargs: Any):
+    """``jax.shard_map`` that works on both jax 0.4.x and >= 0.5.
+
+    ``check_vma`` (new name) and ``check_rep`` (0.4.x name) are accepted
+    interchangeably; whichever the installed jax expects is forwarded.
+    """
+    check = True
+    if check_rep is not None:
+        check = check_rep
+    if check_vma is not None:
+        check = check_vma
+    if _NATIVE_SHARD_MAP is not None:
+        return _NATIVE_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check,
+                                 **kwargs)
+    return _LEGACY_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check, **kwargs)
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """Pallas-TPU compiler params across the CompilerParams rename.
+
+    jax >= 0.5 spells it ``pltpu.CompilerParams``; 0.4.x uses
+    ``pltpu.TPUCompilerParams``.  Fields (e.g. ``dimension_semantics``) are
+    identical.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with a fallback for very old jax versions."""
+    mk = getattr(jax, "make_mesh", None)
+    if mk is not None:
+        return mk(tuple(axis_shapes), tuple(axis_names))
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[: int(np.prod(axis_shapes))])
+    return Mesh(devs.reshape(tuple(axis_shapes)), tuple(axis_names))

@@ -4,7 +4,8 @@ Public API:
     CommConfig / CommMode / Scheduling / Transport / Compression / HardwareSpec
     Communicator
     collectives: sendrecv, multi_neighbor_exchange, all_reduce, all_gather,
-                 reduce_scatter, all_to_all, broadcast, hierarchical_all_reduce
+                 reduce_scatter, all_to_all, broadcast, hierarchical_all_reduce,
+                 resolve_config ("auto" -> autotuned CommConfig via repro.tune)
     streaming:   chunked_permute, buffered_permute, pipelined_consume,
                  overlapped_matmul_allreduce
     latmodel:    pingping_latency, eq2_throughput, eq3_l_comm, roofline_terms

@@ -21,8 +21,26 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.communicator import Communicator
-from repro.core.config import CommConfig, CommMode, Compression
+from repro.core.config import CommConfig, CommMode, Compression, Transport
 from repro.core import plugins, streaming
+
+
+def resolve_config(cfg, collective: str = "all_reduce",
+                   msg_bytes: int = 1 << 20, mesh=None,
+                   db_path=None) -> CommConfig:
+    """Resolve a ``CommConfig | "auto" | None`` to a concrete config.
+
+    ``"auto"`` asks the autotuner (:func:`repro.tune.select_config`) for the
+    fastest *measured* config for this collective/size/topology, falling back
+    to ``OPTIMIZED_CONFIG`` on a cold cache.  Host-side only — call it before
+    tracing, never inside ``shard_map``.
+    """
+    if isinstance(cfg, CommConfig):
+        return cfg
+    if cfg is None or cfg == "auto":
+        from repro.tune import select_config
+        return select_config(collective, msg_bytes, mesh=mesh, path=db_path)
+    raise TypeError(f"comm config must be CommConfig or 'auto', got {cfg!r}")
 
 
 # ----------------------------------------------------------------------
@@ -70,7 +88,7 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
     received = []
     prev = None
     for r, (payload, perm) in enumerate(zip(payloads, rounds)):
-        if cfg.transport.value == "ordered" and prev is not None:
+        if cfg.transport == Transport.ORDERED and prev is not None:
             payload, _ = lax.optimization_barrier((payload, prev))
         out = sendrecv(payload, perm, comm, cfg)
         received.append(out)

@@ -70,6 +70,15 @@ class Communicator:
         i = self.axis_names.index(axis_name)
         return Communicator((axis_name,), (self.axis_sizes[i],))
 
+    def auto_config(self, collective: str, msg_bytes: int, db_path=None):
+        """Autotuned ``CommConfig`` for a collective this communicator will
+        run (host-side; consults the persistent TuneDB keyed by THIS
+        communicator's size — a 4-rank axis of an 8-device mesh looks up
+        4-device results — ``OPTIMIZED_CONFIG`` on a cold cache)."""
+        from repro.tune import select_config, topology_key
+        return select_config(collective, msg_bytes, path=db_path,
+                             topo=topology_key(n_devices=self.size))
+
     # ------------------------------------------------------------------
     # Topology helpers (static, host-side)
     # ------------------------------------------------------------------

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, hstate, *,
             chunk: int):
@@ -100,7 +102,7 @@ def ssd_scan_pallas(x, dt, a, b, c, chunk: int, interpret: bool = False):
             jax.ShapeDtypeStruct((bh, n_dim, p_dim), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n_dim, p_dim), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt[..., None], a[:, None], b, c)

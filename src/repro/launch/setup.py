@@ -13,6 +13,7 @@ import functools
 from typing import Any, Optional
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -78,7 +79,7 @@ def init_opt_state(sess: Session):
     def _init(params):
         return adamw.init_state(params, sess.oc, rt, rt.fsdp_plan)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         _init, mesh=mesh, in_specs=(sess.param_spec,),
         out_specs=sess.opt_spec, check_vma=False))
     return fn(sess.params)
@@ -106,7 +107,7 @@ def make_sharded_train_step(sess: Session, accum_steps: int = 1,
         {"tokens": 0, "labels": 0})
 
     def build(batch_tree_spec):
-        sm = jax.shard_map(
+        sm = compat.shard_map(
             wrapped, mesh=sess.mesh,
             in_specs=(sess.param_spec, sess.opt_spec, batch_tree_spec),
             out_specs=(sess.param_spec, sess.opt_spec, metric_spec),
@@ -122,7 +123,7 @@ def make_sharded_eval_step(sess: Session):
     metric_spec = {"loss": P(), "ce": P(), "aux": P()}
 
     def build(batch_tree_spec):
-        sm = jax.shard_map(
+        sm = compat.shard_map(
             fn, mesh=sess.mesh,
             in_specs=(sess.param_spec, batch_tree_spec),
             out_specs=metric_spec,

@@ -17,6 +17,7 @@ from functools import partial
 from typing import Optional
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -41,11 +42,23 @@ class Simulation:
 
 
 def build_simulation(n_elements: int, device_mesh: Mesh,
-                     comm_cfg: CommConfig, swe: SWEConfig = SWEConfig(),
-                     seed: int = 0) -> Simulation:
+                     comm_cfg: CommConfig | str, swe: SWEConfig = SWEConfig(),
+                     seed: int = 0, tune_db_path=None) -> Simulation:
+    """Build the partitioned simulation.
+
+    ``comm_cfg="auto"`` asks the autotuner for the fastest measured config
+    for this partitioning's halo exchange (multi-neighbor pattern at the
+    largest per-round message size), falling back to ``OPTIMIZED_CONFIG``
+    when no sweep has been run on this topology.
+    """
     mesh = generate_bight_mesh(n_elements, seed=seed)
     n_parts = device_mesh.shape["data"]
     pm = partition_mesh(mesh, n_parts, dg_solver.initial_state(mesh))
+    if not isinstance(comm_cfg, CommConfig):
+        from repro.core.collectives import resolve_config
+        halo_bytes = int(pm.s_max) * 3 * 4   # (h, hu, hv) f32 per halo element
+        comm_cfg = resolve_config(comm_cfg, "multi_neighbor", halo_bytes,
+                                  mesh=device_mesh, db_path=tune_db_path)
     sharding = NamedSharding(device_mesh, P("data"))
     state = jax.device_put(jnp.asarray(pm.state0, jnp.float32), sharding)
     return Simulation(mesh=mesh, pm=pm, device_mesh=device_mesh,
@@ -86,7 +99,7 @@ def make_sim_runner(sim: Simulation, n_inner: int = 10):
         (state, t), _ = jax.lax.scan(inner, (state, t0), jnp.arange(n_inner))
         return state
 
-    sm = jax.shard_map(body, mesh=sim.device_mesh,
+    sm = compat.shard_map(body, mesh=sim.device_mesh,
                        in_specs=in_specs, out_specs=P("data"),
                        check_vma=False)
     fn = jax.jit(sm)
@@ -112,7 +125,7 @@ def make_host_scheduled_runner(sim: Simulation):
         payloads = state[:, send_idx[0]] * send_mask[0][None, ..., None]
         return payloads   # (1, R, S, 3) on this device
 
-    gather_sm = jax.jit(jax.shard_map(
+    gather_sm = jax.jit(compat.shard_map(
         gather, mesh=sim.device_mesh,
         in_specs=(P("data"), P("data"), P("data")), out_specs=P("data"),
         check_vma=False))
@@ -126,7 +139,7 @@ def make_host_scheduled_runner(sim: Simulation):
         return s
 
     in_specs = (P("data"),) + (P("data"),) * len(arg_list) + (P(),)
-    step_sm = jax.jit(jax.shard_map(
+    step_sm = jax.jit(compat.shard_map(
         phase2, mesh=sim.device_mesh, in_specs=in_specs, out_specs=P("data"),
         check_vma=False))
 

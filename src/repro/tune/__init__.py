@@ -1,0 +1,39 @@
+"""ACCL-X autotuner — measured configuration-space search for CommConfig.
+
+The paper's method is exactly this loop: sweep the communication framework's
+configuration space with synthetic microbenchmarks (b_eff-style pingpong,
+collective sweeps), calibrate the latency model against the measurements, and
+use the findings to configure the application.  This package closes that loop
+for the repo:
+
+- :mod:`repro.tune.space`     — enumerate valid ``CommConfig`` candidates
+  (mode x scheduling x transport x window x chunk x compression x algorithm),
+  pruning combinations ``CommConfig.__post_init__`` rejects.
+- :mod:`repro.tune.sweep`     — run measured microbenchmarks per collective
+  and message size on the running mesh; ``python -m repro.tune.sweep``.
+- :mod:`repro.tune.calibrate` — fit the Eq. 1 constants (l_k, link bandwidth,
+  staging cost) from sweep measurements; model-vs-measured report.
+- :mod:`repro.tune.db`        — persistent ``TuneDB`` JSON store and the
+  ``select_config(collective, msg_bytes, mesh)`` entry point every workload
+  uses to pick a fast configuration (``comm_cfg="auto"``).
+"""
+from repro.tune.space import (config_from_dict, config_to_dict,
+                              enumerate_configs, space_size)
+from repro.tune.db import (TuneDB, TuneEntry, default_db_path, select_config,
+                           topology_key)
+from repro.tune.calibrate import (CalibrationResult, calibrate_from_db,
+                                  fit_latency_model, model_vs_measured)
+
+
+def run_sweep(*args, **kwargs):
+    """Lazy forward to :func:`repro.tune.sweep.run_sweep` (keeps
+    ``python -m repro.tune.sweep`` free of a double-import warning)."""
+    from repro.tune.sweep import run_sweep as _run_sweep
+    return _run_sweep(*args, **kwargs)
+
+__all__ = [
+    "CalibrationResult", "TuneDB", "TuneEntry", "calibrate_from_db",
+    "config_from_dict", "config_to_dict", "default_db_path",
+    "enumerate_configs", "fit_latency_model", "model_vs_measured",
+    "run_sweep", "select_config", "space_size", "topology_key",
+]

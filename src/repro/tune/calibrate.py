@@ -1,0 +1,117 @@
+"""Fit the Eq. 1 latency-model constants from sweep measurements.
+
+The paper calibrates its model (l_k = 30 us XRT dispatch, 12.5 GB/s QSFP
+link, global-memory staging cost) by measuring the running system; this module
+does the same for whatever substrate the sweep ran on.  The pingping model
+
+    buffered : t = 2*l_k + l0 + wire_bytes/bw + 2*msg_bytes/bw_mem
+    streaming: t =   l_k + l0 + wire_bytes/bw
+
+is linear in the unknowns (l_k_host, l_k_fused, l0, 1/bw, 2/bw_mem), so a
+least-squares fit over the measured (config, size, seconds) points recovers
+them directly.  ``CalibrationResult.to_hardware_spec`` rebuilds a
+``HardwareSpec`` whose Eq. 1-3 predictions track the measured substrate, and
+``model_vs_measured`` reports the residuals per point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core import latmodel
+from repro.core.config import (CommConfig, CommMode, HardwareSpec, Scheduling,
+                               V5E)
+
+# One measurement point: (config, message bytes, measured seconds per op).
+Measurement = tuple[CommConfig, int, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationResult:
+    """Fitted Eq. 1 constants for the measured substrate."""
+    l_k_host: float       # s per host-scheduled dispatch (paper: ~30 us XRT)
+    l_k_fused: float      # s per in-program issue (paper: sub-us PL)
+    link_latency: float   # s base latency per message (l0)
+    link_bw: float        # B/s effective wire bandwidth
+    staging_bw: float     # B/s effective staging (HBM write+read) bandwidth
+    n_points: int         # measurements used
+    rms_rel_err: float    # fit quality over those points
+
+    def to_hardware_spec(self, base: HardwareSpec = V5E,
+                         name: str = "calibrated") -> HardwareSpec:
+        """A HardwareSpec whose latmodel predictions match the measurements."""
+        return dataclasses.replace(
+            base, name=name,
+            host_dispatch=self.l_k_host, fused_dispatch=self.l_k_fused,
+            ici_latency=self.link_latency, ici_bw=self.link_bw,
+            hbm_bw=self.staging_bw)
+
+    def summary(self) -> str:
+        return ("calibrated: "
+                f"l_k(host)={self.l_k_host*1e6:.1f}us "
+                f"l_k(fused)={self.l_k_fused*1e6:.2f}us "
+                f"link_lat={self.link_latency*1e6:.2f}us "
+                f"link_bw={self.link_bw/1e9:.2f}GB/s "
+                f"staging_bw={self.staging_bw/1e9:.2f}GB/s "
+                f"(n={self.n_points}, rms_rel_err={self.rms_rel_err:.2f})")
+
+
+def _design_row(cfg: CommConfig, msg_bytes: int) -> np.ndarray:
+    """Coefficients of [l_k_host, l_k_fused, l0, 1/bw, 2/bw_mem] for Eq. 1."""
+    n_k = 2.0 if cfg.mode == CommMode.BUFFERED else 1.0
+    host = n_k if cfg.scheduling == Scheduling.HOST else 0.0
+    fused = n_k if cfg.scheduling == Scheduling.FUSED else 0.0
+    wire = latmodel.wire_bytes(msg_bytes, cfg)
+    staging = float(msg_bytes) if cfg.mode == CommMode.BUFFERED else 0.0
+    return np.array([host, fused, 1.0, wire, staging])
+
+
+def fit_latency_model(measurements: Sequence[Measurement]) -> CalibrationResult:
+    """Least-squares fit of the Eq. 1 constants; raises on an empty input."""
+    if not measurements:
+        raise ValueError("no measurements to calibrate from")
+    A = np.stack([_design_row(cfg, size) for cfg, size, _ in measurements])
+    t = np.array([sec for _, _, sec in measurements], dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(A, t, rcond=None)
+    coef = np.maximum(coef, 0.0)   # latencies/inverse-bandwidths are physical
+    pred = A @ coef
+    rel = (pred - t) / np.maximum(t, 1e-12)
+    # A zero inverse-bandwidth coefficient means the size term was not
+    # resolvable from these points (overhead-dominated substrate): report the
+    # bandwidth as infinite, which latmodel handles (size/inf == 0).
+    return CalibrationResult(
+        l_k_host=float(coef[0]), l_k_fused=float(coef[1]),
+        link_latency=float(coef[2]),
+        link_bw=float(1.0 / coef[3]) if coef[3] > 0 else float("inf"),
+        staging_bw=float(2.0 / coef[4]) if coef[4] > 0 else float("inf"),
+        n_points=len(measurements),
+        rms_rel_err=float(np.sqrt(np.mean(rel ** 2))))
+
+
+def measurements_from_db(db, topo: str | None = None,
+                         collective: str = "sendrecv") -> list[Measurement]:
+    """Pingpong-style points from a TuneDB (the Eq. 1 calibration set)."""
+    return [(e.comm_config, e.msg_bytes, e.us_per_call * 1e-6)
+            for e in db.candidates(collective, topo)]
+
+
+def calibrate_from_db(db, topo: str | None = None,
+                      collective: str = "sendrecv") -> CalibrationResult:
+    return fit_latency_model(measurements_from_db(db, topo, collective))
+
+
+def model_vs_measured(result: CalibrationResult, db,
+                      topo: str | None = None,
+                      collective: str = "sendrecv") -> list[str]:
+    """Human-readable modeled-vs-measured report rows."""
+    hw = result.to_hardware_spec()
+    rows = []
+    for cfg, size, sec in measurements_from_db(db, topo, collective):
+        modeled = latmodel.pingping_latency(size, cfg, hw)
+        rows.append(
+            f"{collective} {size:>8d}B {cfg.mode.value:9s}/"
+            f"{cfg.scheduling.value:5s} measured={sec*1e6:9.1f}us "
+            f"modeled={modeled*1e6:9.1f}us ratio={modeled/max(sec,1e-12):5.2f}")
+    return rows

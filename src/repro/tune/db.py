@@ -1,0 +1,166 @@
+"""Persistent autotuning results store and the auto-config selection API.
+
+``TuneDB`` is a JSON-backed table of measured results keyed by
+(topology, collective, message size).  ``select_config`` is the single entry
+point every workload uses: given a collective, a message size, and the mesh it
+will run on, return the fastest measured ``CommConfig`` — or fall back to the
+paper's ``OPTIMIZED_CONFIG`` when the cache is cold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from pathlib import Path
+from typing import Optional, Sequence
+
+from repro.core.config import CommConfig, OPTIMIZED_CONFIG
+from repro.tune.space import config_from_dict, config_to_dict
+
+DB_VERSION = 1
+
+
+def default_db_path() -> Path:
+    """Resolve the TuneDB location (``REPRO_TUNE_DB`` env overrides)."""
+    env = os.environ.get("REPRO_TUNE_DB")
+    if env:
+        return Path(env)
+    return Path.cwd() / ".repro_tune" / "tunedb.json"
+
+
+def topology_key(mesh=None, n_devices: int | None = None) -> str:
+    """Stable key for "the substrate this measurement ran on".
+
+    ``platform:n_devices`` — enough to keep results from a CPU host mesh, an
+    8-chip v5e slice, and a 48-FPGA cluster from cross-contaminating.
+    """
+    if mesh is not None:
+        devs = list(mesh.devices.flat)
+        return f"{devs[0].platform}:{len(devs)}"
+    if n_devices is not None:
+        import jax
+        return f"{jax.devices()[0].platform}:{n_devices}"
+    import jax
+    return f"{jax.devices()[0].platform}:{jax.device_count()}"
+
+
+@dataclasses.dataclass
+class TuneEntry:
+    """One measured (collective, message size, config) data point."""
+    topo: str
+    collective: str
+    msg_bytes: int
+    config: dict                  # config_to_dict(CommConfig)
+    us_per_call: float
+    gbps: float = 0.0             # derived effective bandwidth
+
+    @property
+    def comm_config(self) -> CommConfig:
+        return config_from_dict(self.config)
+
+    def key(self) -> tuple:
+        return (self.topo, self.collective, self.msg_bytes)
+
+
+class TuneDB:
+    """In-memory table of TuneEntry, one *best* entry per (key, config).
+
+    ``add`` keeps every distinct config's measurement (so calibration can fit
+    across the whole space) but ``best``/``nearest`` answer with the fastest.
+    """
+
+    def __init__(self, entries: Sequence[TuneEntry] = ()):
+        self.entries: list[TuneEntry] = list(entries)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def add(self, entry: TuneEntry) -> None:
+        cfg_key = tuple(sorted(entry.config.items()))
+        for i, e in enumerate(self.entries):
+            if e.key() == entry.key() and tuple(sorted(e.config.items())) == cfg_key:
+                if entry.us_per_call < e.us_per_call:
+                    self.entries[i] = entry
+                return
+        self.entries.append(entry)
+
+    # ------------------------------------------------------------------
+    # Queries
+    # ------------------------------------------------------------------
+    def candidates(self, collective: str, topo: str | None = None
+                   ) -> list[TuneEntry]:
+        return [e for e in self.entries
+                if e.collective == collective and (topo is None or e.topo == topo)]
+
+    def best(self, collective: str, msg_bytes: int, topo: str | None = None
+             ) -> Optional[TuneEntry]:
+        """Fastest entry at exactly ``msg_bytes`` (None if not measured)."""
+        exact = [e for e in self.candidates(collective, topo)
+                 if e.msg_bytes == msg_bytes]
+        return min(exact, key=lambda e: e.us_per_call) if exact else None
+
+    def nearest(self, collective: str, msg_bytes: int, topo: str | None = None
+                ) -> Optional[TuneEntry]:
+        """Fastest entry at the measured message size closest (in log space)
+        to ``msg_bytes`` — message-size behaviour is scale-free, so log
+        distance is the right metric (1 KiB is "nearer" 4 KiB than 64 KiB)."""
+        cands = self.candidates(collective, topo)
+        if not cands:
+            return None
+        target = math.log(max(1, msg_bytes))
+        nearest_size = min({e.msg_bytes for e in cands},
+                           key=lambda s: abs(math.log(max(1, s)) - target))
+        return self.best(collective, nearest_size, topo)
+
+    # ------------------------------------------------------------------
+    # Persistence
+    # ------------------------------------------------------------------
+    def save(self, path: os.PathLike | str | None = None) -> Path:
+        path = Path(path) if path is not None else default_db_path()
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": DB_VERSION,
+                   "entries": [dataclasses.asdict(e) for e in self.entries]}
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload, indent=1, sort_keys=True))
+        tmp.replace(path)
+        return path
+
+    @classmethod
+    def load(cls, path: os.PathLike | str | None = None) -> "TuneDB":
+        path = Path(path) if path is not None else default_db_path()
+        if not path.exists():
+            return cls()
+        payload = json.loads(path.read_text())
+        if payload.get("version") != DB_VERSION:
+            return cls()
+        return cls([TuneEntry(**e) for e in payload.get("entries", ())])
+
+
+def select_config(collective: str, msg_bytes: int, mesh=None,
+                  db: TuneDB | None = None,
+                  path: os.PathLike | str | None = None,
+                  topo: str | None = None,
+                  fallback: CommConfig = OPTIMIZED_CONFIG) -> CommConfig:
+    """The autotuner's answer to "how should I communicate?".
+
+    Looks up the fastest measured config for (collective, msg_bytes) on this
+    topology; relaxes to other device counts on the SAME platform (a config
+    tuned on another platform's cost structure is worse than no tuning);
+    falls back to the paper's ``OPTIMIZED_CONFIG`` on a cold cache so callers
+    can unconditionally pass ``comm_cfg="auto"``.
+    """
+    if db is None:
+        db = TuneDB.load(path)
+    if topo is None:
+        topo = topology_key(mesh) if mesh is not None else topology_key()
+    platform = topo.split(":", 1)[0]
+    entry = (db.best(collective, msg_bytes, topo)
+             or db.nearest(collective, msg_bytes, topo))
+    if entry is None:
+        same_platform = TuneDB([e for e in db.entries
+                                if e.topo.split(":", 1)[0] == platform])
+        entry = same_platform.nearest(collective, msg_bytes, None)
+    if entry is None:
+        return fallback
+    return entry.comm_config

@@ -1,0 +1,251 @@
+"""Measured configuration sweeps — the b_eff synthetic benchmark, automated.
+
+For every (collective, message size, candidate ``CommConfig``) triple the
+engine builds the real SPMD program on the running mesh, times it with warmup
+(wall clock, ``block_until_ready``), and records the result in a
+:class:`~repro.tune.db.TuneDB`.  Scheduling is honored the way the runtime
+honors it: fused configs time K ops inside ONE compiled program (one host
+dispatch amortized over the loop), host-scheduled configs block on every call
+— the same methodology as ``benchmarks/b_eff.py``.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.tune.sweep --fast            # smoke sweep
+    PYTHONPATH=src python -m repro.tune.sweep --sizes 1024,65536 \
+        --collectives all_reduce,sendrecv --out .repro_tune/tunedb.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from functools import partial
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.config import CommConfig, Scheduling
+from repro.tune import space as tune_space
+from repro.tune.db import TuneDB, TuneEntry, default_db_path, topology_key
+
+# Message sizes (bytes per device) swept by default — the paper's Fig. 4 spans
+# 64 B .. 4 MiB; host-CPU meshes get a truncated range to keep compiles sane.
+FULL_SIZES = (1 << 10, 1 << 14, 1 << 17, 1 << 20)
+FAST_SIZES = (1 << 10, 1 << 14)
+
+SWEEPABLE = ("sendrecv", "all_reduce", "all_gather", "reduce_scatter",
+             "multi_neighbor")
+
+
+# ----------------------------------------------------------------------
+# Microbenchmark program builders
+# ----------------------------------------------------------------------
+
+def _payload_elems(msg_bytes: int, n: int) -> int:
+    """float32 elements per device, padded to a multiple of the mesh size so
+    reduce-scatter/all-to-all constraints hold for every collective."""
+    elems = max(n, msg_bytes // 4)
+    return elems + (-elems) % n
+
+
+def _build_op(collective: str, comm, cfg: CommConfig) -> Callable:
+    """Per-device body (x -> x-shaped array) exercising one collective op."""
+    from jax import numpy as jnp
+    from repro.core import collectives
+
+    if collective == "sendrecv":
+        def op(x):
+            return collectives.sendrecv(x, comm.ring_perm(), comm, cfg)
+    elif collective == "all_reduce":
+        def op(x):
+            return collectives.all_reduce(x, comm, cfg) / comm.size
+    elif collective == "all_gather":
+        def op(x):
+            y = collectives.all_gather(x, comm, cfg, axis=0)
+            # keep x's shape but depend on the whole gathered result so the
+            # collective cannot be dead-code-eliminated
+            return x + 0.0 * jnp.sum(y)
+    elif collective == "reduce_scatter":
+        def op(x):
+            y = collectives.reduce_scatter(x, comm, cfg)
+            return x + 0.0 * jnp.sum(y)
+    elif collective == "multi_neighbor":
+        # 4-neighbor halo pattern (ring distance ±1, ±2) — the SWE exchange.
+        def op(x):
+            rounds = [comm.ring_perm(1), comm.reverse_ring_perm(1),
+                      comm.ring_perm(2), comm.reverse_ring_perm(2)]
+            outs = collectives.multi_neighbor_exchange(
+                [x, x, x, x], rounds, comm, cfg)
+            return sum(outs) / len(outs)
+    else:
+        raise ValueError(f"unknown collective {collective!r} "
+                         f"(sweepable: {SWEEPABLE})")
+    return op
+
+
+def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
+                  warmup: int = 1, reps: int = 3, inner: int = 8) -> float:
+    """Seconds per collective op under the config's scheduling discipline."""
+    import jax
+    from jax import numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+
+    axis = mesh.axis_names[0]
+    n = mesh.shape[axis]
+    elems = _payload_elems(msg_bytes, n)
+    x = jnp.zeros((n, elems), jnp.float32)
+
+    single = jax.jit(compat.shard_map(
+        lambda xs: op(xs[0])[None], mesh=mesh,
+        in_specs=P(axis), out_specs=P(axis), check_vma=False))
+
+    if cfg.scheduling == Scheduling.FUSED:
+        def many(xs):
+            for _ in range(inner):
+                xs = compat.shard_map(
+                    lambda v: op(v[0])[None], mesh=mesh,
+                    in_specs=P(axis), out_specs=P(axis), check_vma=False)(xs)
+            return xs
+        fn = jax.jit(many)
+        for _ in range(warmup):
+            x = jax.block_until_ready(fn(x))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            x = fn(x)
+        jax.block_until_ready(x)
+        return (time.perf_counter() - t0) / (reps * inner)
+
+    # Host scheduling: one dispatch per op, host blocks between dispatches.
+    for _ in range(warmup):
+        x = jax.block_until_ready(single(x))
+    t0 = time.perf_counter()
+    for _ in range(reps * inner):
+        x = jax.block_until_ready(single(x))
+    return (time.perf_counter() - t0) / (reps * inner)
+
+
+# ----------------------------------------------------------------------
+# Sweep driver
+# ----------------------------------------------------------------------
+
+def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
+              sizes: Sequence[int] | None = None, fast: bool = False,
+              db: TuneDB | None = None, max_configs: int | None = None,
+              reps: int = 3, inner: int = 8,
+              log: Callable[[str], None] | None = None) -> TuneDB:
+    """Measure every candidate config and return the populated TuneDB."""
+    import jax
+    from repro import compat
+    from repro.core.communicator import Communicator
+
+    if mesh is None:
+        mesh = compat.make_mesh((jax.device_count(),), ("x",))
+    if sizes is None:
+        sizes = FAST_SIZES if fast else FULL_SIZES
+    if db is None:
+        db = TuneDB()
+    if fast:
+        reps, inner = min(reps, 2), min(inner, 4)
+    log = log or (lambda s: None)
+
+    axis = mesh.axis_names[0]
+    comm = Communicator.from_mesh(mesh, axis)
+    topo = topology_key(mesh)
+
+    for coll in collectives:
+        cands = tune_space.enumerate_configs(coll, fast=fast)
+        if max_configs is not None:
+            cands = cands[:max_configs]
+        log(f"[{topo}] {coll}: {len(cands)} configs x {len(sizes)} sizes")
+        for msg_bytes in sizes:
+            for i, cfg in enumerate(cands):
+                try:
+                    op = _build_op(coll, comm, cfg)
+                    sec = _time_program(op, mesh, msg_bytes, cfg,
+                                        reps=reps, inner=inner)
+                except Exception as e:  # noqa: BLE001 — skip unrunnable combos
+                    log(f"  skip {coll}/{msg_bytes}B cfg{i}: "
+                        f"{type(e).__name__}: {e}")
+                    continue
+                db.add(TuneEntry(
+                    topo=topo, collective=coll, msg_bytes=int(msg_bytes),
+                    config=tune_space.config_to_dict(cfg),
+                    us_per_call=sec * 1e6,
+                    gbps=msg_bytes / sec / 1e9))
+            best = db.best(coll, msg_bytes, topo)
+            if best is not None:
+                log(f"  {coll:15s} {msg_bytes:>8d}B best "
+                    f"{best.us_per_call:9.1f} us  ({best.gbps:6.3f} GB/s)  "
+                    f"{best.config['mode']}/{best.config['scheduling']}"
+                    f"/{best.config['algorithm']}")
+    return db
+
+
+# ----------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------
+
+def _ensure_devices(n: int) -> None:
+    """Re-exec with N host CPU devices when launched on a single device."""
+    if os.environ.get("REPRO_TUNE_NO_REEXEC"):
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+        os.environ["REPRO_TUNE_NO_REEXEC"] = "1"
+        os.execv(sys.executable,
+                 [sys.executable, "-m", "repro.tune.sweep"] + sys.argv[1:])
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune.sweep",
+        description="Measured CommConfig sweep -> TuneDB JSON.")
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke sweep: corner configs, small sizes")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="host CPU devices to force when single-device")
+    ap.add_argument("--collectives", default=",".join(SWEEPABLE),
+                    help=f"comma list from {SWEEPABLE}")
+    ap.add_argument("--sizes", default=None,
+                    help="comma list of message sizes in bytes")
+    ap.add_argument("--max-configs", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help=f"TuneDB path (default {default_db_path()})")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit latmodel constants from the sweep and report")
+    args = ap.parse_args(argv)
+
+    _ensure_devices(args.devices)
+    import jax  # after XLA_FLAGS is settled
+
+    try:
+        sizes = ([int(s) for s in args.sizes.split(",")]
+                 if args.sizes else None)
+    except ValueError:
+        ap.error(f"--sizes must be comma-separated integers, got {args.sizes!r}")
+    colls = [c.strip() for c in args.collectives.split(",") if c.strip()]
+    unknown = [c for c in colls if c not in SWEEPABLE]
+    if unknown:
+        ap.error(f"unknown collective(s) {unknown}; sweepable: {SWEEPABLE}")
+
+    db = TuneDB.load(args.out)
+    db = run_sweep(collectives=colls, sizes=sizes, fast=args.fast, db=db,
+                   max_configs=args.max_configs, log=lambda s: print(s, flush=True))
+    path = db.save(args.out)
+    print(f"wrote {len(db)} entries -> {path}")
+
+    if args.calibrate:
+        from repro.tune.calibrate import calibrate_from_db, model_vs_measured
+        result = calibrate_from_db(db)
+        print(result.summary())
+        for row in model_vs_measured(result, db):
+            print("  " + row)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,13 +38,14 @@ def test_hlo_analysis_scan_trip_counts():
 def test_hlo_analysis_counts_collectives_in_scans():
     out = run_multidevice("""
 import jax, jax.numpy as jnp
+from repro import compat
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.launch.hlo_analysis import analyze_hlo
 
 mesh = jax.make_mesh((8,), ("x",))
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+@partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
          check_vma=False)
 def f(xs):
     def body(c, _):
@@ -64,6 +65,7 @@ print("HLO COLLECTIVES OK")
 
 def test_latency_model_eq1_properties():
     """Eq. 1 invariants from the paper, under the hypothesis strategy."""
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
     from repro.core import latmodel
     from repro.core.config import (CommConfig, CommMode, Scheduling, V5E)
@@ -91,6 +93,7 @@ def test_scheduler_runners_equivalent():
     """Host-scheduled and fused runners must produce identical numerics; the
     host runner pays one dispatch per phase (the paper's l_k accounting)."""
     import jax.numpy as jnp
+    from repro import compat
     from repro.core import scheduler
 
     phases = [
@@ -112,6 +115,7 @@ def test_scheduler_runners_equivalent():
 def test_streaming_pipelined_consume():
     out = run_multidevice("""
 import jax, numpy as np, jax.numpy as jnp
+from repro import compat
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.core import CommConfig, Communicator, streaming
@@ -121,7 +125,7 @@ comm = Communicator.from_mesh(mesh, "x")
 cfg = CommConfig(chunk_bytes=512)
 x = np.random.RandomState(0).randn(8, 256).astype(np.float32)
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P("x"), out_specs=(P("x"), P("x")))
+@partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=(P("x"), P("x")))
 def f(xs):
     total, received = streaming.pipelined_consume(
         xs[0], comm.ring_perm(), "x", cfg,

@@ -128,6 +128,7 @@ def test_quant_roundtrip_sweep(n, dtype):
 
 def test_quant_property_scale_bound():
     """Property: |dequant(quant(x)) - x| <= scale/2 per block, any input."""
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
     from repro.kernels.quant.ref import quantize_ref, dequantize_ref
 

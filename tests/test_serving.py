@@ -13,6 +13,7 @@ def test_prefill_matches_forward(arch):
     out = run_multidevice("""
 import dataclasses
 import jax, numpy as np, jax.numpy as jnp
+from repro import compat
 from jax.sharding import PartitionSpec as P
 from repro.configs.registry import get_smoke_config
 from repro.core.config import CommConfig
@@ -37,7 +38,7 @@ if cfg.family == "audio":
     batch["frames"] = jnp.asarray(rng.randn(B, S, cfg.frontend_dim), jnp.float32)
 state = pre_fn(sess.params, batch)
 vocab_sharded = cfg.vocab_size % 4 == 0
-fwd = jax.jit(jax.shard_map(
+fwd = jax.jit(compat.shard_map(
     lambda p, b: transformer.forward(p, b, rt, train=False).logits,
     mesh=mesh,
     in_specs=(sess.param_spec, jax.tree.map(lambda _: P(("data",)), batch)),
@@ -57,6 +58,7 @@ def test_decode_matches_extended_prefill():
     out = run_multidevice("""
 import dataclasses
 import jax, numpy as np, jax.numpy as jnp
+from repro import compat
 from repro.configs.registry import get_smoke_config
 from repro.core.config import CommConfig
 from repro.launch import setup, input_specs as isp

@@ -41,6 +41,7 @@ def test_partition_schedule_valid():
 
 
 def test_hypothesis_partition_balance():
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
     from repro.swe.partition import _rcb
 

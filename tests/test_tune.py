@@ -1,0 +1,305 @@
+"""Autotuner subsystem: search space, TuneDB, calibration, selection, and
+the latmodel regressions the tuner's cost model depends on."""
+import dataclasses
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from helpers import run_multidevice
+
+
+# ----------------------------------------------------------------------
+# Search space
+# ----------------------------------------------------------------------
+
+def test_search_space_pruning_matches_commconfig_validation():
+    """enumerate_configs must contain exactly the combos CommConfig accepts
+    (after canonicalizing fields the collective never reads)."""
+    from repro.core.config import CommConfig
+    from repro.tune.space import DEFAULT_AXES, enumerate_configs, space_size
+
+    names = list(DEFAULT_AXES)
+    valid, invalid = set(), 0
+    for combo in itertools.product(*(DEFAULT_AXES[n] for n in names)):
+        try:
+            valid.add(CommConfig(**dict(zip(names, combo))))
+        except ValueError:
+            invalid += 1
+    assert invalid > 0, "the axes should include invalid combos to prune"
+    assert valid, "the axes should include valid combos"
+
+    # No collective filter: enumeration = validation minus window-dedup.
+    enumerated = set(enumerate_configs(collective=None))
+    assert enumerated <= valid
+    for cfg in enumerated:
+        CommConfig(**dataclasses.asdict(cfg))   # re-validates
+    # The unordered-transport window dedup is the only collapse applied.
+    from repro.core.config import Transport
+    collapsed = {dataclasses.replace(c, window=CommConfig().window)
+                 if c.transport == Transport.UNORDERED else c for c in valid}
+    assert enumerated == collapsed
+    assert len(enumerated) < space_size()
+
+
+def test_search_space_collective_canonicalization():
+    from repro.tune.space import enumerate_configs
+    # sendrecv never reads algorithm/compression -> all candidates share the
+    # defaults for those fields, and the space is strictly smaller.
+    p2p = enumerate_configs("sendrecv")
+    assert all(c.algorithm == "native" for c in p2p)
+    assert len(p2p) < len(enumerate_configs("all_reduce"))
+
+
+def test_config_dict_roundtrip():
+    from repro.tune.space import (config_from_dict, config_to_dict,
+                                  enumerate_configs)
+    for cfg in enumerate_configs("all_reduce"):
+        wire = json.loads(json.dumps(config_to_dict(cfg)))
+        assert config_from_dict(wire) == cfg
+
+
+# ----------------------------------------------------------------------
+# TuneDB
+# ----------------------------------------------------------------------
+
+def _entry(msg_bytes, us, topo="cpu:8", coll="all_reduce", **cfg_kw):
+    from repro.core.config import CommConfig
+    from repro.tune.db import TuneEntry
+    from repro.tune.space import config_to_dict
+    return TuneEntry(topo=topo, collective=coll, msg_bytes=msg_bytes,
+                     config=config_to_dict(CommConfig(**cfg_kw)),
+                     us_per_call=us, gbps=msg_bytes / us / 1e3)
+
+
+def test_tunedb_roundtrip_and_nearest(tmp_path):
+    from repro.tune.db import TuneDB
+    db = TuneDB()
+    db.add(_entry(1024, 50.0))
+    db.add(_entry(1024, 20.0, window=8))          # faster config, same key
+    db.add(_entry(1 << 20, 900.0))
+    path = tmp_path / "tunedb.json"
+    db.save(path)
+    back = TuneDB.load(path)
+    assert len(back) == len(db) == 3
+
+    assert back.best("all_reduce", 1024, "cpu:8").us_per_call == 20.0
+    # nearest in LOG space: 16 KiB is closer to 1 KiB than to 1 MiB
+    near = back.nearest("all_reduce", 16 << 10, "cpu:8")
+    assert near.msg_bytes == 1024 and near.us_per_call == 20.0
+    assert back.nearest("all_reduce", 700 << 10, "cpu:8").msg_bytes == 1 << 20
+    # unknown collective / topo -> None
+    assert back.best("all_to_all", 1024, "cpu:8") is None
+    assert back.nearest("all_reduce", 1024, "tpu:64") is None
+
+
+def test_tunedb_add_keeps_fastest_per_config():
+    from repro.tune.db import TuneDB
+    db = TuneDB()
+    db.add(_entry(1024, 50.0))
+    db.add(_entry(1024, 80.0))     # same config, slower rerun -> ignored
+    db.add(_entry(1024, 30.0))     # same config, faster rerun -> replaces
+    assert len(db) == 1
+    assert db.best("all_reduce", 1024).us_per_call == 30.0
+
+
+def test_select_config_cold_cache_falls_back_to_optimized(tmp_path):
+    from repro.core.config import OPTIMIZED_CONFIG
+    from repro.tune.db import TuneDB, select_config
+    assert select_config("all_reduce", 1 << 16,
+                         db=TuneDB()) == OPTIMIZED_CONFIG
+    # missing file behaves the same
+    assert select_config("all_reduce", 1 << 16,
+                         path=tmp_path / "nope.json") == OPTIMIZED_CONFIG
+
+
+def test_select_config_never_crosses_platforms():
+    """A config tuned on another platform's cost structure must not beat the
+    OPTIMIZED_CONFIG fallback."""
+    from repro.core.config import OPTIMIZED_CONFIG
+    from repro.tune.db import TuneDB, select_config
+    db = TuneDB()
+    db.add(_entry(1024, 10.0, topo="cpu:8", window=8))
+    # same platform, different device count -> relaxes to it
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:4").window == 8
+    # different platform -> fallback, never the cpu-tuned entry
+    assert select_config("all_reduce", 1024, db=db,
+                         topo="tpu:8") == OPTIMIZED_CONFIG
+
+
+def test_communicator_auto_config_keys_on_comm_size():
+    """Communicator.auto_config looks up THIS communicator's size, not the
+    whole process's device count."""
+    from repro.core.communicator import Communicator
+    from repro.tune.db import TuneDB, topology_key
+    import repro.tune.db as dbmod
+
+    comm = Communicator(("data",), (4,))
+    topo4 = topology_key(n_devices=4)          # e.g. cpu:4 under pytest
+    db = TuneDB()
+    db.add(_entry(1024, 10.0, topo=topo4, window=8))
+    path = dbmod.default_db_path()
+    seen = {}
+    orig = dbmod.select_config
+
+    def spy(collective, msg_bytes, **kw):
+        seen.update(kw)
+        return orig(collective, msg_bytes, db=db, topo=kw.get("topo"))
+
+    dbmod.select_config = spy
+    try:
+        import repro.tune
+        repro.tune.select_config, orig_pkg = spy, repro.tune.select_config
+        try:
+            cfg = comm.auto_config("all_reduce", 1024)
+        finally:
+            repro.tune.select_config = orig_pkg
+    finally:
+        dbmod.select_config = orig
+    assert seen.get("topo") == topo4
+    assert cfg.window == 8
+
+
+def test_select_config_returns_measured_best():
+    from repro.tune.db import TuneDB, select_config, topology_key
+    topo = topology_key()   # this process's topology (cpu:1 under pytest)
+    db = TuneDB()
+    db.add(_entry(1024, 50.0, topo=topo))
+    db.add(_entry(1024, 10.0, topo=topo, window=8))
+    cfg = select_config("all_reduce", 1024, db=db)
+    assert cfg.window == 8
+
+
+# ----------------------------------------------------------------------
+# Calibration
+# ----------------------------------------------------------------------
+
+def test_calibration_recovers_known_constants():
+    """Fitting on synthetic Eq. 1 timings must recover the generating
+    HardwareSpec constants."""
+    from repro.core import latmodel
+    from repro.core.config import (CommConfig, CommMode, HardwareSpec,
+                                   Scheduling)
+    from repro.tune.calibrate import fit_latency_model
+
+    hw = HardwareSpec(host_dispatch=25e-6, fused_dispatch=0.8e-6,
+                      ici_latency=1.5e-6, ici_bw=40e9, hbm_bw=600e9)
+    meas = []
+    for mode in CommMode:
+        for sched in Scheduling:
+            for size in (1 << 10, 1 << 14, 1 << 17, 1 << 20):
+                cfg = CommConfig(mode=mode, scheduling=sched)
+                meas.append((cfg, size,
+                             latmodel.pingping_latency(size, cfg, hw)))
+    r = fit_latency_model(meas)
+    assert r.l_k_host == pytest.approx(hw.host_dispatch, rel=0.15)
+    assert r.l_k_fused == pytest.approx(hw.fused_dispatch, rel=0.25)
+    assert r.link_bw == pytest.approx(hw.ici_bw, rel=0.15)
+    assert r.staging_bw == pytest.approx(hw.hbm_bw, rel=0.15)
+    assert r.rms_rel_err < 0.05
+
+    # and the calibrated spec reproduces the measurements through latmodel
+    cal = r.to_hardware_spec(hw)
+    for cfg, size, sec in meas:
+        assert latmodel.pingping_latency(size, cfg, cal) == pytest.approx(
+            sec, rel=0.1)
+
+
+def test_calibration_report_and_db_path():
+    from repro.core.config import CommConfig, CommMode, Scheduling, V5E
+    from repro.core import latmodel
+    from repro.tune.calibrate import calibrate_from_db, model_vs_measured
+    from repro.tune.db import TuneDB, TuneEntry
+    from repro.tune.space import config_to_dict
+
+    db = TuneDB()
+    for mode in CommMode:
+        for sched in Scheduling:
+            for size in (1 << 12, 1 << 16, 1 << 20):
+                cfg = CommConfig(mode=mode, scheduling=sched)
+                sec = latmodel.pingping_latency(size, cfg, V5E)
+                db.add(TuneEntry(topo="cpu:8", collective="sendrecv",
+                                 msg_bytes=size,
+                                 config=config_to_dict(cfg),
+                                 us_per_call=sec * 1e6))
+    r = calibrate_from_db(db)
+    assert "l_k(host)" in r.summary()
+    rows = model_vs_measured(r, db)
+    assert len(rows) == len(db)
+    assert all("ratio=" in row for row in rows)
+
+
+def test_fit_latency_model_empty_raises():
+    from repro.tune.calibrate import fit_latency_model
+    with pytest.raises(ValueError):
+        fit_latency_model([])
+
+
+# ----------------------------------------------------------------------
+# Latmodel regressions (the tuner's cost model)
+# ----------------------------------------------------------------------
+
+def test_buffered_peak_bw_formula():
+    """Series-bandwidth law: (1/bw_link + 1/(bw_mem/2))^-1, and the paper's
+    own numbers: 12.5 GB/s link + 14 GB/s mem -> 6.6 GB/s."""
+    import dataclasses as dc
+    from repro.core import latmodel
+    from repro.core.config import V5E
+    expect = 1.0 / (1.0 / V5E.ici_bw + 2.0 / V5E.hbm_bw)
+    assert latmodel.buffered_peak_bw(V5E) == pytest.approx(expect)
+    fpga = dc.replace(V5E, ici_bw=12.5e9, hbm_bw=2 * 14e9)
+    assert latmodel.buffered_peak_bw(fpga) == pytest.approx(6.6e9, rel=0.01)
+
+
+def test_stall_fraction_monotone_in_l_k():
+    """More dispatch latency can only stall the pipeline more (paper Fig. 9:
+    the MPI baseline's 30 us l_k is what produces the 75-80% stall)."""
+    import dataclasses as dc
+    from repro.core import latmodel
+    from repro.core.config import BASELINE_CONFIG, V5E
+    w = latmodel.SWEWorkload(
+        e_total=48000, e_core=5600, e_send=270, e_recv=270, d_ext=0,
+        l_pipe=100, n_max=4, flop_per_element=260.0, freq=256e6,
+        msg_bytes=810)
+    stalls = [latmodel.stall_fraction(
+        w, BASELINE_CONFIG, dc.replace(V5E, host_dispatch=lk))
+        for lk in (1e-6, 5e-6, 15e-6, 30e-6, 60e-6)]
+    assert all(a <= b for a, b in zip(stalls, stalls[1:]))
+    assert stalls[-1] > stalls[0]
+    # throughput moves the other way
+    thr = [latmodel.eq2_throughput(
+        w, BASELINE_CONFIG, dc.replace(V5E, host_dispatch=lk))
+        for lk in (1e-6, 30e-6, 60e-6)]
+    assert thr[0] >= thr[1] >= thr[2]
+
+
+# ----------------------------------------------------------------------
+# Measured sweep -> selection -> SWE driver, end to end (8 devices)
+# ----------------------------------------------------------------------
+
+def test_sweep_select_and_auto_driver_e2e(tmp_path):
+    out = run_multidevice(f"""
+import jax
+from repro import compat
+from repro.tune import TuneDB, run_sweep, select_config
+from repro.core.config import CommConfig
+
+mesh = compat.make_mesh((8,), ("x",))
+db = run_sweep(mesh=mesh, collectives=("sendrecv",), sizes=(1024,),
+               fast=True, max_configs=2, reps=1, inner=2)
+assert len(db) >= 1, "sweep produced no entries"
+path = db.save(r"{tmp_path / 'tunedb.json'}")
+cfg = select_config("sendrecv", 1024, mesh=mesh, path=path)
+assert isinstance(cfg, CommConfig)
+
+# the SWE driver consumes the same TuneDB via comm_cfg="auto"
+from repro.swe import driver
+dmesh = compat.make_mesh((8,), ("data",))
+sim = driver.build_simulation(400, dmesh, "auto", tune_db_path=path)
+assert isinstance(sim.comm_cfg, CommConfig)
+s = driver.make_sim_runner(sim, 3)(sim.state, 0.0)
+jax.block_until_ready(s)
+print("TUNE E2E OK")
+""")
+    assert "TUNE E2E OK" in out
