@@ -1,0 +1,113 @@
+"""Compare two ``BENCH_comm.json`` files and flag latency regressions.
+
+The benchmark driver (``python -m benchmarks.run``) writes machine-readable
+rows; this tool closes the loop across PRs: regenerate the JSON, diff it
+against the committed one, and fail (exit non-zero) when any latency row got
+more than ``--threshold`` (default 20 %) slower.  ``--report-only`` prints
+the same report but always exits 0 — the CI mode, since host-CPU timings are
+noisy; the hard gate is for local/perf-lab use.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run --json=BENCH_new.json
+    PYTHONPATH=src python -m benchmarks.diff --old BENCH_comm.json \
+        --new BENCH_new.json [--threshold 0.2] [--report-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Sequence
+
+# Rows whose us_per_call is not a latency (ratios, byte counts, op counts):
+# a bigger number is not a regression there.
+_NON_LATENCY_PREFIXES = ("fig3_", "table1_", "fig11_speedup")
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != "repro-bench-v1":
+        raise ValueError(f"{path}: not a repro-bench-v1 file")
+    return payload.get("rows", {})
+
+
+def is_latency_row(name: str) -> bool:
+    return not (name.endswith("_ERROR")
+                or any(name.startswith(p) for p in _NON_LATENCY_PREFIXES))
+
+
+def compare(old_rows: dict, new_rows: dict, threshold: float = 0.2):
+    """Returns (regressions, improvements, missing) over latency rows.
+
+    A regression is new > old * (1 + threshold); rows absent from either
+    side, zero-valued baselines, and non-latency rows are skipped.
+    """
+    regressions, improvements, missing = [], [], []
+    for name, old in sorted(old_rows.items()):
+        if not is_latency_row(name):
+            continue
+        old_us = float(old.get("us_per_call", 0.0))
+        if old_us <= 0.0:
+            continue
+        new = new_rows.get(name)
+        if new is None:
+            missing.append(name)
+            continue
+        new_us = float(new.get("us_per_call", 0.0))
+        ratio = new_us / old_us
+        if ratio > 1.0 + threshold:
+            regressions.append((name, old_us, new_us, ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((name, old_us, new_us, ratio))
+    return regressions, improvements, missing
+
+
+def report(regressions, improvements, missing, threshold: float,
+           out=None) -> None:
+    out = out if out is not None else sys.stdout
+    for name, old_us, new_us, ratio in regressions:
+        print(f"REGRESSION {name}: {old_us:.3f} -> {new_us:.3f} us "
+              f"({ratio:.2f}x)", file=out)
+    for name, old_us, new_us, ratio in improvements:
+        print(f"improved   {name}: {old_us:.3f} -> {new_us:.3f} us "
+              f"({ratio:.2f}x)", file=out)
+    for name in missing:
+        print(f"missing    {name}: no row in the new results", file=out)
+    print(f"{len(regressions)} regression(s) > {threshold * 100:.0f}%, "
+          f"{len(improvements)} improvement(s), {len(missing)} missing",
+          file=out)
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.diff",
+        description="Diff two BENCH_comm.json files; non-zero exit on "
+                    "latency regressions.")
+    ap.add_argument("--old", default="BENCH_comm.json",
+                    help="baseline JSON (default: the committed one)")
+    ap.add_argument("--new", required=True, help="freshly generated JSON")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative slowdown that counts as a regression")
+    ap.add_argument("--report-only", action="store_true",
+                    help="print the report but always exit 0 (CI mode)")
+    args = ap.parse_args(argv)
+
+    try:
+        old_rows = load_rows(args.old)
+        new_rows = load_rows(args.new)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"benchmarks.diff: {e}", file=sys.stderr)
+        return 0 if args.report_only else 2
+
+    regressions, improvements, missing = compare(
+        old_rows, new_rows, args.threshold)
+    report(regressions, improvements, missing, args.threshold)
+    if regressions and not args.report_only:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

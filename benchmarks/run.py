@@ -57,6 +57,13 @@ def main() -> None:
             print(f"{label}_ERROR,0,{type(e).__name__}:{e}")
             results[f"{label}_ERROR"] = {
                 "us_per_call": 0.0, "derived": f"{type(e).__name__}:{e}"}
+    # Overlap report: the Eq. 2 overlap term's predicted fused->overlapped
+    # speedup next to the measured one (rows from swe_scaling.fig11).
+    overlap_rows = {k: v for k, v in results.items()
+                    if k.startswith("fig11_speedup")}
+    for name, row in sorted(overlap_rows.items()):
+        print(f"# overlap {name}: measured {row['us_per_call']:.2f}x, "
+              f"{row['derived']}", file=sys.stderr)
     if json_path:
         # Merge into any existing file so a partial (--only=...) run updates
         # its rows without destroying the rest of the benchmark record.

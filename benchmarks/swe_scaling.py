@@ -6,9 +6,14 @@
   multi-device wall time on this host's CPU devices at small scale.
 - fig10 (strong scaling, fixed meshes): modeled throughput vs partitions,
   annotated with N_max — reproducing the step-wise degradation when extra
-  neighbors enter the latency term.
+  neighbors enter the latency term.  The overlapped series uses the Eq. 2
+  overlap term (latmodel.eq2_throughput_overlap): the knee moves to higher
+  partition counts because L_comm hides behind interior compute.
+- fig11: overlap predicted-vs-measured — wall time of the fused vs the
+  overlapped (double-buffered, interior/boundary split) step on this host's
+  CPU devices next to the model's predicted speedup.
 - table1: "resource utilization" analogue — compiled-program stats of the
-  SWE step for the three configurations.
+  SWE step for the configurations.
 """
 from __future__ import annotations
 
@@ -17,13 +22,14 @@ import time
 import numpy as np
 
 from repro.core import latmodel
-from repro.core.config import (BASELINE_CONFIG, CommConfig, CommMode,
-                               Scheduling, Transport, V5E)
+from repro.core.config import (BASELINE_CONFIG, OVERLAPPED_CONFIG, CommConfig,
+                               CommMode, Scheduling, Transport, V5E)
 
 ACCL_UDP = CommConfig(mode=CommMode.STREAMING, scheduling=Scheduling.FUSED,
                       transport=Transport.UNORDERED)
 ACCL_TCP = CommConfig(mode=CommMode.STREAMING, scheduling=Scheduling.FUSED,
                       transport=Transport.ORDERED, window=8)
+ACCL_OVERLAP = OVERLAPPED_CONFIG
 
 # Host-MPI baseline: buffered + host scheduling (l_k = 30 µs twice + copy).
 BASE = BASELINE_CONFIG
@@ -57,13 +63,14 @@ def fig9_weak_scaling():
         e_total = 6000 * parts
         w = _workload(e_total, parts)
         for name, cfg in (("base_mpi", BASE), ("accl_udp", ACCL_UDP),
-                          ("accl_tcp", ACCL_TCP)):
+                          ("accl_tcp", ACCL_TCP),
+                          ("accl_overlap", ACCL_OVERLAP)):
             if parts == 1:
                 thr = w.freq * w.flop_per_element  # no comm at all
                 stall = 0.0
             else:
-                thr = latmodel.eq2_throughput(w, cfg, V5E) * parts
-                stall = latmodel.stall_fraction(w, cfg, V5E)
+                thr = latmodel.eq2_throughput_overlap(w, cfg, V5E) * parts
+                stall = latmodel.stall_fraction_overlap(w, cfg, V5E)
             rows.append((f"fig9_{name}_p{parts}",
                          1e6 * e_total * w.flop_per_element / thr,
                          f"{thr/1e12:.3f}TFLOPs_stall{stall:.2f}"))
@@ -75,10 +82,50 @@ def fig10_strong_scaling():
     for e_total in (27_000, 108_000):
         for parts in (2, 4, 8, 16, 24, 32, 48):
             w = _workload(e_total, parts)
-            thr = latmodel.eq2_throughput(w, ACCL_UDP, V5E) * parts
-            rows.append((f"fig10_{e_total//1000}k_p{parts}",
-                         1e6 * e_total * w.flop_per_element / thr,
-                         f"{thr/1e12:.3f}TFLOPs_Nmax{w.n_max}"))
+            for name, cfg in (("", ACCL_UDP), ("_overlap", ACCL_OVERLAP)):
+                thr = latmodel.eq2_throughput_overlap(w, cfg, V5E) * parts
+                rows.append((f"fig10_{e_total//1000}k{name}_p{parts}",
+                             1e6 * e_total * w.flop_per_element / thr,
+                             f"{thr/1e12:.3f}TFLOPs_Nmax{w.n_max}"))
+    return rows
+
+
+def fig11_overlap_predicted_vs_measured():
+    """Fused vs overlapped SWE step: measured wall clock on this host's CPU
+    devices next to the Eq. 2 overlap-term prediction (same workload)."""
+    import jax
+    rows = []
+    n = jax.device_count()
+    if n < 2:
+        return [("fig11_overlap", 0.0, "skipped_1device")]
+    from repro.swe import driver
+    for parts in (2, 4, 8):
+        if parts > n:
+            break
+        dmesh = jax.make_mesh((parts,), ("data",))
+        measured = {}
+        w = None
+        for name, cfg in (("fused", ACCL_UDP), ("overlapped", ACCL_OVERLAP)):
+            sim = driver.build_simulation(600 * parts, dmesh, cfg)
+            run = driver.make_sim_runner(sim, n_inner=20)
+            s = jax.block_until_ready(run(sim.state, 0.0))   # compile+warm
+            t0 = time.perf_counter()
+            for _ in range(3):
+                s = run(s, 0.0)
+            jax.block_until_ready(s)
+            measured[name] = (time.perf_counter() - t0) / (3 * 20)
+            if w is None:
+                w = driver.build_workload(sim)
+        pred = {name: 1.0 / latmodel.eq2_throughput_overlap(w, cfg, V5E)
+                for name, cfg in (("fused", ACCL_UDP),
+                                  ("overlapped", ACCL_OVERLAP))}
+        pred_speedup = pred["fused"] / pred["overlapped"]
+        meas_speedup = measured["fused"] / measured["overlapped"]
+        for name in ("fused", "overlapped"):
+            rows.append((f"fig11_{name}_p{parts}", measured[name] * 1e6,
+                         "measured_us_per_step"))
+        rows.append((f"fig11_speedup_p{parts}", meas_speedup,
+                     f"predicted{pred_speedup:.2f}x"))
     return rows
 
 
@@ -117,7 +164,7 @@ def table1_resources():
     from repro.swe import driver
     dmesh = jax.make_mesh((jax.device_count(),), ("data",))
     for name, cfg in (("base", BASE), ("accl_udp", ACCL_UDP),
-                      ("accl_tcp", ACCL_TCP)):
+                      ("accl_tcp", ACCL_TCP), ("accl_overlap", ACCL_OVERLAP)):
         sim = driver.build_simulation(2000, dmesh, cfg)
         # lower one fused inner step
         run = driver.make_sim_runner(sim, n_inner=1)
@@ -137,4 +184,4 @@ def table1_resources():
 
 def run():
     return (fig9_weak_scaling() + fig10_strong_scaling() + fig9_measured()
-            + table1_resources())
+            + fig11_overlap_predicted_vs_measured() + table1_resources())

@@ -14,7 +14,8 @@ import jax
 import numpy as np
 
 from repro.core import latmodel
-from repro.core.config import BASELINE_CONFIG, CommConfig, V5E
+from repro.core.config import (BASELINE_CONFIG, OVERLAPPED_CONFIG, CommConfig,
+                               V5E)
 from repro.swe import driver
 
 
@@ -23,16 +24,17 @@ def main():
     ap.add_argument("--elements", type=int, default=2000)
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--comm", default="streaming",
-                    choices=("streaming", "baseline", "auto"),
+                    choices=("streaming", "overlapped", "baseline", "auto"),
                     help="halo-exchange config: the paper's streaming/baseline"
-                         " constants, or 'auto' = pick from the TuneDB sweep"
-                         " (python -m repro.tune.sweep)")
+                         " constants, 'overlapped' = double-buffered exchange"
+                         " with the interior/boundary split, or 'auto' = pick"
+                         " from the TuneDB sweep (python -m repro.tune.sweep)")
     args = ap.parse_args()
 
     n = jax.device_count()
     mesh = jax.make_mesh((n,), ("data",))
-    cfg = {"streaming": CommConfig(), "baseline": BASELINE_CONFIG,
-           "auto": "auto"}[args.comm]
+    cfg = {"streaming": CommConfig(), "overlapped": OVERLAPPED_CONFIG,
+           "baseline": BASELINE_CONFIG, "auto": "auto"}[args.comm]
     sim = driver.build_simulation(args.elements, mesh, cfg)
     print(f"comm config ({args.comm}): {sim.comm_cfg}")
     print(f"mesh: {sim.mesh.n_elements} elements over {n} partitions "
@@ -54,15 +56,17 @@ def main():
     print(f"mass conservation: {m0:.6f} -> {m1:.6f} "
           f"(drift {(m1-m0)/m0:.2e})")
 
-    # Eq. 2/3 model at the paper's scales
+    # Eq. 2/3 model (with the overlap term) at the paper's scales
     w = driver.build_workload(sim)
-    print("\nEq.2/3 model (this partitioning, v5e constants):")
+    print("\nEq.2/3 model + overlap term (this partitioning, v5e constants):")
     for name, cfg in (("MPI+PCIe baseline", BASELINE_CONFIG),
-                      ("ACCL-X streaming", CommConfig())):
-        thr = latmodel.eq2_throughput(w, cfg, V5E) * n
-        stall = latmodel.stall_fraction(w, cfg, V5E)
+                      ("ACCL-X streaming", CommConfig()),
+                      ("ACCL-X overlapped", OVERLAPPED_CONFIG)):
+        thr = latmodel.eq2_throughput_overlap(w, cfg, V5E) * n
+        stall = latmodel.stall_fraction_overlap(w, cfg, V5E)
         print(f"  {name:20s}: {thr/1e9:8.2f} GFLOP/s "
-              f"(pipeline stall {stall*100:.0f}%)")
+              f"(pipeline stall {stall*100:.0f}%, "
+              f"overlap {latmodel.overlap_fraction(cfg)*100:.0f}%)")
 
 
 if __name__ == "__main__":

@@ -21,25 +21,30 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.communicator import Communicator
-from repro.core.config import CommConfig, CommMode, Compression, Transport
+from repro.core.config import (CommConfig, CommMode, Compression, Scheduling,
+                               Transport)
 from repro.core import plugins, streaming
 
 
 def resolve_config(cfg, collective: str = "all_reduce",
                    msg_bytes: int = 1 << 20, mesh=None,
-                   db_path=None) -> CommConfig:
+                   db_path=None, hops: int | None = None) -> CommConfig:
     """Resolve a ``CommConfig | "auto" | None`` to a concrete config.
 
     ``"auto"`` asks the autotuner (:func:`repro.tune.select_config`) for the
     fastest *measured* config for this collective/size/topology, falling back
-    to ``OPTIMIZED_CONFIG`` on a cold cache.  Host-side only — call it before
-    tracing, never inside ``shard_map``.
+    to ``OPTIMIZED_CONFIG`` on a cold cache.  ``hops`` is the worst-case torus
+    hop distance of the communication pattern (``Communicator.torus_hops``) —
+    multi-hop edges prefer configs measured at the same distance (the paper's
+    direct-link vs Ethernet-switch distinction).  Host-side only — call it
+    before tracing, never inside ``shard_map``.
     """
     if isinstance(cfg, CommConfig):
         return cfg
     if cfg is None or cfg == "auto":
         from repro.tune import select_config
-        return select_config(collective, msg_bytes, mesh=mesh, path=db_path)
+        return select_config(collective, msg_bytes, mesh=mesh, path=db_path,
+                             hops=hops)
     raise TypeError(f"comm config must be CommConfig or 'auto', got {cfg!r}")
 
 
@@ -84,7 +89,16 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
     ``payloads[r]`` is this rank's message for round ``r`` (ranks not sending
     in a round pass a dummy of the same shape).  Unordered transport leaves
     rounds independent (they overlap); ordered transport chains them.
+    Overlapped scheduling routes through the double-buffered engine: rounds
+    alternate between two buffers and the ordered ack chain runs per buffer,
+    so a consumer can fold one buffer while the other is in flight.
     """
+    if cfg.scheduling == Scheduling.OVERLAPPED:
+        for perm in rounds:
+            comm.neighbor_perms(perm)
+        _, received = streaming.double_buffered_exchange(
+            payloads, rounds, comm.axis, cfg)
+        return received
     received = []
     prev = None
     for r, (payload, perm) in enumerate(zip(payloads, rounds)):

@@ -6,6 +6,10 @@ Mirrors the configuration surface of the paper:
 - ``scheduling`` — host-scheduled (one dispatch per comm op, l_k ≈ 30 µs) vs.
                    fused/device-scheduled (single compiled program, l_k ≈ sub-µs);
                    the TPU analogue of host vs. PL command scheduling.
+                   ``overlapped`` additionally double-buffers the halo exchange
+                   so interior-element compute proceeds while the exchange is
+                   in flight (paper §5: fused scheduling + streaming delivery
+                   composing with the consuming kernel).
 - ``transport``  — ordered ("TCP"-like: chunks form a dependency chain with an
                    ack window) vs. unordered ("UDP"-like: chunks are independent,
                    maximally async, receiver must reorder).
@@ -30,6 +34,10 @@ class CommMode(str, enum.Enum):
 class Scheduling(str, enum.Enum):
     HOST = "host"    # one jit dispatch per communication op
     FUSED = "fused"  # collectives inlined into the step program
+    # Fused + double-buffered delivery: the consuming kernel is split so
+    # compute that does not need the in-flight data is issued against one
+    # buffer while the other buffer's transfers land (paper §5 overlap).
+    OVERLAPPED = "overlapped"
 
 
 class Transport(str, enum.Enum):
@@ -95,6 +103,19 @@ BASELINE_CONFIG = CommConfig(
 OPTIMIZED_CONFIG = CommConfig(
     mode=CommMode.STREAMING,
     scheduling=Scheduling.FUSED,
+    transport=Transport.UNORDERED,
+    window=8,
+    chunk_bytes=1 << 20,
+    compression=Compression.NONE,
+    algorithm="native",
+)
+
+# The §5 configuration that scales to 48 FPGAs: streaming delivery plus an
+# overlapped, double-buffered halo exchange — interior-element compute is
+# issued while the boundary data is still on the wire.
+OVERLAPPED_CONFIG = CommConfig(
+    mode=CommMode.STREAMING,
+    scheduling=Scheduling.OVERLAPPED,
     transport=Transport.UNORDERED,
     window=8,
     chunk_bytes=1 << 20,

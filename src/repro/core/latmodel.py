@@ -114,14 +114,72 @@ def eq2_throughput(w: SWEWorkload, cfg: CommConfig, hw: HardwareSpec = V5E,
     return w.freq * flop_total / denom_cycles
 
 
+def overlap_fraction(cfg: CommConfig) -> float:
+    """Fraction of L_comm the step *structure* can hide behind interior
+    compute (the §5 overlap term).
+
+    Eq. 2's ``max(E_core, L_comm)`` assumes perfect hiding; in practice the
+    fused step fences the element update on the whole exchange, so only
+    chunk-level pipelining overlaps.  The overlapped schedule's
+    interior/boundary split makes the interior update independent of the
+    exchange — full hiding.  Host scheduling serializes everything.
+    """
+    if cfg.scheduling == Scheduling.OVERLAPPED:
+        return 1.0
+    if cfg.scheduling == Scheduling.FUSED:
+        # chunk pipelining inside the exchange, but the update still fences
+        return 0.6 if cfg.mode == CommMode.STREAMING else 0.3
+    return 0.0
+
+
+def eq2_throughput_overlap(w: SWEWorkload, cfg: CommConfig,
+                           hw: HardwareSpec = V5E, hops: int = 1) -> float:
+    """Eq. 2 with the explicit overlap term: the exposed step time
+    interpolates between fully serialized (compute + L_comm) and fully
+    hidden (max(compute, L_comm)) by :func:`overlap_fraction`.
+
+    This is the term that moves the strong-scaling knee: under the
+    overlapped schedule the throughput stays compute-bound until L_comm
+    itself exceeds the interior work, instead of degrading as soon as the
+    exchange stops fitting under the chunk pipeline.
+    """
+    l_comm_cycles = eq3_l_comm(w, cfg, hw, hops) * w.freq
+    compute_cycles = w.e_core + w.d_ext
+    ov = overlap_fraction(cfg)
+    exposed = (ov * max(compute_cycles, l_comm_cycles)
+               + (1.0 - ov) * (compute_cycles + l_comm_cycles))
+    denom_cycles = exposed + w.e_send + w.e_recv + w.l_pipe
+    flop_total = w.flop_per_element * w.e_total
+    return w.freq * flop_total / denom_cycles
+
+
 def stall_fraction(w: SWEWorkload, cfg: CommConfig, hw: HardwareSpec = V5E,
                    hops: int = 1) -> float:
     """Fraction of the step spent stalled on communication (paper: 75–80 %
-    for the MPI+PCIe baseline at ~6000 elements/partition)."""
+    for the MPI+PCIe baseline at ~6000 elements/partition).
+
+    Assumes the perfect-hiding ``max()`` of the plain Eq. 2; pair it with
+    :func:`eq2_throughput`.  The overlap-aware counterpart (pair with
+    :func:`eq2_throughput_overlap`) is :func:`stall_fraction_overlap`.
+    """
     l_comm_cycles = eq3_l_comm(w, cfg, hw, hops) * w.freq
     compute_cycles = w.e_core + w.d_ext
     total = max(compute_cycles, l_comm_cycles) + w.e_send + w.e_recv + w.l_pipe
     return max(0.0, l_comm_cycles - compute_cycles) / total
+
+
+def stall_fraction_overlap(w: SWEWorkload, cfg: CommConfig,
+                           hw: HardwareSpec = V5E, hops: int = 1) -> float:
+    """Stall fraction under the same exposed-time model as
+    :func:`eq2_throughput_overlap`: the share of the step spent on
+    communication the schedule could not hide behind interior compute."""
+    l_comm_cycles = eq3_l_comm(w, cfg, hw, hops) * w.freq
+    compute_cycles = w.e_core + w.d_ext
+    ov = overlap_fraction(cfg)
+    exposed = (ov * max(compute_cycles, l_comm_cycles)
+               + (1.0 - ov) * (compute_cycles + l_comm_cycles))
+    total = exposed + w.e_send + w.e_recv + w.l_pipe
+    return (exposed - compute_cycles) / total
 
 
 # ----------------------------------------------------------------------

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.config import CommConfig, Transport
+from repro.core.config import CommConfig, CommMode, Transport
 from repro.core import plugins
 
 
@@ -109,6 +109,47 @@ def pipelined_consume(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
         received.append(r)
         carry = consume(carry, r)
     return carry, unsplit(jnp.stack(received))
+
+
+def double_buffered_exchange(payloads: Sequence[jnp.ndarray],
+                             perms: Sequence[Sequence[tuple[int, int]]],
+                             axis_name: str, cfg: CommConfig,
+                             consume: Callable | None = None,
+                             init=None):
+    """Multi-round exchange through two alternating halo buffers.
+
+    Round ``r`` lands in buffer ``r % 2``.  Under ordered transport the ack
+    chain runs *within* a buffer (round ``r`` waits on round ``r - 2``), so
+    the consumer can fold buffer A's message while buffer B's chunks are in
+    flight — the double-buffering that lets the element update start before
+    the whole exchange has completed.  Each round's transfer is
+    :func:`pipelined_consume` (streaming) or :func:`buffered_permute`
+    (buffered), so chunk-level pipelining still applies inside a round.
+
+    ``consume(carry, round_index, message) -> carry`` folds each round's
+    reassembled message as soon as its buffer allows (e.g. scatter-add into
+    the halo slots).  Returns ``(carry, received)`` with ``received`` in
+    round order; values are bitwise-identical to a serialized exchange —
+    only the dependency structure differs.
+    """
+    bufs: tuple[list, list] = ([], [])
+    carry = init
+    received = []
+    for r, (payload, perm) in enumerate(zip(payloads, perms)):
+        buf = bufs[r % 2]
+        if cfg.transport == Transport.ORDERED and buf:
+            # Per-buffer ack chain: no cross-buffer serialization.
+            payload, _ = lax.optimization_barrier((payload, buf[-1]))
+        if cfg.mode == CommMode.STREAMING:
+            carry, msg = pipelined_consume(
+                payload, perm, axis_name, cfg, lambda c, _chunk: c, carry)
+        else:
+            msg = buffered_permute(payload, perm, axis_name, cfg)
+        if consume is not None:
+            carry = consume(carry, r, msg)
+        buf.append(msg)
+        received.append(msg)
+    return carry, received
 
 
 def overlapped_matmul_allreduce(h: jnp.ndarray, w: jnp.ndarray,

@@ -262,3 +262,90 @@ def analyze_hlo(text: str) -> dict:
         "collective_counts": coll_counts,
         "collective_total": sum(coll_bytes.values()),
     }
+
+
+# ----------------------------------------------------------------------
+# Compute/communication overlap analysis
+# ----------------------------------------------------------------------
+
+_COMPUTE_OPS = frozenset((
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "sqrt",
+    "rsqrt", "abs", "negate", "exponential", "tanh", "power", "select",
+    "dot", "convolution", "reduce", "fusion", "scatter", "gather", "sine"))
+
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+_OPNAME_RE = re.compile(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[^=]*?\s([a-z][\w\-]*)\(")
+
+
+def permute_overlap_stats(text: str) -> dict:
+    """How much compute can run concurrently with the collective-permutes.
+
+    Two complementary signals, so the check works on any backend:
+
+    - **async pairs** (TPU/GPU backends split permutes into
+      ``collective-permute-start``/``-done``): for every pair, the number of
+      compute ops scheduled between start and done — nonzero gaps mean the
+      latency-hiding scheduler actually placed work inside the transfer.
+    - **dependency classes** (all backends, incl. CPU's synchronous
+      ``collective-permute``): every op in a permute-bearing computation is
+      *upstream* (feeds a permute), *downstream* (consumes one), or
+      *overlappable* (neither — free to execute while the wire is busy).
+      The overlapped schedule exists precisely to maximize that third class;
+      the fused step funnels nearly all element work downstream of the halo.
+    """
+    comps, _ = split_computations(text)
+    stats = {"sync_permutes": 0, "async_pairs": 0, "pair_gaps": [],
+             "overlappable_compute": 0, "upstream_compute": 0,
+             "downstream_compute": 0}
+    for lines in comps.values():
+        ops = []   # (name, opname, operands)
+        for line in lines:
+            nm = _NAME_RE.match(line)
+            opm = _OPNAME_RE.match(line)
+            if not nm or not opm:
+                continue
+            ops.append((nm.group(1), opm.group(1), _operand_names(line)))
+        permutes = [i for i, (_, op, _o) in enumerate(ops)
+                    if op.startswith("collective-permute")]
+        if not permutes:
+            continue
+        stats["sync_permutes"] += sum(
+            1 for i in permutes if ops[i][1] == "collective-permute")
+        # async start/done pairs and the compute scheduled between them
+        starts = {ops[i][0]: i for i in permutes
+                  if ops[i][1] == "collective-permute-start"}
+        for i in permutes:
+            if ops[i][1] != "collective-permute-done":
+                continue
+            for operand in ops[i][2]:
+                if operand in starts:
+                    j = starts[operand]
+                    gap = sum(1 for k in range(j + 1, i)
+                              if ops[k][1] in _COMPUTE_OPS)
+                    stats["async_pairs"] += 1
+                    stats["pair_gaps"].append(gap)
+                    break
+        # dependency classes (SSA def order makes single passes sufficient)
+        defs = {name: k for k, (name, _, _) in enumerate(ops)}
+        downstream = {ops[i][0] for i in permutes}
+        for name, _op, operands in ops:
+            if any(o in downstream for o in operands):
+                downstream.add(name)
+        upstream = set()
+        frontier = [o for i in permutes for o in ops[i][2]]
+        while frontier:
+            n = frontier.pop()
+            if n in upstream or n not in defs:
+                continue
+            upstream.add(n)
+            frontier.extend(ops[defs[n]][2])
+        for name, op, _operands in ops:
+            if op not in _COMPUTE_OPS:
+                continue
+            if name in downstream:
+                stats["downstream_compute"] += 1
+            elif name in upstream:
+                stats["upstream_compute"] += 1
+            else:
+                stats["overlappable_compute"] += 1
+    return stats

@@ -9,6 +9,16 @@ Per time step (paper Fig. 7/8):
      element" work that hides the communication latency;
   3. consume the received halo for the remote edges and update.
 
+Under ``Scheduling.OVERLAPPED`` the step is additionally split into an
+interior/boundary element partition: interior elements (no remote edge) are
+fluxed and updated with NO data dependency on the exchange, while the
+double-buffered exchange (``streaming.double_buffered_exchange``) folds each
+round's message into the halo as it lands; only the boundary elements are then
+recomputed against the real halo and scattered over the interior result.  The
+arithmetic per element is identical, so all schedules are bitwise-equal —
+only the dependency structure (and therefore the achievable compute/comm
+overlap) differs.
+
 Rusanov (local Lax-Friedrichs) flux; reflective land boundaries; open-sea
 boundary with optional tidal forcing (the bight-of-Abaco scenario).
 """
@@ -22,9 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import collectives
+from repro.core import collectives, streaming
 from repro.core.communicator import Communicator
-from repro.core.config import CommConfig
+from repro.core.config import CommConfig, Scheduling
 from repro.swe.partition import PartitionedMesh
 
 G = 9.81
@@ -78,36 +88,58 @@ class SWEConfig:
 
 def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
                  swe: SWEConfig = SWEConfig()):
-    """Returns step(state, halo_arrays...) for use inside shard_map.
+    """Returns step(state, halo_arrays..., boundary_idx) for use inside
+    shard_map.
 
     All arrays are this device's partition slice (leading P dim removed).
+    ``comm_cfg.scheduling == OVERLAPPED`` selects the interior/boundary-split
+    step (interior compute carries no dependency on the exchange); all other
+    schedules use the exchange-then-update step.  Both are bitwise-equal.
     """
     comm = Communicator((axis,), (pm.n_parts,))
     rounds = pm.rounds
+
+    def payloads_for(state, send_idx, send_mask):
+        return [state[send_idx[r]] * send_mask[r][:, None]
+                for r in range(pm.n_rounds)]
+
+    def fold_round(halo, recv_slot_r, recv):
+        """Scatter-add one round's message into its halo slots."""
+        ok = recv_slot_r >= 0
+        return halo.at[jnp.where(ok, recv_slot_r, pm.h_max - 1)].add(
+            jnp.where(ok[:, None], recv, 0.0))
 
     def exchange(state, send_idx, send_mask, recv_slot):
         """Halo exchange -> (H_max, 3) halo buffer."""
         halo = jnp.zeros((pm.h_max, 3), state.dtype)
         if not rounds:
             return halo
-        payloads = []
-        for r in range(pm.n_rounds):
-            payload = state[send_idx[r]] * send_mask[r][:, None]
-            payloads.append(payload)
         received = collectives.multi_neighbor_exchange(
-            payloads, rounds, comm, comm_cfg)
+            payloads_for(state, send_idx, send_mask), rounds, comm, comm_cfg)
         for r, recv in enumerate(received):
-            slot = recv_slot[r]
-            ok = slot >= 0
-            halo = halo.at[jnp.where(ok, slot, pm.h_max - 1)].add(
-                jnp.where(ok[:, None], recv, 0.0))
+            halo = fold_round(halo, recv_slot[r], recv)
         return halo
 
-    def fluxes(state, halo, normals, neigh_idx, edge_type, t):
-        ext = jnp.concatenate([state, halo], axis=0)   # (E_max+H_max, 3)
-        u_n = ext[neigh_idx]                           # (E,3,3)
-        n = normals                                    # (E,3,2)
-        u = jnp.broadcast_to(state[:, None, :], u_n.shape)   # (E,3,3)
+    def exchange_overlapped(state, send_idx, send_mask, recv_slot):
+        """Double-buffered exchange: each round's message is folded into the
+        halo as soon as its buffer's dependency chain allows."""
+        halo = jnp.zeros((pm.h_max, 3), state.dtype)
+        if not rounds:
+            return halo
+        halo, _ = streaming.double_buffered_exchange(
+            payloads_for(state, send_idx, send_mask), rounds, comm.axis,
+            comm_cfg,
+            consume=lambda h, r, recv: fold_round(h, recv_slot[r], recv),
+            init=halo)
+        return halo
+
+    def edge_fluxes(u_own, u_n, n, edge_type, t):
+        """Rusanov flux per edge; shape-generic over the leading element dim.
+
+        ``u_own``: (..., 3) element states; ``u_n``: (..., 3edges, 3) neighbor
+        states; ``n``: (..., 3edges, 2) scaled normals.
+        """
+        u = jnp.broadcast_to(u_own[..., None, :], u_n.shape)
         # ghost states per edge type
         u_land = reflect(u, n)
         h_sea = swe.h_sea + swe.tidal_amplitude * jnp.sin(swe.tidal_omega * t)
@@ -115,24 +147,54 @@ def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
                            u[..., 1], u[..., 2]], axis=-1)
         u_r = jnp.where(edge_type[..., None] == 1, u_land,
                         jnp.where(edge_type[..., None] == 2, u_sea, u_n))
-        f = rusanov(u, u_r, n)                         # (E,3edges,3)
-        return f
+        return rusanov(u, u_r, n)                      # (..., 3edges, 3)
 
-    def step(state, t, area, normals, neigh_idx, edge_type, valid,
-             send_idx, send_mask, recv_slot):
+    def fluxes(state, halo, normals, neigh_idx, edge_type, t):
+        ext = jnp.concatenate([state, halo], axis=0)   # (E_max+H_max, 3)
+        return edge_fluxes(state, ext[neigh_idx], normals, edge_type, t)
+
+    def apply_update(state_rows, f, area_rows, valid_rows):
+        div = jnp.sum(f, axis=-2)                      # (..., 3)
+        new = state_rows - swe.dt / area_rows[..., None] * div
+        new = new * valid_rows[..., None]
+        # keep water depth positive
+        return new.at[..., 0].set(
+            jnp.maximum(new[..., 0], 1e-6) * valid_rows)
+
+    def step_serial(state, t, area, normals, neigh_idx, edge_type, valid,
+                    send_idx, send_mask, recv_slot, boundary_idx):
         # 1. fire exchange (streaming: overlaps with local flux compute)
         halo = exchange(state, send_idx, send_mask, recv_slot)
         # 2+3. fluxes (local edges depend only on state; remote edges read
         # the halo — XLA schedules the permutes against the local part)
         f = fluxes(state, halo, normals, neigh_idx, edge_type, t)
-        div = jnp.sum(f, axis=1)                        # (E,3)
-        new = state - swe.dt / area[:, None] * div
-        new = new * valid[:, None]
-        # keep water depth positive
-        new = new.at[:, 0].set(jnp.maximum(new[:, 0], 1e-6) * valid)
-        return new
+        return apply_update(state, f, area, valid)
 
-    return step
+    def step_overlapped(state, t, area, normals, neigh_idx, edge_type, valid,
+                        send_idx, send_mask, recv_slot, boundary_idx):
+        # Interior pass: every element updated against an EMPTY halo — no
+        # data dependency on the exchange, so the scheduler runs this while
+        # the chunk permutes are in flight.  Boundary rows come out wrong
+        # here and are overwritten below.
+        zero_halo = jnp.zeros((pm.h_max, 3), state.dtype)
+        f_int = fluxes(state, zero_halo, normals, neigh_idx, edge_type, t)
+        new = apply_update(state, f_int, area, valid)
+        # Double-buffered exchange folds rounds into the halo as they land.
+        halo = exchange_overlapped(state, send_idx, send_mask, recv_slot)
+        # Boundary pass: recompute ONLY the elements with a remote edge
+        # against the real halo, then scatter them over the interior result.
+        # Padded boundary_idx entries duplicate a real row with identical
+        # values, so the scatter stays deterministic.
+        ext = jnp.concatenate([state, halo], axis=0)
+        b = boundary_idx
+        f_b = edge_fluxes(state[b], ext[neigh_idx[b]], normals[b],
+                          edge_type[b], t)
+        new_b = apply_update(state[b], f_b, area[b], valid[b])
+        return new.at[b].set(new_b)
+
+    if comm_cfg.scheduling == Scheduling.OVERLAPPED:
+        return step_overlapped
+    return step_serial
 
 
 def initial_state(mesh, hump: bool = True) -> np.ndarray:

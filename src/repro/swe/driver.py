@@ -1,10 +1,15 @@
 """Multi-device shallow-water simulation driver.
 
-Two execution modes, mirroring the paper's §3.1 scheduling comparison:
+Three execution modes, mirroring the paper's §3.1/§5 scheduling comparison:
 
 - **fused** ("PL scheduling"): the whole time step — halo exchange + element
   update — is ONE compiled program; with ``lax.scan`` over steps, an entire
   simulation segment launches with a single host dispatch.
+- **overlapped** (§5 scaling configuration): fused, plus the step is split
+  into interior/boundary element passes around a double-buffered halo
+  exchange, so interior compute carries no dependency on the in-flight
+  permutes (``make_sim_runner`` serves this mode too — the split lives in
+  ``dg_solver.make_step_fn``).
 - **host** ("MPI+PCIe baseline"): each phase is a separate dispatch — the
   exchange is staged through host-visible buffers between two compiled
   programs, paying 2·l_k per step exactly like the paper's baseline where the
@@ -56,9 +61,16 @@ def build_simulation(n_elements: int, device_mesh: Mesh,
     pm = partition_mesh(mesh, n_parts, dg_solver.initial_state(mesh))
     if not isinstance(comm_cfg, CommConfig):
         from repro.core.collectives import resolve_config
+        from repro.core.communicator import Communicator
         halo_bytes = int(pm.s_max) * 3 * 4   # (h, hu, hv) f32 per halo element
+        # Worst-case torus hop distance of this partitioning's exchange
+        # pattern — multi-hop edges prefer hop-matched measurements.
+        comm = Communicator(("data",), (n_parts,))
+        edges = [e for r in pm.rounds for e in r]
+        hops = comm.max_hops(edges) if edges else None
         comm_cfg = resolve_config(comm_cfg, "multi_neighbor", halo_bytes,
-                                  mesh=device_mesh, db_path=tune_db_path)
+                                  mesh=device_mesh, db_path=tune_db_path,
+                                  hops=hops)
     sharding = NamedSharding(device_mesh, P("data"))
     state = jax.device_put(jnp.asarray(pm.state0, jnp.float32), sharding)
     return Simulation(mesh=mesh, pm=pm, device_mesh=device_mesh,
@@ -78,11 +90,14 @@ def _static_args(sim: Simulation):
         send_idx=put(pm.send_idx, jnp.int32),
         send_mask=put(pm.send_mask),
         recv_slot=put(pm.recv_slot, jnp.int32),
+        boundary_idx=put(pm.boundary_idx, jnp.int32),
     )
 
 
 def make_sim_runner(sim: Simulation, n_inner: int = 10):
-    """Fused runner: `run(state, t)` advances n_inner steps in one dispatch."""
+    """Fused/overlapped runner: `run(state, t)` advances n_inner steps in one
+    dispatch (the interior/boundary split of overlapped scheduling lives
+    inside the step function)."""
     pm = sim.pm
     step = make_step_fn(pm, sim.comm_cfg, "data", sim.swe)
     args = _static_args(sim)
@@ -90,11 +105,12 @@ def make_sim_runner(sim: Simulation, n_inner: int = 10):
     arg_list = list(args.values())
 
     def body(state, area, normals, neigh_idx, edge_type, valid,
-             send_idx, send_mask, recv_slot, t0):
+             send_idx, send_mask, recv_slot, boundary_idx, t0):
         def inner(carry, i):
             s, t = carry
             s = step(s[0], t, area[0], normals[0], neigh_idx[0], edge_type[0],
-                     valid[0], send_idx[0], send_mask[0], recv_slot[0])[None]
+                     valid[0], send_idx[0], send_mask[0], recv_slot[0],
+                     boundary_idx[0])[None]
             return (s, t + sim.swe.dt), None
         (state, t), _ = jax.lax.scan(inner, (state, t0), jnp.arange(n_inner))
         return state
@@ -132,10 +148,10 @@ def make_host_scheduled_runner(sim: Simulation):
 
     # phase 2: full step (exchange + update) as its own dispatch
     def phase2(state, area, normals, neigh_idx, edge_type, valid,
-               send_idx, send_mask, recv_slot, t0):
+               send_idx, send_mask, recv_slot, boundary_idx, t0):
         s = step_full(state[0], t0, area[0], normals[0], neigh_idx[0],
                       edge_type[0], valid[0], send_idx[0], send_mask[0],
-                      recv_slot[0])[None]
+                      recv_slot[0], boundary_idx[0])[None]
         return s
 
     in_specs = (P("data"),) + (P("data"),) * len(arg_list) + (P(),)

@@ -40,6 +40,12 @@ class PartitionedMesh:
     n_core: np.ndarray       # (P,) elements with no remote edge
     n_send: np.ndarray       # (P,) distinct elements sent
     n_neighbors: np.ndarray  # (P,)
+    # Interior/boundary element split for the overlapped schedule: boundary
+    # elements have >=1 remote edge and consume the halo; interior elements
+    # update without it.  Padded entries repeat the partition's first boundary
+    # element so a scatter over boundary_idx writes duplicate-identical rows.
+    boundary_idx: np.ndarray  # (P, B_max) local ids of boundary elements
+    n_boundary: np.ndarray    # (P,) real boundary element count
 
     @property
     def n_max(self) -> int:
@@ -115,6 +121,7 @@ def partition_mesh(mesh: Mesh, n_parts: int, initial_state: np.ndarray
     n_core = np.zeros(P, np.int64)
     n_send_arr = np.zeros(P, np.int64)
     n_neighbors = np.zeros(P, np.int64)
+    boundary_lists: list[np.ndarray] = []
 
     for p in range(P):
         ids = local_ids[p]
@@ -139,6 +146,7 @@ def partition_mesh(mesh: Mesh, n_parts: int, initial_state: np.ndarray
                     has_remote[li] = True
                     neigh_idx[p, li, j] = e_max + halo_slot[p][(int(part[n]), int(n))]
         n_core[p] = int((~has_remote).sum())
+        boundary_lists.append(np.where(has_remote)[0].astype(np.int32))
         nb = set()
         sent = set()
         for (src, dst), elems in send.items():
@@ -160,9 +168,21 @@ def partition_mesh(mesh: Mesh, n_parts: int, initial_state: np.ndarray
     # store recv mask in the sign: recv_slot=-1 means ignore
     recv_slot = np.where(recv_mask > 0, recv_slot, -1)
 
+    b_max = max(1, max((len(b) for b in boundary_lists), default=1))
+    boundary_idx = np.zeros((P, b_max), np.int32)
+    n_boundary = np.zeros(P, np.int64)
+    for p, blist in enumerate(boundary_lists):
+        n_boundary[p] = len(blist)
+        if len(blist):
+            boundary_idx[p, :len(blist)] = blist
+            boundary_idx[p, len(blist):] = blist[0]
+        # no boundary elements (single partition): all-zero padding; the
+        # duplicate writes carry identical values so the scatter is exact
+
     return PartitionedMesh(
         n_parts=P, e_max=e_max, h_max=h_max, s_max=s_max, n_rounds=n_rounds,
         rounds=rounds, state0=state0, area=area, normals=normals,
         neigh_idx=neigh_idx, edge_type=edge_type, valid=valid,
         send_idx=send_idx, send_mask=send_mask, recv_slot=recv_slot,
-        n_core=n_core, n_send=n_send_arr, n_neighbors=n_neighbors)
+        n_core=n_core, n_send=n_send_arr, n_neighbors=n_neighbors,
+        boundary_idx=boundary_idx, n_boundary=n_boundary)

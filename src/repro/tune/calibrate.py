@@ -62,7 +62,8 @@ def _design_row(cfg: CommConfig, msg_bytes: int) -> np.ndarray:
     """Coefficients of [l_k_host, l_k_fused, l0, 1/bw, 2/bw_mem] for Eq. 1."""
     n_k = 2.0 if cfg.mode == CommMode.BUFFERED else 1.0
     host = n_k if cfg.scheduling == Scheduling.HOST else 0.0
-    fused = n_k if cfg.scheduling == Scheduling.FUSED else 0.0
+    # overlapped is device-scheduled like fused: same in-program issue cost
+    fused = n_k if cfg.scheduling != Scheduling.HOST else 0.0
     wire = latmodel.wire_bytes(msg_bytes, cfg)
     staging = float(msg_bytes) if cfg.mode == CommMode.BUFFERED else 0.0
     return np.array([host, fused, 1.0, wire, staging])

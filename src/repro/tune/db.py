@@ -54,6 +54,11 @@ class TuneEntry:
     config: dict                  # config_to_dict(CommConfig)
     us_per_call: float
     gbps: float = 0.0             # derived effective bandwidth
+    # Worst-case torus hop distance of the measured pattern
+    # (Communicator.torus_hops / max_hops): 1 = direct link, >1 = routed —
+    # the paper's direct-link vs Ethernet-switch distinction.  Entries
+    # measured at different hop distances are distinct data points.
+    hops: int = 1
 
     @property
     def comm_config(self) -> CommConfig:
@@ -79,7 +84,8 @@ class TuneDB:
     def add(self, entry: TuneEntry) -> None:
         cfg_key = tuple(sorted(entry.config.items()))
         for i, e in enumerate(self.entries):
-            if e.key() == entry.key() and tuple(sorted(e.config.items())) == cfg_key:
+            if (e.key() == entry.key() and e.hops == entry.hops
+                    and tuple(sorted(e.config.items())) == cfg_key):
                 if entry.us_per_call < e.us_per_call:
                     self.entries[i] = entry
                 return
@@ -88,30 +94,47 @@ class TuneDB:
     # ------------------------------------------------------------------
     # Queries
     # ------------------------------------------------------------------
-    def candidates(self, collective: str, topo: str | None = None
-                   ) -> list[TuneEntry]:
-        return [e for e in self.entries
-                if e.collective == collective and (topo is None or e.topo == topo)]
+    def candidates(self, collective: str, topo: str | None = None,
+                   hops: int | None = None) -> list[TuneEntry]:
+        """Entries for ``collective`` (optionally per topology).
 
-    def best(self, collective: str, msg_bytes: int, topo: str | None = None
-             ) -> Optional[TuneEntry]:
+        With ``hops`` given, prefer entries measured at exactly that hop
+        distance; when none exist, relax to the nearest measured distance —
+        a 3-hop edge is better served by a 2-hop measurement than a 1-hop
+        one (the direct-link vs routed cost structures differ).
+        """
+        cands = [e for e in self.entries
+                 if e.collective == collective
+                 and (topo is None or e.topo == topo)]
+        if hops is not None and cands:
+            matched = [e for e in cands if e.hops == hops]
+            if matched:
+                return matched
+            nearest_h = min({e.hops for e in cands},
+                            key=lambda h: abs(h - hops))
+            return [e for e in cands if e.hops == nearest_h]
+        return cands
+
+    def best(self, collective: str, msg_bytes: int, topo: str | None = None,
+             hops: int | None = None) -> Optional[TuneEntry]:
         """Fastest entry at exactly ``msg_bytes`` (None if not measured)."""
-        exact = [e for e in self.candidates(collective, topo)
+        exact = [e for e in self.candidates(collective, topo, hops)
                  if e.msg_bytes == msg_bytes]
         return min(exact, key=lambda e: e.us_per_call) if exact else None
 
-    def nearest(self, collective: str, msg_bytes: int, topo: str | None = None
-                ) -> Optional[TuneEntry]:
+    def nearest(self, collective: str, msg_bytes: int, topo: str | None = None,
+                hops: int | None = None) -> Optional[TuneEntry]:
         """Fastest entry at the measured message size closest (in log space)
         to ``msg_bytes`` — message-size behaviour is scale-free, so log
         distance is the right metric (1 KiB is "nearer" 4 KiB than 64 KiB)."""
-        cands = self.candidates(collective, topo)
+        cands = self.candidates(collective, topo, hops)
         if not cands:
             return None
         target = math.log(max(1, msg_bytes))
         nearest_size = min({e.msg_bytes for e in cands},
                            key=lambda s: abs(math.log(max(1, s)) - target))
-        return self.best(collective, nearest_size, topo)
+        exact = [e for e in cands if e.msg_bytes == nearest_size]
+        return min(exact, key=lambda e: e.us_per_call)
 
     # ------------------------------------------------------------------
     # Persistence
@@ -141,26 +164,30 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
                   db: TuneDB | None = None,
                   path: os.PathLike | str | None = None,
                   topo: str | None = None,
+                  hops: int | None = None,
                   fallback: CommConfig = OPTIMIZED_CONFIG) -> CommConfig:
     """The autotuner's answer to "how should I communicate?".
 
     Looks up the fastest measured config for (collective, msg_bytes) on this
-    topology; relaxes to other device counts on the SAME platform (a config
-    tuned on another platform's cost structure is worse than no tuning);
-    falls back to the paper's ``OPTIMIZED_CONFIG`` on a cold cache so callers
-    can unconditionally pass ``comm_cfg="auto"``.
+    topology; with ``hops`` given, prefers measurements taken at the same
+    torus hop distance (multi-hop edges may want a different transport or
+    window than direct links — the paper's direct-link vs Ethernet-switch
+    distinction); relaxes to other device counts on the SAME platform (a
+    config tuned on another platform's cost structure is worse than no
+    tuning); falls back to the paper's ``OPTIMIZED_CONFIG`` on a cold cache
+    so callers can unconditionally pass ``comm_cfg="auto"``.
     """
     if db is None:
         db = TuneDB.load(path)
     if topo is None:
         topo = topology_key(mesh) if mesh is not None else topology_key()
     platform = topo.split(":", 1)[0]
-    entry = (db.best(collective, msg_bytes, topo)
-             or db.nearest(collective, msg_bytes, topo))
+    entry = (db.best(collective, msg_bytes, topo, hops)
+             or db.nearest(collective, msg_bytes, topo, hops))
     if entry is None:
         same_platform = TuneDB([e for e in db.entries
                                 if e.topo.split(":", 1)[0] == platform])
-        entry = same_platform.nearest(collective, msg_bytes, None)
+        entry = same_platform.nearest(collective, msg_bytes, None, hops)
     if entry is None:
         return fallback
     return entry.comm_config

@@ -87,6 +87,18 @@ def _canonicalize(cfg: CommConfig, collective: str | None) -> CommConfig:
     # transport); unordered configs differing only in window are identical.
     if merged.transport == Transport.UNORDERED and merged.window != _DEFAULTS.window:
         merged = dataclasses.replace(merged, window=_DEFAULTS.window)
+    # Overlapped scheduling only changes behaviour for the multi-round halo
+    # exchange (double-buffered delivery); every other collective executes
+    # the overlapped config exactly like the fused one, so collapse it and
+    # never measure the duplicate.
+    if merged.scheduling == Scheduling.OVERLAPPED:
+        if collective not in (None, "multi_neighbor"):
+            merged = dataclasses.replace(merged, scheduling=Scheduling.FUSED)
+        elif (collective == "multi_neighbor"
+              and merged.window != _DEFAULTS.window):
+            # the double-buffered path chains rounds per buffer, never per
+            # ack window — window-only variants are identical programs
+            merged = dataclasses.replace(merged, window=_DEFAULTS.window)
     return merged
 
 

@@ -49,6 +49,23 @@ def _payload_elems(msg_bytes: int, n: int) -> int:
     return elems + (-elems) % n
 
 
+def _multi_neighbor_rounds(comm) -> list:
+    """The 4-neighbor halo pattern (ring distance ±1, ±2) — the SWE
+    exchange.  Single source for both the benchmark op and the hop distance
+    recorded with its measurements."""
+    return [comm.ring_perm(1), comm.reverse_ring_perm(1),
+            comm.ring_perm(2), comm.reverse_ring_perm(2)]
+
+
+def _pattern_hops(collective: str, comm) -> int:
+    """Worst-case torus hop distance of the pattern a collective exercises
+    (recorded per TuneEntry so selection can prefer hop-matched results)."""
+    if collective == "multi_neighbor":
+        return comm.max_hops(
+            [e for r in _multi_neighbor_rounds(comm) for e in r])
+    return comm.max_hops(comm.ring_perm())
+
+
 def _build_op(collective: str, comm, cfg: CommConfig) -> Callable:
     """Per-device body (x -> x-shaped array) exercising one collective op."""
     from jax import numpy as jnp
@@ -71,12 +88,10 @@ def _build_op(collective: str, comm, cfg: CommConfig) -> Callable:
             y = collectives.reduce_scatter(x, comm, cfg)
             return x + 0.0 * jnp.sum(y)
     elif collective == "multi_neighbor":
-        # 4-neighbor halo pattern (ring distance ±1, ±2) — the SWE exchange.
         def op(x):
-            rounds = [comm.ring_perm(1), comm.reverse_ring_perm(1),
-                      comm.ring_perm(2), comm.reverse_ring_perm(2)]
+            rounds = _multi_neighbor_rounds(comm)
             outs = collectives.multi_neighbor_exchange(
-                [x, x, x, x], rounds, comm, cfg)
+                [x] * len(rounds), rounds, comm, cfg)
             return sum(outs) / len(outs)
     else:
         raise ValueError(f"unknown collective {collective!r} "
@@ -101,7 +116,9 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
         lambda xs: op(xs[0])[None], mesh=mesh,
         in_specs=P(axis), out_specs=P(axis), check_vma=False))
 
-    if cfg.scheduling == Scheduling.FUSED:
+    if cfg.scheduling != Scheduling.HOST:
+        # fused and overlapped are both device-scheduled: one dispatch
+        # amortized over the compiled loop
         def many(xs):
             for _ in range(inner):
                 xs = compat.shard_map(
@@ -158,7 +175,9 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
         cands = tune_space.enumerate_configs(coll, fast=fast)
         if max_configs is not None:
             cands = cands[:max_configs]
-        log(f"[{topo}] {coll}: {len(cands)} configs x {len(sizes)} sizes")
+        hops = _pattern_hops(coll, comm)
+        log(f"[{topo}] {coll}: {len(cands)} configs x {len(sizes)} sizes "
+            f"(pattern hops={hops})")
         for msg_bytes in sizes:
             for i, cfg in enumerate(cands):
                 try:
@@ -173,7 +192,8 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                     topo=topo, collective=coll, msg_bytes=int(msg_bytes),
                     config=tune_space.config_to_dict(cfg),
                     us_per_call=sec * 1e6,
-                    gbps=msg_bytes / sec / 1e9))
+                    gbps=msg_bytes / sec / 1e9,
+                    hops=hops))
             best = db.best(coll, msg_bytes, topo)
             if best is not None:
                 log(f"  {coll:15s} {msg_bytes:>8d}B best "

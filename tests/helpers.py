@@ -13,6 +13,21 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parents[1]
 
 
+def require_hypothesis():
+    """Import hypothesis or skip — unless REPRO_REQUIRE_HYPOTHESIS is set
+    (the CI pins the dep and sets the flag), in which case a missing install
+    is a hard failure instead of a silent skip-and-pass."""
+    import pytest
+    try:
+        import hypothesis
+    except ImportError:
+        if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+            raise
+        pytest.skip("hypothesis not installed (set REPRO_REQUIRE_HYPOTHESIS "
+                    "to make this a failure)")
+    return hypothesis
+
+
 def run_multidevice(code: str, n_devices: int = 8, timeout: int = 540) -> str:
     """Run `code` in a subprocess with n host devices; returns stdout.
 

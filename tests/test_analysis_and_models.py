@@ -65,7 +65,8 @@ print("HLO COLLECTIVES OK")
 
 def test_latency_model_eq1_properties():
     """Eq. 1 invariants from the paper, under the hypothesis strategy."""
-    pytest.importorskip("hypothesis")
+    from helpers import require_hypothesis
+    require_hypothesis()
     from hypothesis import given, settings, strategies as st
     from repro.core import latmodel
     from repro.core.config import (CommConfig, CommMode, Scheduling, V5E)

@@ -1,0 +1,77 @@
+"""benchmarks/diff.py: the BENCH_comm.json regression gate."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks import diff as bench_diff  # noqa: E402
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"schema": "repro-bench-v1", "rows": rows}))
+    return str(path)
+
+
+@pytest.fixture
+def fixture_jsons(tmp_path):
+    old = _write(tmp_path / "old.json", {
+        "fig9_accl_udp_p8": {"us_per_call": 100.0, "derived": ""},
+        "fig9_base_mpi_p8": {"us_per_call": 500.0, "derived": ""},
+        "fig9_gone": {"us_per_call": 50.0, "derived": ""},
+        "fig3_full_ring_hlo_ops": {"us_per_call": 120.0, "derived": ""},
+        "zero_row": {"us_per_call": 0.0, "derived": ""},
+    })
+    new = _write(tmp_path / "new.json", {
+        "fig9_accl_udp_p8": {"us_per_call": 130.0, "derived": ""},   # +30%
+        "fig9_base_mpi_p8": {"us_per_call": 300.0, "derived": ""},   # -40%
+        "fig3_full_ring_hlo_ops": {"us_per_call": 400.0, "derived": ""},
+        "zero_row": {"us_per_call": 9.0, "derived": ""},
+    })
+    return old, new
+
+
+def test_compare_classifies_rows(fixture_jsons):
+    old, new = fixture_jsons
+    regs, imps, missing = bench_diff.compare(
+        bench_diff.load_rows(old), bench_diff.load_rows(new), threshold=0.2)
+    assert [r[0] for r in regs] == ["fig9_accl_udp_p8"]
+    assert regs[0][3] == pytest.approx(1.3)
+    assert [i[0] for i in imps] == ["fig9_base_mpi_p8"]
+    assert missing == ["fig9_gone"]
+    # fig3_* is a count, not a latency — a 3.3x increase is NOT a regression;
+    # zero-valued baselines are skipped (no division blowup)
+    assert all(not r[0].startswith("fig3_") for r in regs)
+
+
+def test_main_exit_codes(fixture_jsons, capsys):
+    old, new = fixture_jsons
+    assert bench_diff.main(["--old", old, "--new", new]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION fig9_accl_udp_p8" in out
+    # report-only: same report, exit 0
+    assert bench_diff.main(["--old", old, "--new", new, "--report-only"]) == 0
+    # tighter threshold flips the improvement row into "not a regression"
+    # but a 60% threshold clears the 30% regression
+    assert bench_diff.main(["--old", old, "--new", new,
+                            "--threshold", "0.6"]) == 0
+
+
+def test_main_no_regressions_when_identical(tmp_path):
+    rows = {"fig9_x_p2": {"us_per_call": 10.0, "derived": ""}}
+    old = _write(tmp_path / "a.json", rows)
+    new = _write(tmp_path / "b.json", rows)
+    assert bench_diff.main(["--old", old, "--new", new]) == 0
+
+
+def test_main_bad_input(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    ok = _write(tmp_path / "ok.json", {})
+    # malformed baseline: hard mode fails, report-only tolerates
+    assert bench_diff.main(["--old", str(bad), "--new", ok]) == 2
+    assert bench_diff.main(["--old", str(bad), "--new", ok,
+                            "--report-only"]) == 0
+    assert bench_diff.main(["--old", ok, "--new",
+                            str(tmp_path / "nope.json")]) == 2

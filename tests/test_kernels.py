@@ -128,7 +128,8 @@ def test_quant_roundtrip_sweep(n, dtype):
 
 def test_quant_property_scale_bound():
     """Property: |dequant(quant(x)) - x| <= scale/2 per block, any input."""
-    pytest.importorskip("hypothesis")
+    from helpers import require_hypothesis
+    require_hypothesis()
     from hypothesis import given, settings, strategies as st
     from repro.kernels.quant.ref import quantize_ref, dequantize_ref
 

@@ -1,0 +1,311 @@
+"""Overlapped double-buffered halo exchange: the correctness harness.
+
+Every comm path the SWE step can take — scheduling (host / fused /
+overlapped) x transport (ordered / unordered) x partition count (1 / 2 / 4)
+— must produce BITWISE-identical simulation state: the schedules differ only
+in dependency structure, never in arithmetic.  Plus an HLO-level check that
+the overlapped step really decouples interior compute from the permutes, and
+hypothesis properties for the streaming engine's chunking round-trips.
+"""
+import numpy as np
+import pytest
+
+from helpers import require_hypothesis, run_multidevice
+
+
+# ----------------------------------------------------------------------
+# Parity matrix: scheduling x transport x n_parts, 20 steps, bitwise
+# ----------------------------------------------------------------------
+
+def test_parity_matrix_bitwise():
+    out = run_multidevice("""
+import itertools, jax, numpy as np
+from repro.core.config import CommConfig, Scheduling, Transport
+from repro.swe import driver
+from repro.swe.partition import _rcb
+
+N_STEPS = 20
+ELEMENTS = 400
+
+def flatten(sim, s):
+    part = _rcb(sim.mesh.centroids, sim.pm.n_parts)
+    counts = np.zeros(sim.pm.n_parts, int)
+    vals = np.zeros((sim.mesh.n_elements, 3))
+    for e in range(sim.mesh.n_elements):
+        p = part[e]
+        vals[e] = s[p, counts[p]]
+        counts[p] += 1
+    return vals
+
+mesh1 = jax.make_mesh((1,), ("data",))
+ref_sim = driver.build_simulation(ELEMENTS, mesh1, CommConfig())
+ref = flatten(ref_sim, np.asarray(
+    driver.make_sim_runner(ref_sim, N_STEPS)(ref_sim.state, 0.0)))
+
+checked = 0
+for n_parts, sched, transport in itertools.product(
+        (1, 2, 4),
+        (Scheduling.HOST, Scheduling.FUSED, Scheduling.OVERLAPPED),
+        (Transport.ORDERED, Transport.UNORDERED)):
+    cfg = CommConfig(scheduling=sched, transport=transport,
+                     window=2 if transport == Transport.ORDERED else 4)
+    dmesh = jax.make_mesh((n_parts,), ("data",))
+    sim = driver.build_simulation(ELEMENTS, dmesh, cfg)
+    if sched == Scheduling.HOST:
+        s, _ = driver.make_host_scheduled_runner(sim).run(
+            sim.state, 0.0, N_STEPS)
+    else:
+        s = driver.make_sim_runner(sim, N_STEPS)(sim.state, 0.0)
+    v = flatten(sim, np.asarray(s))
+    assert np.array_equal(ref, v), (
+        f"parity broke: parts={n_parts} sched={sched.value} "
+        f"transport={transport.value} maxdiff={np.abs(ref - v).max()}")
+    checked += 1
+assert checked == 18
+print("PARITY MATRIX OK", checked)
+""", n_devices=4)
+    assert "PARITY MATRIX OK 18" in out
+
+
+# ----------------------------------------------------------------------
+# Interior/boundary partition invariants (what makes the scatter exact)
+# ----------------------------------------------------------------------
+
+def test_boundary_partition_invariants():
+    from repro.swe.dg_solver import initial_state
+    from repro.swe.mesh_gen import generate_bight_mesh
+    from repro.swe.partition import partition_mesh
+
+    mesh = generate_bight_mesh(800, seed=1)
+    for n_parts in (1, 2, 4, 8):
+        pm = partition_mesh(mesh, n_parts, initial_state(mesh))
+        for p in range(pm.n_parts):
+            nb = int(pm.n_boundary[p])
+            k = int(pm.valid[p].sum())
+            # boundary + interior(core) covers every real element exactly
+            assert nb + int(pm.n_core[p]) == k
+            real = pm.boundary_idx[p, :nb].tolist()
+            assert len(set(real)) == nb                # no duplicates
+            # boundary elements are exactly those with a remote edge
+            remote = np.where((pm.edge_type[p] == 3).any(axis=1))[0]
+            assert sorted(real) == remote.tolist()
+            # padding repeats a real boundary row (0 when none exist), so
+            # duplicate scatter writes carry identical values
+            pad = pm.boundary_idx[p, nb:]
+            assert (pad == (real[0] if nb else 0)).all()
+
+
+# ----------------------------------------------------------------------
+# HLO: the overlapped step decouples interior compute from the permutes
+# ----------------------------------------------------------------------
+
+def test_overlapped_step_hlo_decouples_compute():
+    """The overlapped program must contain substantially more compute that is
+    independent of the collective-permutes than the fused one (the property
+    that lets a latency-hiding scheduler run it during the transfer).  On
+    backends that split permutes into ``collective-permute-start``/``-done``
+    pairs, additionally require compute scheduled inside a pair; this host's
+    CPU backend emits synchronous permutes, so the dependency-class check is
+    the load-bearing one."""
+    out = run_multidevice("""
+import jax
+from repro.core.config import CommConfig, OVERLAPPED_CONFIG
+from repro.swe import driver
+from repro.launch.hlo_analysis import permute_overlap_stats
+
+mesh = jax.make_mesh((4,), ("data",))
+stats = {}
+for label, cfg in (("fused", CommConfig()), ("overlapped", OVERLAPPED_CONFIG)):
+    sim = driver.build_simulation(500, mesh, cfg)
+    run = driver.make_sim_runner(sim, n_inner=1)
+    txt = jax.jit(lambda s: run(s, 0.0)).lower(sim.state).compile().as_text()
+    stats[label] = permute_overlap_stats(txt)
+
+for label, st in stats.items():
+    assert st["sync_permutes"] + st["async_pairs"] >= 1, (label, st)
+if stats["overlapped"]["async_pairs"]:
+    assert max(stats["overlapped"]["pair_gaps"]) > 0, stats["overlapped"]
+assert (stats["overlapped"]["overlappable_compute"]
+        > stats["fused"]["overlappable_compute"]), stats
+print("HLO OVERLAP OK", stats["fused"]["overlappable_compute"],
+      stats["overlapped"]["overlappable_compute"])
+""", n_devices=4)
+    assert "HLO OVERLAP OK" in out
+
+
+# ----------------------------------------------------------------------
+# Double-buffered exchange == serialized exchange, both transports
+# ----------------------------------------------------------------------
+
+def test_double_buffered_exchange_matches_serial():
+    out = run_multidevice("""
+import jax, numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import collectives, streaming
+from repro.core.communicator import Communicator
+from repro.core.config import CommConfig, Transport
+
+mesh = jax.make_mesh((4,), ("x",))
+comm = Communicator.from_mesh(mesh, "x")
+rounds = [comm.ring_perm(1), comm.reverse_ring_perm(1), comm.ring_perm(2)]
+x = np.random.RandomState(0).randn(4, 3, 64).astype(np.float32)
+
+for transport in (Transport.UNORDERED, Transport.ORDERED):
+    cfg = CommConfig(transport=transport, window=2, chunk_bytes=512)
+
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+             check_vma=False)
+    def serial(xs):
+        outs = collectives.multi_neighbor_exchange(
+            [xs[0, r] for r in range(3)], rounds, comm, cfg)
+        return jax.numpy.stack(outs)[None]
+
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+             check_vma=False)
+    def double_buffered(xs):
+        _, outs = streaming.double_buffered_exchange(
+            [xs[0, r] for r in range(3)], rounds, "x", cfg)
+        return jax.numpy.stack(outs)[None]
+
+    a, b = np.asarray(serial(x)), np.asarray(double_buffered(x))
+    assert np.array_equal(a, b), transport
+print("DOUBLE BUFFER OK")
+""", n_devices=4)
+    assert "DOUBLE BUFFER OK" in out
+
+
+# ----------------------------------------------------------------------
+# Tuner integration: the sweep space enumerates OVERLAPPED and "auto"
+# can select it for the halo exchange
+# ----------------------------------------------------------------------
+
+def test_space_enumerates_overlapped_for_halo_only():
+    from repro.core.config import Scheduling
+    from repro.tune.space import enumerate_configs
+    halo = enumerate_configs("multi_neighbor")
+    assert any(c.scheduling == Scheduling.OVERLAPPED for c in halo)
+    # every other collective executes overlapped == fused: collapsed away
+    for coll in ("sendrecv", "all_reduce", "all_gather", "reduce_scatter"):
+        assert not any(c.scheduling == Scheduling.OVERLAPPED
+                       for c in enumerate_configs(coll)), coll
+
+
+def test_auto_selects_overlapped_when_fastest(tmp_path):
+    out = run_multidevice(f"""
+import jax
+from repro.core.config import CommConfig, Scheduling
+from repro.swe import driver
+from repro.tune.db import TuneDB, TuneEntry, topology_key
+from repro.tune.space import config_to_dict
+
+topo = topology_key(n_devices=4)
+db = TuneDB()
+db.add(TuneEntry(topo=topo, collective="multi_neighbor", msg_bytes=1024,
+                 config=config_to_dict(CommConfig()), us_per_call=100.0))
+db.add(TuneEntry(topo=topo, collective="multi_neighbor", msg_bytes=1024,
+                 config=config_to_dict(
+                     CommConfig(scheduling=Scheduling.OVERLAPPED)),
+                 us_per_call=10.0))
+path = db.save(r"{tmp_path / 'tunedb.json'}")
+
+mesh = jax.make_mesh((4,), ("data",))
+sim = driver.build_simulation(400, mesh, "auto", tune_db_path=path)
+assert sim.comm_cfg.scheduling == Scheduling.OVERLAPPED, sim.comm_cfg
+s = driver.make_sim_runner(sim, 3)(sim.state, 0.0)
+jax.block_until_ready(s)
+print("AUTO OVERLAPPED OK")
+""", n_devices=4)
+    assert "AUTO OVERLAPPED OK" in out
+
+
+# ----------------------------------------------------------------------
+# Hypothesis properties: streaming engine chunking round-trips
+# ----------------------------------------------------------------------
+
+def test_split_chunks_roundtrip_property():
+    require_hypothesis()
+    from hypothesis import given, settings, strategies as st
+    import jax.numpy as jnp
+    from repro.core import streaming
+
+    dtypes = (jnp.float32, jnp.float16, jnp.int32, jnp.bfloat16)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(1, 7), min_size=1, max_size=4),
+           st.integers(0, len(dtypes) - 1),
+           st.integers(1, 12))
+    def check(shape, dtype_i, n):
+        dtype = dtypes[dtype_i]
+        size = int(np.prod(shape))
+        rng = np.random.RandomState(size * 31 + n)
+        x = jnp.asarray(rng.randn(*shape) * 100).astype(dtype)
+        chunks, unsplit = streaming.split_chunks(x, n)
+        assert chunks.shape[0] == n
+        assert chunks.size >= x.size          # zero-padded, never truncated
+        back = unsplit(chunks)
+        assert back.shape == x.shape and back.dtype == x.dtype
+        assert np.array_equal(np.asarray(back), np.asarray(x))
+
+    check()
+
+
+def test_num_chunks_bounds_property():
+    require_hypothesis()
+    from hypothesis import given, settings, strategies as st
+    from repro.core.config import CommConfig
+    from repro.core.streaming import num_chunks
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 10 << 20), st.integers(512, 1 << 20),
+           st.integers(1, 64))
+    def check(nbytes, chunk_bytes, max_chunks):
+        cfg = CommConfig(chunk_bytes=chunk_bytes, max_chunks=max_chunks)
+        n = num_chunks(nbytes, cfg)
+        assert 1 <= n <= max_chunks
+        if n < max_chunks:                   # uncapped: chunks cover the data
+            assert n * chunk_bytes >= nbytes
+
+    check()
+
+
+def test_chunked_permute_roundtrip_property():
+    """Identity-perm chunked_permute is a bitwise round-trip for any shape,
+    dtype, chunk size, transport, and window (the wire format must never
+    lose or reorder data)."""
+    require_hypothesis()
+    from hypothesis import given, settings, strategies as st
+    from functools import partial
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.core import streaming
+    from repro.core.config import CommConfig, Transport
+
+    mesh = jax.make_mesh((1,), ("x",))
+    dtypes = (jnp.float32, jnp.float16)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.integers(1, 9), min_size=1, max_size=3),
+           st.integers(0, len(dtypes) - 1),
+           st.sampled_from((512, 1024, 4096)),
+           st.sampled_from((Transport.ORDERED, Transport.UNORDERED)),
+           st.integers(1, 4))
+    def check(shape, dtype_i, chunk_bytes, transport, window):
+        cfg = CommConfig(chunk_bytes=chunk_bytes, transport=transport,
+                         window=window)
+        rng = np.random.RandomState(int(np.prod(shape)) + window)
+        x = jnp.asarray(rng.randn(*shape)).astype(dtypes[dtype_i])
+
+        @partial(compat.shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+                 check_vma=False)
+        def f(v):
+            return streaming.chunked_permute(v, [(0, 0)], "x", cfg)
+
+        out = f(x)
+        assert out.shape == x.shape and out.dtype == x.dtype
+        assert np.array_equal(np.asarray(out), np.asarray(x))
+
+    check()

@@ -41,7 +41,8 @@ def test_partition_schedule_valid():
 
 
 def test_hypothesis_partition_balance():
-    pytest.importorskip("hypothesis")
+    from helpers import require_hypothesis
+    require_hypothesis()
     from hypothesis import given, settings, strategies as st
     from repro.swe.partition import _rcb
 

@@ -64,13 +64,13 @@ def test_config_dict_roundtrip():
 # TuneDB
 # ----------------------------------------------------------------------
 
-def _entry(msg_bytes, us, topo="cpu:8", coll="all_reduce", **cfg_kw):
+def _entry(msg_bytes, us, topo="cpu:8", coll="all_reduce", hops=1, **cfg_kw):
     from repro.core.config import CommConfig
     from repro.tune.db import TuneEntry
     from repro.tune.space import config_to_dict
     return TuneEntry(topo=topo, collective=coll, msg_bytes=msg_bytes,
                      config=config_to_dict(CommConfig(**cfg_kw)),
-                     us_per_call=us, gbps=msg_bytes / us / 1e3)
+                     us_per_call=us, gbps=msg_bytes / us / 1e3, hops=hops)
 
 
 def test_tunedb_roundtrip_and_nearest(tmp_path):
@@ -159,6 +159,48 @@ def test_communicator_auto_config_keys_on_comm_size():
         dbmod.select_config = orig
     assert seen.get("topo") == topo4
     assert cfg.window == 8
+
+
+def test_hop_aware_selection_prefers_matched_hops(tmp_path):
+    """Per-edge hop-aware selection (the paper's direct-link vs
+    Ethernet-switch distinction): a DB with conflicting 1-hop/3-hop winners
+    must answer per hop distance, not with the global minimum."""
+    from repro.tune.db import TuneDB, select_config
+
+    db = TuneDB()
+    # direct links: tiny window wins; routed 3-hop edges: window scaling wins
+    db.add(_entry(1024, 10.0, window=1, hops=1))
+    db.add(_entry(1024, 12.0, window=8, hops=3))
+
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8",
+                         hops=1).window == 1
+    # hop-matched beats globally fastest
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8",
+                         hops=3).window == 8
+    # no hop hint: fastest measurement overall
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8").window == 1
+    # unmeasured distance relaxes to the nearest measured one
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8",
+                         hops=4).window == 8
+
+    # hops survive the JSON round-trip and distinguish add() data points
+    path = tmp_path / "tunedb.json"
+    db.save(path)
+    back = TuneDB.load(path)
+    assert len(back) == 2
+    assert sorted(e.hops for e in back.entries) == [1, 3]
+    assert select_config("all_reduce", 1024, db=back, topo="cpu:8",
+                         hops=3).window == 8
+
+
+def test_tunedb_add_same_config_different_hops_kept():
+    from repro.tune.db import TuneDB
+    db = TuneDB()
+    db.add(_entry(1024, 10.0, hops=1))
+    db.add(_entry(1024, 30.0, hops=3))   # same config, other distance: kept
+    db.add(_entry(1024, 25.0, hops=3))   # faster rerun at 3 hops: replaces
+    assert len(db) == 2
+    assert db.best("all_reduce", 1024, "cpu:8", hops=3).us_per_call == 25.0
 
 
 def test_select_config_returns_measured_best():
