@@ -1,16 +1,30 @@
-"""Compare two ``BENCH_comm.json`` files and flag latency regressions.
+"""Compare ``BENCH_comm.json`` baselines against fresh results and flag
+latency regressions.
 
 The benchmark driver (``python -m benchmarks.run``) writes machine-readable
 rows; this tool closes the loop across PRs: regenerate the JSON, diff it
-against the committed one, and fail (exit non-zero) when any latency row got
-more than ``--threshold`` (default 20 %) slower.  ``--report-only`` prints
-the same report but always exits 0 — the CI mode, since host-CPU timings are
-noisy; the hard gate is for local/perf-lab use.
+against the committed baseline(s), and fail (exit non-zero) when any
+enforced latency row got more than ``--threshold`` (default 20 %) slower.
+
+Enforcement tiers:
+
+- ``--old`` may be given several times (committed baseline snapshots under
+  ``benchmarks/baselines/``).  With two or more baselines a row is
+  **enforced** only when it appears in at least two of them — a row with a
+  single committed measurement has no noise floor yet and is report-only.
+  The reference value is the most lenient (slowest) baseline, so a row must
+  regress past *every* committed measurement to fail.
+- Rows matching ``--report-only-prefixes`` (default: the new ``lmcoll_``
+  LM-collective rows) are report-only regardless — new rows ride one PR as
+  report-only before their second committed baseline makes them enforced.
+- ``--report-only`` downgrades everything (local what-if mode).
 
 Usage::
 
     PYTHONPATH=src python -m benchmarks.run --json=BENCH_new.json
-    PYTHONPATH=src python -m benchmarks.diff --old BENCH_comm.json \
+    PYTHONPATH=src python -m benchmarks.diff \
+        --old benchmarks/baselines/bench_pr2.json \
+        --old benchmarks/baselines/bench_pr3.json \
         --new BENCH_new.json [--threshold 0.2] [--report-only]
 """
 from __future__ import annotations
@@ -22,7 +36,11 @@ from typing import Sequence
 
 # Rows whose us_per_call is not a latency (ratios, byte counts, op counts):
 # a bigger number is not a regression there.
-_NON_LATENCY_PREFIXES = ("fig3_", "table1_", "fig11_speedup")
+_NON_LATENCY_PREFIXES = ("fig3_", "table1_", "fig11_speedup",
+                         "lmcoll_tp_reduce_speedup", "lmcoll_moe_a2a_speedup")
+
+# New rows that stay report-only until they have >= 2 committed baselines.
+DEFAULT_REPORT_ONLY_PREFIXES = ("lmcoll_",)
 
 
 def load_rows(path: str) -> dict:
@@ -64,18 +82,56 @@ def compare(old_rows: dict, new_rows: dict, threshold: float = 0.2):
     return regressions, improvements, missing
 
 
+def merge_baselines(baselines: Sequence[dict]) -> tuple[dict, dict]:
+    """Fold several baseline row dicts into one reference.
+
+    Returns ``(rows, counts)``: per row the most lenient (largest) baseline
+    latency and the number of baselines that measured it — a row must exist
+    in >= 2 committed baselines before it can hard-fail the gate.
+    """
+    rows: dict = {}
+    counts: dict = {}
+    for rowset in baselines:
+        for name, row in rowset.items():
+            us = float(row.get("us_per_call", 0.0))
+            if name not in rows or us > float(rows[name]["us_per_call"]):
+                rows[name] = {"us_per_call": us,
+                              "derived": row.get("derived", "")}
+            counts[name] = counts.get(name, 0) + 1
+    return rows, counts
+
+
+def split_enforced(regressions, counts: dict, n_baselines: int,
+                   report_only_prefixes: Sequence[str]):
+    """(hard, soft) partition of the regressions per the enforcement tiers."""
+    need = 2 if n_baselines > 1 else 1
+    hard, soft = [], []
+    for reg in regressions:
+        name = reg[0]
+        if (counts.get(name, 0) < need
+                or any(name.startswith(p) for p in report_only_prefixes)):
+            soft.append(reg)
+        else:
+            hard.append(reg)
+    return hard, soft
+
+
 def report(regressions, improvements, missing, threshold: float,
-           out=None) -> None:
+           out=None, soft_regressions=()) -> None:
     out = out if out is not None else sys.stdout
     for name, old_us, new_us, ratio in regressions:
         print(f"REGRESSION {name}: {old_us:.3f} -> {new_us:.3f} us "
               f"({ratio:.2f}x)", file=out)
+    for name, old_us, new_us, ratio in soft_regressions:
+        print(f"REGRESSION (report-only) {name}: {old_us:.3f} -> "
+              f"{new_us:.3f} us ({ratio:.2f}x)", file=out)
     for name, old_us, new_us, ratio in improvements:
         print(f"improved   {name}: {old_us:.3f} -> {new_us:.3f} us "
               f"({ratio:.2f}x)", file=out)
     for name in missing:
         print(f"missing    {name}: no row in the new results", file=out)
-    print(f"{len(regressions)} regression(s) > {threshold * 100:.0f}%, "
+    print(f"{len(regressions)} enforced regression(s) > "
+          f"{threshold * 100:.0f}%, {len(soft_regressions)} report-only, "
           f"{len(improvements)} improvement(s), {len(missing)} missing",
           file=out)
 
@@ -83,28 +139,40 @@ def report(regressions, improvements, missing, threshold: float,
 def main(argv: Sequence[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m benchmarks.diff",
-        description="Diff two BENCH_comm.json files; non-zero exit on "
-                    "latency regressions.")
-    ap.add_argument("--old", default="BENCH_comm.json",
-                    help="baseline JSON (default: the committed one)")
+        description="Diff BENCH_comm.json baselines against fresh results; "
+                    "non-zero exit on enforced latency regressions.")
+    ap.add_argument("--old", action="append", default=None,
+                    help="baseline JSON; repeat for several committed "
+                    "baselines (default: BENCH_comm.json). Rows must appear "
+                    "in >= 2 baselines to be enforced when several are given")
     ap.add_argument("--new", required=True, help="freshly generated JSON")
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="relative slowdown that counts as a regression")
     ap.add_argument("--report-only", action="store_true",
-                    help="print the report but always exit 0 (CI mode)")
+                    help="print the report but always exit 0")
+    ap.add_argument("--report-only-prefixes",
+                    default=",".join(DEFAULT_REPORT_ONLY_PREFIXES),
+                    help="comma list of row-name prefixes that are never "
+                    "enforced (new rows riding one PR before their second "
+                    "baseline)")
     args = ap.parse_args(argv)
+    olds = args.old or ["BENCH_comm.json"]
+    prefixes = tuple(p for p in args.report_only_prefixes.split(",") if p)
 
     try:
-        old_rows = load_rows(args.old)
+        baselines = [load_rows(p) for p in olds]
         new_rows = load_rows(args.new)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"benchmarks.diff: {e}", file=sys.stderr)
         return 0 if args.report_only else 2
 
+    old_rows, counts = merge_baselines(baselines)
     regressions, improvements, missing = compare(
         old_rows, new_rows, args.threshold)
-    report(regressions, improvements, missing, args.threshold)
-    if regressions and not args.report_only:
+    hard, soft = split_enforced(regressions, counts, len(baselines), prefixes)
+    report(hard, improvements, missing, args.threshold,
+           soft_regressions=soft)
+    if hard and not args.report_only:
         return 1
     return 0
 

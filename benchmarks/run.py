@@ -29,12 +29,14 @@ def _ensure_devices():
 
 def main() -> None:
     _ensure_devices()
-    from benchmarks import b_eff, lm_roofline, resources, swe_scaling
+    from benchmarks import (b_eff, lm_collectives, lm_roofline, resources,
+                            swe_scaling)
 
     print("name,us_per_call,derived")
     modules = [("b_eff(fig4)", b_eff), ("resources(fig3)", resources),
                ("swe(fig9,fig10,table1)", swe_scaling),
-               ("lm_roofline", lm_roofline)]
+               ("lm_roofline", lm_roofline),
+               ("lm_collectives", lm_collectives)]
     only = None
     json_path = "BENCH_comm.json"
     for a in sys.argv[1:]:

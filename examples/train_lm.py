@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_config, get_smoke_config
-from repro.core.config import CommConfig
+from repro.core.config import CommConfig, OVERLAPPED_CONFIG
 from repro.data.pipeline import DataConfig
 from repro.launch import setup
 from repro.optim import adamw
@@ -33,6 +33,11 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--comm", default="fused",
+                    choices=("fused", "overlapped", "auto"),
+                    help="TP/MoE comm path: fused (one psum per combine), "
+                    "overlapped (chunked double-buffered TP reduce + chunked "
+                    "MoE all-to-all), or auto (fastest measured TuneDB config)")
     args = ap.parse_args()
 
     if args.full_size:
@@ -56,7 +61,9 @@ def main():
 
     oc = adamw.OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
                          zero1=True)
-    sess = setup.build_session(cfg, mesh, CommConfig(), oc=oc)
+    comm = {"fused": CommConfig(), "overlapped": OVERLAPPED_CONFIG,
+            "auto": "auto"}[args.comm]
+    sess = setup.build_session(cfg, mesh, comm, oc=oc)
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch)
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")

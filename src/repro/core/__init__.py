@@ -7,7 +7,8 @@ Public API:
                  reduce_scatter, all_to_all, broadcast, hierarchical_all_reduce,
                  resolve_config ("auto" -> autotuned CommConfig via repro.tune)
     streaming:   chunked_permute, buffered_permute, pipelined_consume,
-                 overlapped_matmul_allreduce
+                 double_buffered_exchange, overlapped_matmul_allreduce,
+                 chunked_all_to_all
     latmodel:    pingping_latency, eq2_throughput, eq3_l_comm, roofline_terms
     scheduler:   HostScheduledRunner, FusedRunner, make_runner
 """

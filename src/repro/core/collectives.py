@@ -83,7 +83,9 @@ def edge_color_rounds(edges: Sequence[tuple[int, int]]) -> list[list[tuple[int, 
 
 def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
                             rounds: Sequence[Sequence[tuple[int, int]]],
-                            comm: Communicator, cfg: CommConfig) -> list[jnp.ndarray]:
+                            comm: Communicator, cfg: CommConfig,
+                            consume=None, init=None,
+                            chunk_consume=None, chunk_align: int = 1):
     """Halo exchange with several neighbors: one sendrecv per round.
 
     ``payloads[r]`` is this rank's message for round ``r`` (ranks not sending
@@ -92,12 +94,23 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
     Overlapped scheduling routes through the double-buffered engine: rounds
     alternate between two buffers and the ordered ack chain runs per buffer,
     so a consumer can fold one buffer while the other is in flight.
+
+    Overlapped scheduling additionally accepts the engine's consume hooks:
+    ``consume(carry, round, message)`` folds whole rounds, and
+    ``chunk_consume(carry, round, chunk_index, chunk)`` folds each
+    ``chunk_align``-aligned wire chunk as it lands (chunk-level halo
+    consume — see :func:`repro.core.streaming.double_buffered_exchange`).
+    When either hook is given the return value is ``(carry, received)``;
+    otherwise just ``received`` (round order).
     """
     if cfg.scheduling == Scheduling.OVERLAPPED:
         for perm in rounds:
             comm.neighbor_perms(perm)
-        _, received = streaming.double_buffered_exchange(
-            payloads, rounds, comm.axis, cfg)
+        carry, received = streaming.double_buffered_exchange(
+            payloads, rounds, comm.axis, cfg, consume=consume, init=init,
+            chunk_consume=chunk_consume, chunk_align=chunk_align)
+        if consume is not None or chunk_consume is not None:
+            return carry, received
         return received
     received = []
     prev = None
@@ -276,7 +289,17 @@ def reduce_scatter(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
 
 def all_to_all(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
                split_axis: int = 0, concat_axis: int = 0) -> jnp.ndarray:
-    """All-to-all (MoE dispatch). Wire compression via bf16 cast if enabled."""
+    """All-to-all (MoE dispatch). Wire compression via bf16 cast if enabled.
+
+    Overlapped scheduling with streaming delivery tiles the message into
+    independent wire chunks (:func:`repro.core.streaming.chunked_all_to_all`)
+    so the dispatch/combine overlaps its own transfer — bitwise-identical
+    to the fused op.
+    """
+    if (cfg.scheduling == Scheduling.OVERLAPPED
+            and cfg.mode == CommMode.STREAMING):
+        return streaming.chunked_all_to_all(x, comm, cfg, split_axis,
+                                            concat_axis)
     if cfg.compression != Compression.NONE and cfg.enable_compression_plugin:
         orig = x.dtype
         y = lax.all_to_all(x.astype(jnp.bfloat16), comm.axis_names,

@@ -18,6 +18,7 @@ Eq. 3  L_comm = (E_send + E_recv + 2·N_max·l_k·f + N_max·l_m·f)/f + L_pingp
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core.config import CommConfig, CommMode, Compression, HardwareSpec, Scheduling, V5E
 
@@ -38,6 +39,21 @@ def l_k(cfg: CommConfig, hw: HardwareSpec = V5E) -> float:
     return hw.host_dispatch if cfg.scheduling == Scheduling.HOST else hw.fused_dispatch
 
 
+def n_commands(msg_bytes: int, cfg: CommConfig) -> float:
+    """Scheduled commands per transfer — the Eq. 3 'one more scheduled
+    command' term, applied at wire-chunk granularity.
+
+    Buffered mode moves the whole message through the staging buffer: two
+    commands (write + read-back), independent of segmentation.  Streaming
+    mode issues one command per wire chunk (``num_chunks``), which is what
+    prices small segments out at multi-MiB messages — the paper's
+    segmentation/jumbo-frame trade-off."""
+    if cfg.mode == CommMode.BUFFERED:
+        return 2.0
+    return float(max(1, min(cfg.max_chunks,
+                            math.ceil(max(1, msg_bytes) / cfg.chunk_bytes))))
+
+
 def l_m(msg_bytes: int, hw: HardwareSpec = V5E) -> float:
     """Staging copy through HBM (write + read back)."""
     return 2.0 * msg_bytes / hw.hbm_bw
@@ -55,9 +71,11 @@ def pingping_latency(msg_bytes: int, cfg: CommConfig, hw: HardwareSpec = V5E,
     """Eq. 1. One-directional message latency for the configured mode."""
     if cfg.mode == CommMode.BUFFERED:
         return 2.0 * l_k(cfg, hw) + l_m(msg_bytes, hw) + l_c(msg_bytes, cfg, hw, hops)
-    # Streaming: single command, no staging copy; chunking pipelines the wire
-    # so only the first chunk pays full link latency.
-    return l_k(cfg, hw) + l_c(msg_bytes, cfg, hw, hops)
+    # Streaming: no staging copy; chunking pipelines the wire so only the
+    # first chunk pays full link latency, but every chunk is one scheduled
+    # command (n_commands — sub-µs fused on real hardware, dominant on
+    # host-CPU substrates).
+    return n_commands(msg_bytes, cfg) * l_k(cfg, hw) + l_c(msg_bytes, cfg, hw, hops)
 
 
 def effective_bandwidth(msg_bytes: int, cfg: CommConfig,

@@ -27,12 +27,26 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.config import CommConfig, CommMode, Transport
+from repro.core.config import CommConfig, CommMode, Compression, Transport
 from repro.core import plugins
 
 
 def num_chunks(nbytes: int, cfg: CommConfig) -> int:
     return max(1, min(cfg.max_chunks, math.ceil(nbytes / cfg.chunk_bytes)))
+
+
+def aligned_chunks(x: jnp.ndarray, cfg: CommConfig, align: int = 1
+                   ) -> tuple[int, int]:
+    """Wire-chunk geometry for streaming ``x``: (n_chunks, chunk_elems).
+
+    ``chunk_elems`` is a multiple of ``align`` flat elements, so a wire chunk
+    never splits a logical row of ``align`` elements — the recv_slot-aligned
+    chunking that lets a halo consumer scatter-fold whole rows per chunk.
+    """
+    n = num_chunks(x.size * x.dtype.itemsize, cfg)
+    per = max(1, math.ceil(x.size / n))
+    chunk_elems = max(align, math.ceil(per / align) * align)
+    return max(1, math.ceil(x.size / chunk_elems)), chunk_elems
 
 
 def split_chunks(x: jnp.ndarray, n: int):
@@ -90,32 +104,49 @@ def buffered_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
 
 def pipelined_consume(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
                       axis_name: str, cfg: CommConfig,
-                      consume: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
-                      init):
-    """Stream ``x`` to the neighbor and fold ``consume`` over arriving chunks.
+                      consume: Callable, init, align: int = 1):
+    """Stream ``x`` to the neighbor and fold ``consume`` over arriving wire
+    chunks.
 
-    ``consume(carry, chunk) -> carry`` runs on chunk *i* while chunk *i+1* is
-    in flight — the paper's 'process incoming data before the transmission is
-    complete'.  Returns (carry, received_message).
+    ``consume(carry, chunk_index, chunk) -> carry`` runs on chunk *i* while
+    chunk *i+1* is in flight — the paper's 'process incoming data before the
+    transmission is complete'.  ``chunk`` is the decoded flat chunk
+    (``chunk_elems`` elements; the tail chunk is zero-padded).  Chunk
+    boundaries fall on multiples of ``align`` flat elements, so a consumer
+    that folds logical rows of ``align`` elements (the halo's recv_slot rows)
+    never sees a split row.  Ordered transport chains chunk *i* on the
+    delivery of chunk *i - window* (the ack window), exactly like
+    :func:`chunked_permute`.  Returns (carry, received_message).
     """
-    n = num_chunks(x.size * x.dtype.itemsize, cfg)
-    chunks, unsplit = split_chunks(x, n)
+    n, chunk_elems = aligned_chunks(x, cfg, align)
+    flat = x.reshape(-1)
+    pad = n * chunk_elems - flat.shape[0]
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, chunk_elems)
     carry = init
     received = []
     for i in range(n):
-        enc, dec = plugins.wire_encode(chunks[i], cfg)
+        payload = chunks[i]
+        if cfg.transport == Transport.ORDERED and i >= cfg.window:
+            payload, _ = lax.optimization_barrier(
+                (payload, received[i - cfg.window]))
+        enc, dec = plugins.wire_encode(payload, cfg)
         out = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm=list(perm)), enc)
         r = dec(out)
         received.append(r)
-        carry = consume(carry, r)
-    return carry, unsplit(jnp.stack(received))
+        carry = consume(carry, i, r)
+    msg = jnp.stack(received).reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
+    return carry, msg
 
 
 def double_buffered_exchange(payloads: Sequence[jnp.ndarray],
                              perms: Sequence[Sequence[tuple[int, int]]],
                              axis_name: str, cfg: CommConfig,
                              consume: Callable | None = None,
-                             init=None):
+                             init=None,
+                             chunk_consume: Callable | None = None,
+                             chunk_align: int = 1):
     """Multi-round exchange through two alternating halo buffers.
 
     Round ``r`` lands in buffer ``r % 2``.  Under ordered transport the ack
@@ -126,11 +157,21 @@ def double_buffered_exchange(payloads: Sequence[jnp.ndarray],
     :func:`pipelined_consume` (streaming) or :func:`buffered_permute`
     (buffered), so chunk-level pipelining still applies inside a round.
 
-    ``consume(carry, round_index, message) -> carry`` folds each round's
-    reassembled message as soon as its buffer allows (e.g. scatter-add into
-    the halo slots).  Returns ``(carry, received)`` with ``received`` in
-    round order; values are bitwise-identical to a serialized exchange —
-    only the dependency structure differs.
+    Two consume granularities:
+
+    - ``consume(carry, round_index, message) -> carry`` folds each round's
+      reassembled message as soon as its buffer allows (e.g. scatter-add
+      into the halo slots).
+    - ``chunk_consume(carry, round_index, chunk_index, chunk) -> carry``
+      folds each ``chunk_align``-aligned wire chunk *as it lands* (streaming
+      rounds only): a single large neighbor message overlaps its own
+      assembly instead of fencing the fold on the full round.  When given,
+      it replaces ``consume`` for streaming rounds; buffered rounds (which
+      have no wire chunks) still fold through ``consume``.
+
+    Returns ``(carry, received)`` with ``received`` in round order; values
+    are bitwise-identical to a serialized exchange — only the dependency
+    structure differs.
     """
     bufs: tuple[list, list] = ([], [])
     carry = init
@@ -141,27 +182,48 @@ def double_buffered_exchange(payloads: Sequence[jnp.ndarray],
             # Per-buffer ack chain: no cross-buffer serialization.
             payload, _ = lax.optimization_barrier((payload, buf[-1]))
         if cfg.mode == CommMode.STREAMING:
-            carry, msg = pipelined_consume(
-                payload, perm, axis_name, cfg, lambda c, _chunk: c, carry)
+            if chunk_consume is not None:
+                carry, msg = pipelined_consume(
+                    payload, perm, axis_name, cfg,
+                    lambda c, i, ch, _r=r: chunk_consume(c, _r, i, ch),
+                    carry, align=chunk_align)
+            else:
+                carry, msg = pipelined_consume(
+                    payload, perm, axis_name, cfg,
+                    lambda c, _i, _chunk: c, carry)
+                if consume is not None:
+                    carry = consume(carry, r, msg)
         else:
             msg = buffered_permute(payload, perm, axis_name, cfg)
-        if consume is not None:
-            carry = consume(carry, r, msg)
+            if consume is not None:
+                carry = consume(carry, r, msg)
         buf.append(msg)
         received.append(msg)
     return carry, received
 
 
 def overlapped_matmul_allreduce(h: jnp.ndarray, w: jnp.ndarray,
-                                axis_names, cfg: CommConfig,
+                                comm, cfg: CommConfig,
                                 n_chunks: int | None = None) -> jnp.ndarray:
-    """Row-parallel TP matmul with the reduction streamed against compute.
+    """Row-parallel TP matmul with the reduction double-buffered against
+    compute.
 
     ``h``: (tokens, ff_shard) activation shard; ``w``: (ff_shard, d) weight
-    shard; result: (tokens, d) fully reduced.  Token rows are split into
-    chunks; each chunk's psum is independent of the next chunk's matmul, so
-    the scheduler overlaps collective *i* with compute *i+1* (streaming TP).
-    With ``n_chunks=1`` this degrades to the buffered (sequential) pattern.
+    shard; result: (tokens, d) fully reduced.  ``comm`` is the caller's TP
+    :class:`~repro.core.communicator.Communicator`, reused — not rebuilt —
+    so ``torus_hops`` and hop-aware ``select_config`` describe the real
+    topology of the TP axis (axis name(s) are still accepted and wrap a
+    size-unknown communicator for backward compatibility).
+
+    Token rows are split into wire chunks; each chunk's psum is independent
+    of the next chunk's matmul, so the scheduler overlaps collective *i*
+    with compute *i+1* (streaming TP).  Under ordered transport the chunks
+    form a two-deep ack chain — chunk *i*'s matmul waits on the delivery of
+    reduce *i − 2*, the per-layer double buffering of the TP reduce — never
+    on the whole history.  With ``n_chunks=1`` this degrades to the
+    buffered (sequential) pattern.  Bitwise-identical to the fused
+    matmul + all-reduce: row chunking and identity barriers never change
+    the arithmetic.
     """
     tokens = h.shape[0]
     if n_chunks is None:
@@ -173,19 +235,68 @@ def overlapped_matmul_allreduce(h: jnp.ndarray, w: jnp.ndarray,
     import dataclasses as _dc
     from repro.core import collectives
     from repro.core.communicator import Communicator
-    from repro.core.config import Compression
-    axes = (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
-    comm = Communicator(axes, (1,) * len(axes))
+    if not isinstance(comm, Communicator):
+        axes = (comm,) if isinstance(comm, str) else tuple(comm)
+        comm = Communicator(axes, (1,) * len(axes))
     # The chunked overlap IS the streaming mechanism here; the per-chunk
     # combine itself uses the native collective.
     cfg_native = _dc.replace(
         cfg, algorithm="native",
         compression=(Compression.NONE if cfg.compression == Compression.INT8
                      else cfg.compression))
-    parts = []
+    parts: list[jnp.ndarray] = []
     rows = tokens // n_chunks
     for i in range(n_chunks):
         hc = lax.dynamic_slice_in_dim(h, i * rows, rows, axis=0)
+        if cfg.transport == Transport.ORDERED and i >= 2:
+            # Double-buffered ack chain: two reduce buffers alternate; the
+            # next chunk's compute waits only on its own buffer's delivery.
+            hc, _ = lax.optimization_barrier((hc, parts[i - 2]))
         partial = jnp.dot(hc, w, preferred_element_type=jnp.float32)
         parts.append(collectives.all_reduce(partial, comm, cfg_native))
     return jnp.concatenate(parts, axis=0).astype(h.dtype)
+
+
+def chunked_all_to_all(x: jnp.ndarray, comm, cfg: CommConfig,
+                       split_axis: int = 0, concat_axis: int = 0) -> jnp.ndarray:
+    """Streaming all-to-all (MoE dispatch/combine): tile a non-exchanged
+    axis into wire chunks, one ``lax.all_to_all`` per chunk.
+
+    Chunk *i*'s exchange carries no data dependency on chunk *i+1*'s
+    (unordered transport), so the latency-hiding scheduler overlaps the
+    chunks' transfers with each other and with the consumer's per-chunk
+    work; ordered transport chains chunk *i* on chunk *i − window* (ack
+    window).  Values are bitwise-identical to the single fused all-to-all —
+    tiling a non-split axis only partitions pure data movement.  Falls back
+    to one call when no tileable axis exists (1-D payloads) or the message
+    fits a single chunk.
+    """
+    axis_names = comm.axis_names if hasattr(comm, "axis_names") else comm
+
+    def one(t: jnp.ndarray) -> jnp.ndarray:
+        if cfg.compression != Compression.NONE and cfg.enable_compression_plugin:
+            orig = t.dtype
+            y = lax.all_to_all(t.astype(jnp.bfloat16), axis_names,
+                               split_axis=split_axis, concat_axis=concat_axis,
+                               tiled=True)
+            return y.astype(orig)
+        return lax.all_to_all(t, axis_names, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+    tile_axis = next((a for a in range(x.ndim - 1, -1, -1)
+                      if a not in (split_axis % x.ndim, concat_axis % x.ndim)),
+                     None)
+    if tile_axis is None:
+        return one(x)
+    n = min(num_chunks(x.size * x.dtype.itemsize, cfg), x.shape[tile_axis])
+    if n <= 1:
+        return one(x)
+    dim = x.shape[tile_axis]
+    width = math.ceil(dim / n)
+    outs: list[jnp.ndarray] = []
+    for i, start in enumerate(range(0, dim, width)):
+        sl = lax.slice_in_dim(x, start, min(start + width, dim), axis=tile_axis)
+        if cfg.transport == Transport.ORDERED and i >= cfg.window:
+            sl, _ = lax.optimization_barrier((sl, outs[i - cfg.window]))
+        outs.append(one(sl))
+    return jnp.concatenate(outs, axis=tile_axis)

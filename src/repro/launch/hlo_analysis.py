@@ -277,69 +277,80 @@ _NAME_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=")
 _OPNAME_RE = re.compile(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[^=]*?\s([a-z][\w\-]*)\(")
 
 
-def permute_overlap_stats(text: str) -> dict:
-    """How much compute can run concurrently with the collective-permutes.
+def permute_overlap_stats(text: str,
+                          ops: tuple = ("collective-permute",)) -> dict:
+    """How much compute can run concurrently with the tracked collectives.
 
-    Two complementary signals, so the check works on any backend:
+    ``ops`` names the collective op families to track (HLO opcode prefixes:
+    ``collective-permute`` by default; pass e.g. ``("all-reduce",)`` or
+    ``("all-to-all",)`` for the LM paths' combines).  Three complementary
+    signals, so the check works on any backend:
 
-    - **async pairs** (TPU/GPU backends split permutes into
-      ``collective-permute-start``/``-done``): for every pair, the number of
-      compute ops scheduled between start and done — nonzero gaps mean the
+    - **async pairs** (TPU/GPU backends split collectives into
+      ``<op>-start``/``<op>-done``): for every pair, the number of compute
+      ops scheduled between start and done — nonzero gaps mean the
       latency-hiding scheduler actually placed work inside the transfer.
     - **dependency classes** (all backends, incl. CPU's synchronous
-      ``collective-permute``): every op in a permute-bearing computation is
-      *upstream* (feeds a permute), *downstream* (consumes one), or
+      collectives): every op in a collective-bearing computation is
+      *upstream* (feeds a collective), *downstream* (consumes one), or
       *overlappable* (neither — free to execute while the wire is busy).
-      The overlapped schedule exists precisely to maximize that third class;
-      the fused step funnels nearly all element work downstream of the halo.
+      The overlapped halo schedule exists precisely to maximize that third
+      class; the fused step funnels nearly all element work downstream.
+    - **independent pairs**: the number of unordered pairs of tracked
+      collectives with no dependency path between them — the signal for
+      chunk-level decoupling (the fused TP reduce is ONE all-reduce, hence
+      zero pairs; the chunk-overlapped one is N mutually independent
+      reduces, hence N·(N−1)/2 pairs the scheduler may run concurrently).
     """
     comps, _ = split_computations(text)
     stats = {"sync_permutes": 0, "async_pairs": 0, "pair_gaps": [],
              "overlappable_compute": 0, "upstream_compute": 0,
-             "downstream_compute": 0}
+             "downstream_compute": 0, "n_collectives": 0,
+             "independent_pairs": 0}
     for lines in comps.values():
-        ops = []   # (name, opname, operands)
+        op_rows = []   # (name, opname, operands)
         for line in lines:
             nm = _NAME_RE.match(line)
             opm = _OPNAME_RE.match(line)
             if not nm or not opm:
                 continue
-            ops.append((nm.group(1), opm.group(1), _operand_names(line)))
-        permutes = [i for i, (_, op, _o) in enumerate(ops)
-                    if op.startswith("collective-permute")]
+            op_rows.append((nm.group(1), opm.group(1), _operand_names(line)))
+        permutes = [i for i, (_, op, _o) in enumerate(op_rows)
+                    if any(op == p or op == p + "-start" or op == p + "-done"
+                           for p in ops)]
         if not permutes:
             continue
         stats["sync_permutes"] += sum(
-            1 for i in permutes if ops[i][1] == "collective-permute")
+            1 for i in permutes if op_rows[i][1] in ops)
         # async start/done pairs and the compute scheduled between them
-        starts = {ops[i][0]: i for i in permutes
-                  if ops[i][1] == "collective-permute-start"}
+        starts = {op_rows[i][0]: i for i in permutes
+                  if op_rows[i][1].endswith("-start")}
         for i in permutes:
-            if ops[i][1] != "collective-permute-done":
+            if not op_rows[i][1].endswith("-done"):
                 continue
-            for operand in ops[i][2]:
+            for operand in op_rows[i][2]:
                 if operand in starts:
                     j = starts[operand]
                     gap = sum(1 for k in range(j + 1, i)
-                              if ops[k][1] in _COMPUTE_OPS)
+                              if op_rows[k][1] in _COMPUTE_OPS)
                     stats["async_pairs"] += 1
                     stats["pair_gaps"].append(gap)
                     break
         # dependency classes (SSA def order makes single passes sufficient)
-        defs = {name: k for k, (name, _, _) in enumerate(ops)}
-        downstream = {ops[i][0] for i in permutes}
-        for name, _op, operands in ops:
+        defs = {name: k for k, (name, _, _) in enumerate(op_rows)}
+        downstream = {op_rows[i][0] for i in permutes}
+        for name, _op, operands in op_rows:
             if any(o in downstream for o in operands):
                 downstream.add(name)
         upstream = set()
-        frontier = [o for i in permutes for o in ops[i][2]]
+        frontier = [o for i in permutes for o in op_rows[i][2]]
         while frontier:
             n = frontier.pop()
             if n in upstream or n not in defs:
                 continue
             upstream.add(n)
-            frontier.extend(ops[defs[n]][2])
-        for name, op, _operands in ops:
+            frontier.extend(op_rows[defs[n]][2])
+        for name, op, _operands in op_rows:
             if op not in _COMPUTE_OPS:
                 continue
             if name in downstream:
@@ -348,4 +359,25 @@ def permute_overlap_stats(text: str) -> dict:
                 stats["upstream_compute"] += 1
             else:
                 stats["overlappable_compute"] += 1
+        # independent collective pairs: one logical collective per sync op
+        # or -start op (the matching -done is the same logical transfer).
+        coll_idx = [i for i in permutes
+                    if not op_rows[i][1].endswith("-done")]
+        ids = {i: b for b, i in enumerate(coll_idx)}
+        masks: dict[str, int] = {}   # name -> bitmask of ancestor collectives
+        anc = {}                     # collective bit -> ancestor mask
+        for k, (name, _op, operands) in enumerate(op_rows):
+            m = 0
+            for o in operands:
+                m |= masks.get(o, 0)
+            if k in ids:
+                anc[ids[k]] = m
+                m |= 1 << ids[k]
+            masks[name] = m
+        n_coll = len(coll_idx)
+        stats["n_collectives"] += n_coll
+        for a in range(n_coll):
+            for b in range(a + 1, n_coll):
+                if not (anc[b] >> a) & 1 and not (anc[a] >> b) & 1:
+                    stats["independent_pairs"] += 1
     return stats

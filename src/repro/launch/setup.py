@@ -38,14 +38,29 @@ class Session:
     ms_mask: Any = None
 
 
-def build_session(cfg: ModelConfig, mesh: Mesh, comm: CommConfig,
+def build_session(cfg: ModelConfig, mesh: Mesh, comm: CommConfig | str,
                   oc: Optional[adamw.OptConfig] = None, fsdp: bool = False,
                   seed: int = 0, concrete: bool = True,
                   attn_tiling: str = "auto",
-                  seq_parallel: bool = False) -> Session:
+                  seq_parallel: bool = False,
+                  tune_db_path=None) -> Session:
+    """Build a training session.
+
+    ``comm="auto"`` asks the autotuner for the fastest measured config for
+    the LM path's dominant collective — the per-layer row-parallel TP
+    combine, an (tokens, d_model) f32 partial sum — falling back to
+    ``OPTIMIZED_CONFIG`` on a cold TuneDB.  The lookup size is a nominal
+    1K-token microbatch; TuneDB answers by log-space-nearest message size,
+    so the estimate only needs the right order of magnitude.
+    """
     mesh_ctx = MeshContext.from_mesh(mesh)
     tp = mesh_ctx.model_size
     oc = oc or adamw.OptConfig()
+    if not isinstance(comm, CommConfig):
+        from repro.core.collectives import resolve_config
+        msg_bytes = 4 * cfg.d_model * 1024
+        comm = resolve_config(comm, "all_reduce", msg_bytes, mesh=mesh,
+                              db_path=tune_db_path)
 
     init_fn = functools.partial(transformer.init_model, cfg=cfg, tp=tp)
     key = jax.random.PRNGKey(seed)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import collectives, streaming
-from repro.core.config import CommMode
+from repro.core.config import CommMode, Scheduling
 from repro.models.common import Runtime
 
 
@@ -214,17 +214,22 @@ def col_parallel(x: jnp.ndarray, w_shard: jnp.ndarray) -> jnp.ndarray:
 def row_parallel(x_shard: jnp.ndarray, w_shard: jnp.ndarray, rt: Runtime) -> jnp.ndarray:
     """Feature-sharded x @ row-sharded w -> replicated output (one combine).
 
-    Streaming mode chunk-pipelines the all-reduce against the matmul; buffered
-    mode issues one psum after the full matmul (paper §3.1 applied to TP).
+    Streaming mode — and any config with ``Scheduling.OVERLAPPED`` — routes
+    the combine through ``streaming.overlapped_matmul_allreduce``: the
+    per-layer TP reduce is chunked and double-buffered against the matmul,
+    reusing the runtime's TP communicator so hop-aware tuning sees the real
+    topology.  Buffered+fused issues one psum after the full matmul (paper
+    §3.1/§5 applied to TP).  All paths are bitwise-identical.
     """
     if rt.mesh.tp == 1:
         return jnp.dot(x_shard, w_shard, preferred_element_type=jnp.float32
                        ).astype(x_shard.dtype)
-    if rt.comm.mode == CommMode.STREAMING:
+    if (rt.comm.mode == CommMode.STREAMING
+            or rt.comm.scheduling == Scheduling.OVERLAPPED):
         lead = x_shard.shape[:-1]
         h2 = x_shard.reshape(-1, x_shard.shape[-1])
         out = streaming.overlapped_matmul_allreduce(
-            h2, w_shard, (rt.mesh.axis_model,), rt.comm)
+            h2, w_shard, rt.tp_comm(), rt.comm)
         return out.reshape(*lead, w_shard.shape[-1]).astype(x_shard.dtype)
     partial = jnp.dot(x_shard, w_shard, preferred_element_type=jnp.float32)
     out = collectives.all_reduce(partial, rt.tp_comm(), rt.comm)

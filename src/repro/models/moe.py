@@ -13,7 +13,10 @@ the combine is a single ACCL-X all-reduce that simultaneously sums expert
 contributions and intra-expert ff-shards.  An alternative all-to-all dispatch
 (EP over the data axis — tokens travel) is provided for the collective-bound
 experiments; it is the MoE pattern whose latency the paper's streaming levers
-target.
+target.  Under ``Scheduling.OVERLAPPED`` (streaming delivery) both the
+dispatch and the combine all-to-all are tiled into independent wire chunks
+(``streaming.chunked_all_to_all`` via ``collectives.all_to_all``), so each
+exchange overlaps its own transfer — bitwise-identical to the fused op.
 
 Capacity semantics follow Switch/GShard: per expert at most
 C = capacity_factor · T · top_k / n_experts tokens; overflow tokens drop that
@@ -203,6 +206,8 @@ def moe_block_a2a(params, x_shard: jnp.ndarray, rt: Runtime
         send_idx = lax.dynamic_update_slice(send_idx, sel_i[None],
                                             (owner, slot * cap))
 
+    # Dispatch: overlapped scheduling tiles this into independent wire
+    # chunks along D (chunk-level overlap); fused issues one all-to-all.
     recv = collectives.all_to_all(send, comm, rt.comm)          # (dp, e_loc·cap, D)
     wg = params["w_gate"].reshape(-1, D, params["w_gate"].shape[-1])
     wu = params["w_up"].reshape(-1, D, params["w_up"].shape[-1])
@@ -213,6 +218,7 @@ def moe_block_a2a(params, x_shard: jnp.ndarray, rt: Runtime
         y = _expert_mlp(xg, wg[j], wu[j], wd[j], cfg.mlp_type)
         ys.append(y.reshape(dp, cap, D))
     y_out = jnp.concatenate(ys, axis=1)                         # (dp, e_loc·cap, D)
+    # Combine: same chunked-overlap routing as the dispatch.
     back = collectives.all_to_all(y_out.astype(x_shard.dtype), comm, rt.comm)
 
     out = jnp.zeros((T, D), jnp.float32)

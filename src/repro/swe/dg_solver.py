@@ -31,6 +31,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import collectives, streaming
 from repro.core.communicator import Communicator
@@ -104,7 +105,8 @@ def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
                 for r in range(pm.n_rounds)]
 
     def fold_round(halo, recv_slot_r, recv):
-        """Scatter-add one round's message into its halo slots."""
+        """Scatter-add one round's message (or any row-aligned slice of it)
+        into its halo slots."""
         ok = recv_slot_r >= 0
         return halo.at[jnp.where(ok, recv_slot_r, pm.h_max - 1)].add(
             jnp.where(ok[:, None], recv, 0.0))
@@ -121,16 +123,32 @@ def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
         return halo
 
     def exchange_overlapped(state, send_idx, send_mask, recv_slot):
-        """Double-buffered exchange: each round's message is folded into the
-        halo as soon as its buffer's dependency chain allows."""
+        """Double-buffered exchange with chunk-level halo consume: each
+        recv_slot-aligned wire chunk is scatter-added into the halo AS IT
+        LANDS, so a single large neighbor message overlaps its own assembly
+        instead of fencing the fold on the whole round (buffered-mode rounds,
+        which have no wire chunks, still fold per round)."""
         halo = jnp.zeros((pm.h_max, 3), state.dtype)
         if not rounds:
             return halo
-        halo, _ = streaming.double_buffered_exchange(
-            payloads_for(state, send_idx, send_mask), rounds, comm.axis,
-            comm_cfg,
+        # Chunk geometry is shared by every round (payloads are all
+        # (S_max, 3)): align to 3 flat elements so a wire chunk always
+        # carries whole (h, hu, hv) halo rows.
+        probe = jnp.zeros((pm.s_max, 3), state.dtype)
+        _, chunk_elems = streaming.aligned_chunks(probe, comm_cfg, align=3)
+        rows_per_chunk = chunk_elems // 3
+
+        def fold_chunk(h, r, i, chunk):
+            r0 = i * rows_per_chunk
+            slots = lax.slice_in_dim(recv_slot[r], r0,
+                                     min(r0 + rows_per_chunk, pm.s_max))
+            rows = chunk.reshape(-1, 3)[: slots.shape[0]]
+            return fold_round(h, slots, rows)
+
+        halo, _ = collectives.multi_neighbor_exchange(
+            payloads_for(state, send_idx, send_mask), rounds, comm, comm_cfg,
             consume=lambda h, r, recv: fold_round(h, recv_slot[r], recv),
-            init=halo)
+            init=halo, chunk_consume=fold_chunk, chunk_align=3)
         return halo
 
     def edge_fluxes(u_own, u_n, n, edge_type, t):

@@ -35,6 +35,12 @@ def train(sess: setup_mod.Session, data_cfg: DataConfig, loop: LoopConfig,
     step_fn = setup_mod.make_sharded_train_step(
         sess, accum_steps=loop.accum_steps, donate=True)(bspec)
 
+    # Record which comm path this run takes (fused psum vs chunk-overlapped
+    # TP reduce / MoE a2a) — the session may have resolved comm_cfg="auto".
+    cc = sess.rt.comm
+    log(f"[comm] mode={cc.mode.value} scheduling={cc.scheduling.value} "
+        f"transport={cc.transport.value} algorithm={cc.algorithm}")
+
     source = SyntheticLM(data_cfg)
     start_step = int(np.asarray(jax.device_get(sess.opt_state["step"])))
     loader = PrefetchLoader(source, start_step=start_step)

@@ -13,6 +13,9 @@ for the repo:
   and message size on the running mesh; ``python -m repro.tune.sweep``.
 - :mod:`repro.tune.calibrate` — fit the Eq. 1 constants (l_k, link bandwidth,
   staging cost) from sweep measurements; model-vs-measured report.
+- :mod:`repro.tune.prune`     — model-guided pruning: the calibrated Eq. 1
+  model skips candidates it ranks far off the incumbent (paper-style
+  calibrated search), cutting full-sweep wall clock.
 - :mod:`repro.tune.db`        — persistent ``TuneDB`` JSON store and the
   ``select_config(collective, msg_bytes, mesh)`` entry point every workload
   uses to pick a fast configuration (``comm_cfg="auto"``).
@@ -23,6 +26,8 @@ from repro.tune.db import (TuneDB, TuneEntry, default_db_path, select_config,
                            topology_key)
 from repro.tune.calibrate import (CalibrationResult, calibrate_from_db,
                                   fit_latency_model, model_vs_measured)
+from repro.tune.prune import (calibration_from_db, predicted_latency,
+                              prune_candidates)
 
 
 def run_sweep(*args, **kwargs):
@@ -33,7 +38,8 @@ def run_sweep(*args, **kwargs):
 
 __all__ = [
     "CalibrationResult", "TuneDB", "TuneEntry", "calibrate_from_db",
-    "config_from_dict", "config_to_dict", "default_db_path",
-    "enumerate_configs", "fit_latency_model", "model_vs_measured",
+    "calibration_from_db", "config_from_dict", "config_to_dict",
+    "default_db_path", "enumerate_configs", "fit_latency_model",
+    "model_vs_measured", "predicted_latency", "prune_candidates",
     "run_sweep", "select_config", "space_size", "topology_key",
 ]

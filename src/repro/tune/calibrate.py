@@ -59,8 +59,14 @@ class CalibrationResult:
 
 
 def _design_row(cfg: CommConfig, msg_bytes: int) -> np.ndarray:
-    """Coefficients of [l_k_host, l_k_fused, l0, 1/bw, 2/bw_mem] for Eq. 1."""
-    n_k = 2.0 if cfg.mode == CommMode.BUFFERED else 1.0
+    """Coefficients of [l_k_host, l_k_fused, l0, 1/bw, 2/bw_mem] for Eq. 1.
+
+    The command count is ``latmodel.n_commands``: 2 for buffered (staging
+    write + read-back), one per wire chunk for streaming — keeping the fit
+    consistent with the chunk-aware ``pingping_latency`` so the pruning
+    model's predictions live on the same surface the constants were fitted
+    on."""
+    n_k = latmodel.n_commands(msg_bytes, cfg)
     host = n_k if cfg.scheduling == Scheduling.HOST else 0.0
     # overlapped is device-scheduled like fused: same in-program issue cost
     fused = n_k if cfg.scheduling != Scheduling.HOST else 0.0

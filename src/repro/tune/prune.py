@@ -1,0 +1,89 @@
+"""Model-guided sweep pruning — the paper's calibrated-model search.
+
+The paper does not measure its whole configuration space blindly: the Eq. 1
+latency model, calibrated against a handful of measurements, ranks the
+candidates and only the plausible ones are benchmarked.  This module closes
+that loop for the autotuner: given a :class:`~repro.tune.calibrate.
+CalibrationResult` fitted on this substrate, :func:`prune_candidates` drops
+every candidate the model predicts to be more than ``ratio``× slower than
+the predicted incumbent, cutting full-sweep wall clock while keeping every
+config that could plausibly win within measurement noise.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core import latmodel
+from repro.core.config import CommConfig, CommMode, Scheduling
+from repro.tune.calibrate import CalibrationResult, calibrate_from_db
+
+# Default pruning aggressiveness: skip configs the model ranks > 2x off the
+# predicted incumbent.  2x leaves ample headroom for the fit's residuals
+# (rms_rel_err is typically well under 0.5 on a clean sweep).
+DEFAULT_RATIO = 2.0
+
+# Collectives whose streaming implementation splits the message into wire
+# chunks, each an independently scheduled command (chunked_permute /
+# pipelined_consume; all_to_all only tiles under overlapped scheduling).
+# Ring/native reduction collectives move whole segments — no chunk term.
+_CHUNKED_STREAMING = frozenset({"sendrecv", "multi_neighbor"})
+
+
+def predicted_latency(cfg: CommConfig, msg_bytes: int,
+                      calibration: CalibrationResult,
+                      collective: str | None = None) -> float:
+    """Eq. 1 prediction (seconds) for one candidate on the calibrated
+    substrate.
+
+    The chunk-aware ``pingping_latency`` charges one scheduled command per
+    wire chunk — what ranks a 64 KiB-segment config far off a jumbo-segment
+    incumbent at multi-MiB messages (the paper's segmentation/jumbo-frame
+    finding).  Collectives that never split the wire (ring/native reduction
+    collectives; all_to_all outside overlapped scheduling) are predicted at
+    a single command regardless of ``chunk_bytes``.
+    """
+    import dataclasses
+    hw = calibration.to_hardware_spec()
+    chunked = (collective in _CHUNKED_STREAMING
+               and cfg.mode == CommMode.STREAMING) or (
+        collective == "all_to_all"
+        and cfg.mode == CommMode.STREAMING
+        and cfg.scheduling == Scheduling.OVERLAPPED)
+    if not chunked and cfg.mode == CommMode.STREAMING:
+        cfg = dataclasses.replace(cfg, max_chunks=1)
+    return latmodel.pingping_latency(msg_bytes, cfg, hw)
+
+
+def prune_candidates(cands: Sequence[CommConfig], msg_bytes: int,
+                     calibration: CalibrationResult,
+                     ratio: float = DEFAULT_RATIO,
+                     collective: str | None = None
+                     ) -> tuple[list[CommConfig], list[CommConfig]]:
+    """Split candidates into (measure, skip) by calibrated Eq. 1 ranking.
+
+    A candidate is skipped when the model predicts it to be more than
+    ``ratio``× slower than the best predicted candidate (the incumbent).
+    The incumbent itself is always kept, so the pruned sweep can never
+    select a config the exhaustive sweep would not also have measured.
+    """
+    if not cands:
+        return [], []
+    preds = [predicted_latency(c, msg_bytes, calibration, collective)
+             for c in cands]
+    best = min(preds)
+    kept, skipped = [], []
+    for cfg, pred in zip(cands, preds):
+        (kept if pred <= ratio * best else skipped).append(cfg)
+    return kept, skipped
+
+
+def calibration_from_db(db, topo: str | None = None
+                        ) -> CalibrationResult | None:
+    """Fit the Eq. 1 constants from a TuneDB's sendrecv measurements, or
+    ``None`` when the DB holds none for this topology (cold cache — the
+    sweep then seeds its own calibration set first)."""
+    try:
+        result = calibrate_from_db(db, topo)
+    except ValueError:
+        return None
+    return result if result.n_points >= 2 else None

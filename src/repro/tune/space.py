@@ -35,13 +35,14 @@ DEFAULT_AXES: dict[str, tuple] = {
 }
 
 # A trimmed space for --fast smoke sweeps: the paper's four named corner
-# configurations plus the ring-algorithm variant.
+# configurations plus the ring-algorithm variant and both segment sizes
+# (64 KiB vs jumbo 1 MiB — the axis the pruning model separates).
 FAST_AXES: dict[str, tuple] = {
     "mode": tuple(CommMode),
     "scheduling": tuple(Scheduling),
     "transport": (Transport.UNORDERED,),
     "window": (4,),
-    "chunk_bytes": (1 << 20,),
+    "chunk_bytes": (1 << 16, 1 << 20),
     "compression": (Compression.NONE,),
     "algorithm": ("native", "ring"),
 }
@@ -67,7 +68,16 @@ _RELEVANT_FIELDS: dict[str, frozenset[str]] = {
     "reduce_scatter": frozenset(
         {"mode", "scheduling", "transport", "window", "chunk_bytes",
          "compression", "algorithm"}),
-    "all_to_all": frozenset({"scheduling", "compression"}),
+    # all_to_all: chunked-overlap delivery (streaming + overlapped) reads the
+    # wire fields; fused/host execution reads only scheduling + compression.
+    "all_to_all": frozenset(
+        {"mode", "scheduling", "transport", "window", "chunk_bytes",
+         "compression"}),
+    # hierarchical (cross-pod) all-reduce: composed of RS/AR/AG, same
+    # surface as all_reduce.
+    "hierarchical_all_reduce": frozenset(
+        {"mode", "scheduling", "transport", "window", "chunk_bytes",
+         "compression", "algorithm"}),
 }
 
 _DEFAULTS = CommConfig()
@@ -88,17 +98,30 @@ def _canonicalize(cfg: CommConfig, collective: str | None) -> CommConfig:
     if merged.transport == Transport.UNORDERED and merged.window != _DEFAULTS.window:
         merged = dataclasses.replace(merged, window=_DEFAULTS.window)
     # Overlapped scheduling only changes behaviour for the multi-round halo
-    # exchange (double-buffered delivery); every other collective executes
-    # the overlapped config exactly like the fused one, so collapse it and
+    # exchange (double-buffered delivery) and the chunk-tiled all_to_all
+    # (streaming delivery only); every other collective executes the
+    # overlapped config exactly like the fused one, so collapse it and
     # never measure the duplicate.
     if merged.scheduling == Scheduling.OVERLAPPED:
-        if collective not in (None, "multi_neighbor"):
+        if collective == "all_to_all" and merged.mode != CommMode.STREAMING:
+            # buffered all_to_all has no wire chunks to tile: same program
+            merged = dataclasses.replace(merged, scheduling=Scheduling.FUSED)
+        elif collective not in (None, "multi_neighbor", "all_to_all"):
             merged = dataclasses.replace(merged, scheduling=Scheduling.FUSED)
         elif (collective == "multi_neighbor"
+              and merged.mode == CommMode.BUFFERED
               and merged.window != _DEFAULTS.window):
-            # the double-buffered path chains rounds per buffer, never per
-            # ack window — window-only variants are identical programs
+            # buffered rounds have no wire chunks: the double-buffered path
+            # chains whole rounds per buffer and never reads the ack window.
+            # STREAMING rounds DO read it (pipelined_consume chains chunk i
+            # on chunk i-window), so those variants stay distinct.
             merged = dataclasses.replace(merged, window=_DEFAULTS.window)
+    if (collective == "all_to_all"
+            and merged.scheduling != Scheduling.OVERLAPPED):
+        # without chunked-overlap delivery the wire fields are never read
+        merged = dataclasses.replace(
+            merged, mode=_DEFAULTS.mode, transport=_DEFAULTS.transport,
+            window=_DEFAULTS.window, chunk_bytes=_DEFAULTS.chunk_bytes)
     return merged
 
 

@@ -26,6 +26,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core.config import CommConfig, Scheduling
+from repro.tune import prune as tune_prune
 from repro.tune import space as tune_space
 from repro.tune.db import TuneDB, TuneEntry, default_db_path, topology_key
 
@@ -33,9 +34,13 @@ from repro.tune.db import TuneDB, TuneEntry, default_db_path, topology_key
 # 64 B .. 4 MiB; host-CPU meshes get a truncated range to keep compiles sane.
 FULL_SIZES = (1 << 10, 1 << 14, 1 << 17, 1 << 20)
 FAST_SIZES = (1 << 10, 1 << 14)
+# "small" smoke set: one mid + one large size, so the pruning model still
+# sees the bandwidth/segmentation-separated regime (a 16 KiB-only sweep
+# cannot distinguish segment sizes — every message is a single chunk).
+NAMED_SIZES = {"small": (1 << 14, 1 << 20), "full": FULL_SIZES}
 
 SWEEPABLE = ("sendrecv", "all_reduce", "all_gather", "reduce_scatter",
-             "multi_neighbor")
+             "multi_neighbor", "all_to_all", "hierarchical_all_reduce")
 
 
 # ----------------------------------------------------------------------
@@ -63,11 +68,20 @@ def _pattern_hops(collective: str, comm) -> int:
     if collective == "multi_neighbor":
         return comm.max_hops(
             [e for r in _multi_neighbor_rounds(comm) for e in r])
+    if collective == "all_to_all":
+        # every rank exchanges with every other rank
+        return max((comm.torus_hops(0, j) for j in range(comm.size)),
+                   default=0) or 1
     return comm.max_hops(comm.ring_perm())
 
 
-def _build_op(collective: str, comm, cfg: CommConfig) -> Callable:
-    """Per-device body (x -> x-shaped array) exercising one collective op."""
+def _build_op(collective: str, comm, cfg: CommConfig,
+              subcomms=None) -> Callable:
+    """Per-device body (x -> x-shaped array) exercising one collective op.
+
+    ``subcomms`` is the (inner, outer) communicator pair for the
+    hierarchical (cross-pod) all-reduce, which runs over a 2-axis mesh.
+    """
     from jax import numpy as jnp
     from repro.core import collectives
 
@@ -93,6 +107,16 @@ def _build_op(collective: str, comm, cfg: CommConfig) -> Callable:
             outs = collectives.multi_neighbor_exchange(
                 [x] * len(rounds), rounds, comm, cfg)
             return sum(outs) / len(outs)
+    elif collective == "all_to_all":
+        def op(x):
+            # (n, elems/n) bucketed payload — the MoE dispatch shape
+            y = collectives.all_to_all(x.reshape(comm.size, -1), comm, cfg)
+            return x + 0.0 * jnp.sum(y)
+    elif collective == "hierarchical_all_reduce":
+        inner, outer = subcomms
+        def op(x):
+            return collectives.hierarchical_all_reduce(
+                x, inner, outer, cfg) / (inner.size * outer.size)
     else:
         raise ValueError(f"unknown collective {collective!r} "
                          f"(sweepable: {SWEEPABLE})")
@@ -107,14 +131,16 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
     from jax.sharding import PartitionSpec as P
     from repro import compat
 
-    axis = mesh.axis_names[0]
-    n = mesh.shape[axis]
+    # Shard dim 0 jointly over every mesh axis (the hierarchical all-reduce
+    # benches on a 2-axis inner×outer mesh; everything else on one axis).
+    spec = P(tuple(mesh.axis_names))
+    n = mesh.devices.size
     elems = _payload_elems(msg_bytes, n)
     x = jnp.zeros((n, elems), jnp.float32)
 
     single = jax.jit(compat.shard_map(
         lambda xs: op(xs[0])[None], mesh=mesh,
-        in_specs=P(axis), out_specs=P(axis), check_vma=False))
+        in_specs=spec, out_specs=spec, check_vma=False))
 
     if cfg.scheduling != Scheduling.HOST:
         # fused and overlapped are both device-scheduled: one dispatch
@@ -123,7 +149,7 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
             for _ in range(inner):
                 xs = compat.shard_map(
                     lambda v: op(v[0])[None], mesh=mesh,
-                    in_specs=P(axis), out_specs=P(axis), check_vma=False)(xs)
+                    in_specs=spec, out_specs=spec, check_vma=False)(xs)
             return xs
         fn = jax.jit(many)
         for _ in range(warmup):
@@ -147,12 +173,52 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
 # Sweep driver
 # ----------------------------------------------------------------------
 
+def _seed_calibration(mesh, comm, db: TuneDB, topo: str,
+                      sizes: Sequence[int], reps: int, inner: int,
+                      log: Callable[[str], None]):
+    """Cold-cache calibration seed: measure the sendrecv corner configs so
+    the Eq. 1 fit has points on THIS substrate before pruning starts.  The
+    seed measurements are real TuneDB entries (they also serve selection)."""
+    log("[prune] cold cache: seeding Eq.1 calibration with a sendrecv "
+        "corner sweep")
+    hops = _pattern_hops("sendrecv", comm)
+    for msg_bytes in sizes:
+        for cfg in tune_space.enumerate_configs("sendrecv", fast=True):
+            try:
+                op = _build_op("sendrecv", comm, cfg)
+                sec = _time_program(op, mesh, msg_bytes, cfg,
+                                    reps=reps, inner=inner)
+            except Exception as e:  # noqa: BLE001
+                log(f"  seed skip sendrecv/{msg_bytes}B: "
+                    f"{type(e).__name__}: {e}")
+                continue
+            db.add(TuneEntry(
+                topo=topo, collective="sendrecv", msg_bytes=int(msg_bytes),
+                config=tune_space.config_to_dict(cfg),
+                us_per_call=sec * 1e6, gbps=msg_bytes / sec / 1e9,
+                hops=hops))
+    return tune_prune.calibration_from_db(db, topo)
+
+
 def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
               sizes: Sequence[int] | None = None, fast: bool = False,
               db: TuneDB | None = None, max_configs: int | None = None,
               reps: int = 3, inner: int = 8,
-              log: Callable[[str], None] | None = None) -> TuneDB:
-    """Measure every candidate config and return the populated TuneDB."""
+              log: Callable[[str], None] | None = None,
+              prune: bool = False,
+              prune_ratio: float = tune_prune.DEFAULT_RATIO,
+              calibration=None,
+              stats: dict | None = None) -> TuneDB:
+    """Measure every candidate config and return the populated TuneDB.
+
+    ``prune=True`` enables the paper-style model-guided search: an Eq. 1
+    calibration (fitted from existing sendrecv entries, or from a small
+    seed sweep on a cold cache) predicts every candidate's latency and the
+    sweep skips configs ranked more than ``prune_ratio``× off the predicted
+    incumbent.  ``stats`` (optional dict) receives the bookkeeping:
+    candidate/measured/pruned counts and wall clock, including the
+    estimated exhaustive wall clock the pruning saved.
+    """
     import jax
     from repro import compat
     from repro.core.communicator import Communicator
@@ -166,12 +232,44 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     if fast:
         reps, inner = min(reps, 2), min(inner, 4)
     log = log or (lambda s: None)
+    stats = stats if stats is not None else {}
+    stats.update(total=0, measured=0, pruned=0, errors=0, wall_s=0.0)
+    t_start = time.perf_counter()
 
     axis = mesh.axis_names[0]
     comm = Communicator.from_mesh(mesh, axis)
     topo = topology_key(mesh)
+    n = mesh.devices.size
+
+    if prune and calibration is None:
+        calibration = tune_prune.calibration_from_db(db, topo)
+        if calibration is None:
+            # Seed wall clock is tracked separately: it is calibration
+            # overhead, not sweep time, and must not inflate the
+            # estimated-exhaustive comparison.  Seed entries land in the
+            # DB, so a sendrecv sweep in the same run keeps the faster of
+            # the two measurements per config.
+            t_seed = time.perf_counter()
+            calibration = _seed_calibration(mesh, comm, db, topo, sizes,
+                                            reps, inner, log)
+            stats["seed_s"] = time.perf_counter() - t_seed
+        if calibration is None:
+            log("[prune] calibration unavailable — sweeping exhaustively")
+        else:
+            log(f"[prune] {calibration.summary()}")
 
     for coll in collectives:
+        bench_mesh, subcomms = mesh, None
+        if coll == "hierarchical_all_reduce":
+            if n < 4 or n % 2:
+                log(f"[{topo}] {coll}: skipped (needs an even device count "
+                    f">= 4, have {n})")
+                continue
+            # inner (in-pod / ICI) × outer (cross-pod / DCN) factorization
+            bench_mesh = compat.make_mesh((n // 2, 2), ("inner", "outer"))
+            inner_comm = Communicator.from_mesh(bench_mesh, "inner")
+            outer_comm = Communicator.from_mesh(bench_mesh, "outer")
+            subcomms = (inner_comm, outer_comm)
         cands = tune_space.enumerate_configs(coll, fast=fast)
         if max_configs is not None:
             cands = cands[:max_configs]
@@ -179,15 +277,28 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
         log(f"[{topo}] {coll}: {len(cands)} configs x {len(sizes)} sizes "
             f"(pattern hops={hops})")
         for msg_bytes in sizes:
-            for i, cfg in enumerate(cands):
+            stats["total"] += len(cands)
+            to_measure = cands
+            if prune and calibration is not None:
+                to_measure, skipped = tune_prune.prune_candidates(
+                    cands, msg_bytes, calibration, prune_ratio,
+                    collective=coll)
+                stats["pruned"] += len(skipped)
+                if skipped:
+                    log(f"  prune {coll}/{msg_bytes}B: measuring "
+                        f"{len(to_measure)}/{len(cands)} (model skipped "
+                        f"{len(skipped)})")
+            for i, cfg in enumerate(to_measure):
                 try:
-                    op = _build_op(coll, comm, cfg)
-                    sec = _time_program(op, mesh, msg_bytes, cfg,
+                    op = _build_op(coll, comm, cfg, subcomms=subcomms)
+                    sec = _time_program(op, bench_mesh, msg_bytes, cfg,
                                         reps=reps, inner=inner)
                 except Exception as e:  # noqa: BLE001 — skip unrunnable combos
+                    stats["errors"] += 1
                     log(f"  skip {coll}/{msg_bytes}B cfg{i}: "
                         f"{type(e).__name__}: {e}")
                     continue
+                stats["measured"] += 1
                 db.add(TuneEntry(
                     topo=topo, collective=coll, msg_bytes=int(msg_bytes),
                     config=tune_space.config_to_dict(cfg),
@@ -200,7 +311,25 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                     f"{best.us_per_call:9.1f} us  ({best.gbps:6.3f} GB/s)  "
                     f"{best.config['mode']}/{best.config['scheduling']}"
                     f"/{best.config['algorithm']}")
+    stats["wall_s"] = time.perf_counter() - t_start
+    # The visible pruning win: scale the measured wall clock (minus any
+    # calibration-seed overhead) back up to the exhaustive candidate count
+    # (per-config cost assumed comparable).
+    if stats["measured"]:
+        sweep_s = stats["wall_s"] - stats.get("seed_s", 0.0)
+        stats["est_exhaustive_s"] = sweep_s * stats["total"] / stats["measured"]
     return db
+
+
+def sweep_summary(stats: dict) -> str:
+    """One-line wall-clock summary (exhaustive vs calibration-pruned)."""
+    line = (f"sweep wall clock {stats.get('wall_s', 0.0):.1f}s: measured "
+            f"{stats.get('measured', 0)}/{stats.get('total', 0)} candidate "
+            f"configs")
+    if stats.get("pruned"):
+        line += (f" — {stats['pruned']} pruned by the calibrated model "
+                 f"(exhaustive est. ~{stats.get('est_exhaustive_s', 0.0):.1f}s)")
+    return line
 
 
 # ----------------------------------------------------------------------
@@ -231,32 +360,52 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--collectives", default=",".join(SWEEPABLE),
                     help=f"comma list from {SWEEPABLE}")
     ap.add_argument("--sizes", default=None,
-                    help="comma list of message sizes in bytes")
+                    help="comma list of message sizes in bytes, or a named "
+                    f"set from {tuple(NAMED_SIZES)}")
     ap.add_argument("--max-configs", type=int, default=None)
     ap.add_argument("--out", default=None,
                     help=f"TuneDB path (default {default_db_path()})")
     ap.add_argument("--calibrate", action="store_true",
                     help="fit latmodel constants from the sweep and report")
+    ap.add_argument("--prune", action="store_true",
+                    help="model-guided pruning: skip configs the calibrated "
+                    "Eq.1 model ranks more than --prune-ratio off the "
+                    "predicted incumbent")
+    ap.add_argument("--prune-ratio", type=float,
+                    default=tune_prune.DEFAULT_RATIO)
+    ap.add_argument("--assert-pruned", action="store_true",
+                    help="exit non-zero unless the sweep measured strictly "
+                    "fewer configs than the exhaustive candidate space "
+                    "(CI guard for the pruning path)")
     args = ap.parse_args(argv)
 
     _ensure_devices(args.devices)
     import jax  # after XLA_FLAGS is settled
 
-    try:
-        sizes = ([int(s) for s in args.sizes.split(",")]
-                 if args.sizes else None)
-    except ValueError:
-        ap.error(f"--sizes must be comma-separated integers, got {args.sizes!r}")
+    if args.sizes in NAMED_SIZES:
+        sizes = NAMED_SIZES[args.sizes]
+    else:
+        try:
+            sizes = ([int(s) for s in args.sizes.split(",")]
+                     if args.sizes else None)
+        except ValueError:
+            ap.error(f"--sizes must be comma-separated integers or one of "
+                     f"{tuple(NAMED_SIZES)}, got {args.sizes!r}")
     colls = [c.strip() for c in args.collectives.split(",") if c.strip()]
     unknown = [c for c in colls if c not in SWEEPABLE]
     if unknown:
         ap.error(f"unknown collective(s) {unknown}; sweepable: {SWEEPABLE}")
 
     db = TuneDB.load(args.out)
+    stats: dict = {}
     db = run_sweep(collectives=colls, sizes=sizes, fast=args.fast, db=db,
-                   max_configs=args.max_configs, log=lambda s: print(s, flush=True))
+                   max_configs=args.max_configs,
+                   log=lambda s: print(s, flush=True),
+                   prune=args.prune, prune_ratio=args.prune_ratio,
+                   stats=stats)
     path = db.save(args.out)
     print(f"wrote {len(db)} entries -> {path}")
+    print(sweep_summary(stats))
 
     if args.calibrate:
         from repro.tune.calibrate import calibrate_from_db, model_vs_measured
@@ -264,6 +413,11 @@ def main(argv: Sequence[str] | None = None) -> int:
         print(result.summary())
         for row in model_vs_measured(result, db):
             print("  " + row)
+    if args.assert_pruned and stats.get("pruned", 0) <= 0:
+        print("ASSERT-PRUNED FAILED: the calibrated model pruned zero "
+              "candidates (the sweep measured the exhaustive space)",
+              file=sys.stderr)
+        return 3
     return 0
 
 

@@ -130,7 +130,7 @@ x = np.random.RandomState(0).randn(8, 256).astype(np.float32)
 def f(xs):
     total, received = streaming.pipelined_consume(
         xs[0], comm.ring_perm(), "x", cfg,
-        consume=lambda acc, chunk: acc + jnp.sum(chunk),
+        consume=lambda acc, i, chunk: acc + jnp.sum(chunk),
         init=jnp.zeros(()))
     return total[None], received[None]
 

@@ -65,6 +65,60 @@ def test_main_no_regressions_when_identical(tmp_path):
     assert bench_diff.main(["--old", old, "--new", new]) == 0
 
 
+def test_multi_baseline_enforcement(tmp_path):
+    """Rows need >= 2 committed baselines to hard-fail; the reference is the
+    most lenient baseline; lmcoll_ rows stay report-only."""
+    b1 = _write(tmp_path / "b1.json", {
+        "fig9_accl_udp_p8": {"us_per_call": 100.0, "derived": ""},
+        "fig9_new_row": {"us_per_call": 10.0, "derived": ""},
+        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 50.0, "derived": ""},
+    })
+    b2 = _write(tmp_path / "b2.json", {
+        "fig9_accl_udp_p8": {"us_per_call": 120.0, "derived": ""},
+        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 55.0, "derived": ""},
+    })
+    # everything regressed 2x vs the lenient baseline
+    new = _write(tmp_path / "new.json", {
+        "fig9_accl_udp_p8": {"us_per_call": 240.0, "derived": ""},
+        "fig9_new_row": {"us_per_call": 20.0, "derived": ""},
+        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 110.0, "derived": ""},
+    })
+    # the 2-baseline fig9 row is enforced -> exit 1
+    assert bench_diff.main(["--old", b1, "--old", b2, "--new", new]) == 1
+    # remove the enforced regression: single-baseline + lmcoll rows are
+    # report-only, so the gate passes
+    ok = _write(tmp_path / "ok.json", {
+        "fig9_accl_udp_p8": {"us_per_call": 110.0, "derived": ""},
+        "fig9_new_row": {"us_per_call": 20.0, "derived": ""},      # 1 baseline
+        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 110.0, "derived": ""},
+    })
+    assert bench_diff.main(["--old", b1, "--old", b2, "--new", ok]) == 0
+
+
+def test_merge_baselines_lenient_reference():
+    rows, counts = bench_diff.merge_baselines([
+        {"a": {"us_per_call": 10.0}, "b": {"us_per_call": 5.0}},
+        {"a": {"us_per_call": 14.0}},
+    ])
+    assert rows["a"]["us_per_call"] == 14.0   # most lenient
+    assert counts == {"a": 2, "b": 1}
+
+
+def test_split_enforced_tiers():
+    regs = [("a", 10.0, 30.0, 3.0), ("b", 5.0, 20.0, 4.0),
+            ("lmcoll_x", 1.0, 9.0, 9.0)]
+    counts = {"a": 2, "b": 1, "lmcoll_x": 2}
+    hard, soft = bench_diff.split_enforced(
+        regs, counts, n_baselines=2,
+        report_only_prefixes=bench_diff.DEFAULT_REPORT_ONLY_PREFIXES)
+    assert [r[0] for r in hard] == ["a"]
+    assert sorted(r[0] for r in soft) == ["b", "lmcoll_x"]
+    # single-baseline mode keeps the old semantics: everything enforced
+    hard1, soft1 = bench_diff.split_enforced(regs, {"a": 1, "b": 1,
+                                                    "lmcoll_x": 1}, 1, ())
+    assert len(hard1) == 3 and not soft1
+
+
 def test_main_bad_input(tmp_path, capsys):
     bad = tmp_path / "bad.json"
     bad.write_text("{}")

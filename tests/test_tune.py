@@ -279,6 +279,146 @@ def test_fit_latency_model_empty_raises():
 
 
 # ----------------------------------------------------------------------
+# Calibration-driven pruning (model-guided search)
+# ----------------------------------------------------------------------
+
+def _synthetic_truth_hw():
+    """Ground-truth substrate for the synthetic-TuneDB pruning regression:
+    realistic dispatch-cost separation (30 us host vs 0.5 us fused)."""
+    from repro.core.config import HardwareSpec
+    return HardwareSpec(host_dispatch=30e-6, fused_dispatch=0.5e-6,
+                        ici_latency=1e-6, ici_bw=50e9, hbm_bw=819e9)
+
+
+def _synthetic_db(hw, noise=0.03):
+    """sendrecv measurements = ground-truth Eq.1 latency x (1 +- noise)."""
+    import numpy as np
+    from repro.core import latmodel
+    from repro.tune.db import TuneDB, TuneEntry
+    from repro.tune.space import config_to_dict, enumerate_configs
+    rng = np.random.RandomState(7)
+    db = TuneDB()
+    for size in (1 << 10, 1 << 14, 1 << 17, 1 << 20):
+        for cfg in enumerate_configs("sendrecv"):
+            sec = latmodel.pingping_latency(size, cfg, hw)
+            sec *= 1.0 + noise * rng.randn()
+            db.add(TuneEntry(topo="cpu:8", collective="sendrecv",
+                             msg_bytes=size, config=config_to_dict(cfg),
+                             us_per_call=sec * 1e6))
+    return db
+
+
+def test_pruning_skips_30pct_and_keeps_winner_within_noise():
+    """The acceptance regression: on the standard sweep space the calibrated
+    model must skip >= 30% of candidates while the pruned sweep's winner
+    stays within measurement noise of the exhaustive winner."""
+    import numpy as np
+    from repro.core import latmodel
+    from repro.tune.prune import calibration_from_db, prune_candidates
+    from repro.tune.space import enumerate_configs
+
+    hw = _synthetic_truth_hw()
+    noise = 0.03
+    cal = calibration_from_db(_synthetic_db(hw, noise), topo="cpu:8")
+    assert cal is not None and cal.rms_rel_err < 0.15
+
+    rng = np.random.RandomState(11)
+
+    def measure(cfg, size):  # synthetic measurement = truth x noise
+        return (latmodel.pingping_latency(size, cfg, hw)
+                * (1.0 + noise * rng.randn()))
+
+    total = kept_total = 0
+    for coll in ("all_reduce", "sendrecv", "all_to_all"):
+        cands = enumerate_configs(coll)
+        for size in (1 << 10, 1 << 14, 1 << 17, 1 << 20):
+            kept, skipped = prune_candidates(cands, size, cal,
+                                             collective=coll)
+            assert kept, (coll, size)
+            total += len(cands)
+            kept_total += len(kept)
+            # winner parity: best measured config among the kept set is
+            # within noise of the best over the exhaustive set
+            measured = {id(c): measure(c, size) for c in cands}
+            best_all = min(cands, key=lambda c: measured[id(c)])
+            best_kept = min(kept, key=lambda c: measured[id(c)])
+            t_all = latmodel.pingping_latency(size, best_all, hw)
+            t_kept = latmodel.pingping_latency(size, best_kept, hw)
+            assert t_kept <= t_all * (1.0 + 5 * noise), (coll, size)
+    skipped_frac = 1.0 - kept_total / total
+    assert skipped_frac >= 0.30, f"pruned only {skipped_frac:.0%}"
+
+
+def test_prune_candidates_always_keeps_incumbent():
+    from repro.tune.prune import calibration_from_db, predicted_latency, \
+        prune_candidates
+    from repro.tune.space import enumerate_configs
+
+    hw = _synthetic_truth_hw()
+    cal = calibration_from_db(_synthetic_db(hw), topo="cpu:8")
+    cands = enumerate_configs("all_reduce")
+    kept, skipped = prune_candidates(cands, 1 << 14, cal,
+                                     collective="all_reduce")
+    assert len(kept) + len(skipped) == len(cands)
+    preds = {id(c): predicted_latency(c, 1 << 14, cal, "all_reduce")
+             for c in cands}
+    best = min(preds.values())
+    assert all(preds[id(c)] <= 2.0 * best for c in kept)
+    assert all(preds[id(c)] > 2.0 * best for c in skipped)
+
+
+def test_calibration_from_db_cold_cache_returns_none():
+    from repro.tune.db import TuneDB
+    from repro.tune.prune import calibration_from_db
+    assert calibration_from_db(TuneDB(), topo="cpu:8") is None
+
+
+def test_chunk_aware_prediction_prices_small_segments():
+    """The Eq.3-style per-chunk command term: a 64 KiB-segment streaming
+    sendrecv at 1 MiB must be predicted ~16 commands' worth slower than the
+    jumbo config; non-chunking collectives see a single command."""
+    import dataclasses
+    from repro.core.config import CommConfig
+    from repro.tune.prune import calibration_from_db, predicted_latency
+
+    cal = calibration_from_db(_synthetic_db(_synthetic_truth_hw()),
+                              topo="cpu:8")
+    jumbo = CommConfig(chunk_bytes=1 << 20)
+    small = dataclasses.replace(jumbo, chunk_bytes=1 << 16)
+    msg = 1 << 20
+    t_jumbo = predicted_latency(jumbo, msg, cal, "sendrecv")
+    t_small = predicted_latency(small, msg, cal, "sendrecv")
+    assert t_small > t_jumbo
+    # all_reduce never splits the wire: segment size is prediction-neutral
+    assert predicted_latency(small, msg, cal, "all_reduce") == \
+        predicted_latency(jumbo, msg, cal, "all_reduce")
+
+
+def test_sweep_new_collectives_and_pruning_e2e(tmp_path):
+    out = run_multidevice("""
+from repro import compat
+from repro.tune import CalibrationResult, TuneDB, run_sweep
+
+mesh = compat.make_mesh((8,), ("x",))
+cal = CalibrationResult(l_k_host=30e-6, l_k_fused=0.5e-6,
+                        link_latency=1e-6, link_bw=50e9, staging_bw=819e9,
+                        n_points=16, rms_rel_err=0.05)
+stats = {}
+db = run_sweep(mesh=mesh,
+               collectives=("all_to_all", "hierarchical_all_reduce"),
+               sizes=(1024,), fast=True, reps=1, inner=2,
+               prune=True, calibration=cal, stats=stats)
+colls = {e.collective for e in db.entries}
+assert "all_to_all" in colls and "hierarchical_all_reduce" in colls, colls
+assert stats["pruned"] > 0, stats
+assert stats["measured"] < stats["total"], stats
+assert stats["wall_s"] > 0 and stats["est_exhaustive_s"] > stats["wall_s"]
+print("NEW COLLECTIVE SWEEP OK", stats["measured"], stats["total"])
+""")
+    assert "NEW COLLECTIVE SWEEP OK" in out
+
+
+# ----------------------------------------------------------------------
 # Latmodel regressions (the tuner's cost model)
 # ----------------------------------------------------------------------
 
