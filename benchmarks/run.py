@@ -29,14 +29,15 @@ def _ensure_devices():
 
 def main() -> None:
     _ensure_devices()
-    from benchmarks import (b_eff, lm_collectives, lm_roofline, resources,
-                            swe_scaling)
+    from benchmarks import (b_eff, e2e_objective, lm_collectives, lm_roofline,
+                            resources, swe_scaling)
 
     print("name,us_per_call,derived")
     modules = [("b_eff(fig4)", b_eff), ("resources(fig3)", resources),
                ("swe(fig9,fig10,table1)", swe_scaling),
                ("lm_roofline", lm_roofline),
-               ("lm_collectives", lm_collectives)]
+               ("lm_collectives", lm_collectives),
+               ("e2e_objective", e2e_objective)]
     only = None
     json_path = "BENCH_comm.json"
     for a in sys.argv[1:]:
@@ -66,6 +67,13 @@ def main() -> None:
     for name, row in sorted(overlap_rows.items()):
         print(f"# overlap {name}: measured {row['us_per_call']:.2f}x, "
               f"{row['derived']}", file=sys.stderr)
+    # E2E-objective report: how much e2e the bare-latency winner leaves on
+    # the table per consumer loop (rows from e2e_objective).
+    for name, row in sorted(results.items()):
+        if name.startswith("e2e_gain_"):
+            print(f"# e2e objective {name}: lat-winner/e2e-winner = "
+                  f"{row['us_per_call']:.2f}x, {row['derived']}",
+                  file=sys.stderr)
     if json_path:
         # Merge into any existing file so a partial (--only=...) run updates
         # its rows without destroying the rest of the benchmark record.

@@ -29,13 +29,19 @@ def main():
                          " constants, 'overlapped' = double-buffered exchange"
                          " with the interior/boundary split, or 'auto' = pick"
                          " from the TuneDB sweep (python -m repro.tune.sweep)")
+    ap.add_argument("--objective", default="latency",
+                    choices=("latency", "e2e"),
+                    help="with --comm auto: rank TuneDB entries by bare "
+                         "exchange latency or by the measured halo-fold "
+                         "consumer loop (sweep with --objective e2e first)")
     args = ap.parse_args()
 
     n = jax.device_count()
     mesh = jax.make_mesh((n,), ("data",))
     cfg = {"streaming": CommConfig(), "overlapped": OVERLAPPED_CONFIG,
            "baseline": BASELINE_CONFIG, "auto": "auto"}[args.comm]
-    sim = driver.build_simulation(args.elements, mesh, cfg)
+    sim = driver.build_simulation(args.elements, mesh, cfg,
+                                  objective=args.objective)
     print(f"comm config ({args.comm}): {sim.comm_cfg}")
     print(f"mesh: {sim.mesh.n_elements} elements over {n} partitions "
           f"(N_max={sim.pm.n_max}, rounds={sim.pm.n_rounds})")

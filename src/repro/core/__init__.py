@@ -10,6 +10,7 @@ Public API:
                  double_buffered_exchange, overlapped_matmul_allreduce,
                  chunked_all_to_all
     latmodel:    pingping_latency, eq2_throughput, eq3_l_comm, roofline_terms
+    plans:       CommPlan cache (schedules derived once, replayed per call)
     scheduler:   HostScheduledRunner, FusedRunner, make_runner
 """
 from repro.core.config import (
@@ -17,11 +18,12 @@ from repro.core.config import (
     CommConfig, CommMode, Compression, HardwareSpec, Scheduling, Transport,
 )
 from repro.core.communicator import Communicator
-from repro.core import collectives, latmodel, plugins, scheduler, streaming
+from repro.core import (collectives, latmodel, plans, plugins, scheduler,
+                        streaming)
 
 __all__ = [
     "BASELINE_CONFIG", "MINIMAL_CONFIG", "OPTIMIZED_CONFIG", "V5E",
     "CommConfig", "CommMode", "Compression", "HardwareSpec", "Scheduling",
-    "Transport", "Communicator", "collectives", "latmodel", "plugins",
-    "scheduler", "streaming",
+    "Transport", "Communicator", "collectives", "latmodel", "plans",
+    "plugins", "scheduler", "streaming",
 ]

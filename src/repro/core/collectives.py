@@ -23,12 +23,13 @@ from jax import lax
 from repro.core.communicator import Communicator
 from repro.core.config import (CommConfig, CommMode, Compression, Scheduling,
                                Transport)
-from repro.core import plugins, streaming
+from repro.core import plans, plugins, streaming
 
 
 def resolve_config(cfg, collective: str = "all_reduce",
                    msg_bytes: int = 1 << 20, mesh=None,
-                   db_path=None, hops: int | None = None) -> CommConfig:
+                   db_path=None, hops: int | None = None,
+                   objective: str = "latency") -> CommConfig:
     """Resolve a ``CommConfig | "auto" | None`` to a concrete config.
 
     ``"auto"`` asks the autotuner (:func:`repro.tune.select_config`) for the
@@ -36,15 +37,17 @@ def resolve_config(cfg, collective: str = "all_reduce",
     to ``OPTIMIZED_CONFIG`` on a cold cache.  ``hops`` is the worst-case torus
     hop distance of the communication pattern (``Communicator.torus_hops``) —
     multi-hop edges prefer configs measured at the same distance (the paper's
-    direct-link vs Ethernet-switch distinction).  Host-side only — call it
-    before tracing, never inside ``shard_map``.
+    direct-link vs Ethernet-switch distinction).  ``objective="e2e"`` ranks
+    by the measured consumer-loop time instead of bare collective latency
+    (§5: what wins the microbench is not what scales the application).
+    Host-side only — call it before tracing, never inside ``shard_map``.
     """
     if isinstance(cfg, CommConfig):
         return cfg
     if cfg is None or cfg == "auto":
         from repro.tune import select_config
         return select_config(collective, msg_bytes, mesh=mesh, path=db_path,
-                             hops=hops)
+                             hops=hops, objective=objective)
     raise TypeError(f"comm config must be CommConfig or 'auto', got {cfg!r}")
 
 
@@ -55,30 +58,21 @@ def resolve_config(cfg, collective: str = "all_reduce",
 def sendrecv(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
              comm: Communicator, cfg: CommConfig) -> jnp.ndarray:
     """Single send/recv along an edge list (each rank sends at most once)."""
-    comm.neighbor_perms(perm)
+    perm = plans.validated_perm(comm, perm)
     if cfg.mode == CommMode.STREAMING:
         return streaming.chunked_permute(x, perm, comm.axis, cfg)
     return streaming.buffered_permute(x, perm, comm.axis, cfg)
 
 
-def edge_color_rounds(edges: Sequence[tuple[int, int]]) -> list[list[tuple[int, int]]]:
+def edge_color_rounds(edges: Sequence[tuple[int, int]]):
     """Greedily color a multi-neighbor exchange into ppermute-able rounds.
 
     Each round is a valid permutation fragment: every rank appears at most
     once as source and once as destination.  The number of rounds is the
     N_max of Eq. 3 — each neighbor costs one more scheduled command.
+    Derived once per edge list and replayed from the plan cache.
     """
-    rounds: list[list[tuple[int, int]]] = []
-    for e in edges:
-        placed = False
-        for r in rounds:
-            if all(e[0] != s and e[1] != d for s, d in r):
-                r.append(e)
-                placed = True
-                break
-        if not placed:
-            rounds.append([e])
-    return rounds
+    return plans.edge_rounds(edges)
 
 
 def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
@@ -104,8 +98,18 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
     otherwise just ``received`` (round order).
     """
     if cfg.scheduling == Scheduling.OVERLAPPED:
-        for perm in rounds:
-            comm.neighbor_perms(perm)
+        # One CommPlan per (pattern, config, payload): the round structure is
+        # validated once and replayed, and the chunk/ack layout it caches is
+        # what pipelined_consume replays per round.
+        if payloads:
+            plan = plans.get_plan("multi_neighbor", comm, cfg,
+                                  payloads[0].shape, payloads[0].dtype,
+                                  align=chunk_align, rounds=rounds)
+            rounds = list(plan.perms)
+        else:
+            # no payload to key a plan on, but malformed rounds must still
+            # be rejected, as they always were
+            rounds = [plans.validated_perm(comm, perm) for perm in rounds]
         carry, received = streaming.double_buffered_exchange(
             payloads, rounds, comm.axis, cfg, consume=consume, init=init,
             chunk_consume=chunk_consume, chunk_align=chunk_align)

@@ -70,25 +70,34 @@ class Communicator:
         i = self.axis_names.index(axis_name)
         return Communicator((axis_name,), (self.axis_sizes[i],))
 
-    def auto_config(self, collective: str, msg_bytes: int, db_path=None):
+    def auto_config(self, collective: str, msg_bytes: int, db_path=None,
+                    hops: int | None = None, objective: str = "latency"):
         """Autotuned ``CommConfig`` for a collective this communicator will
         run (host-side; consults the persistent TuneDB keyed by THIS
         communicator's size — a 4-rank axis of an 8-device mesh looks up
-        4-device results — ``OPTIMIZED_CONFIG`` on a cold cache)."""
+        4-device results — ``OPTIMIZED_CONFIG`` on a cold cache).
+
+        ``hops`` is the worst-case torus hop distance of the pattern the
+        collective will run (defaults to this communicator's ring pattern),
+        so hop-matched measurements are preferred; ``objective="e2e"`` ranks
+        by the measured consumer-loop time instead of bare latency."""
         from repro.tune import select_config, topology_key
+        if hops is None:
+            hops = self.max_hops(self.ring_perm())
         return select_config(collective, msg_bytes, path=db_path,
-                             topo=topology_key(n_devices=self.size))
+                             topo=topology_key(n_devices=self.size),
+                             hops=hops, objective=objective)
 
     # ------------------------------------------------------------------
     # Topology helpers (static, host-side)
     # ------------------------------------------------------------------
     def ring_perm(self, step: int = 1) -> list[tuple[int, int]]:
-        n = self.size
-        return [(i, (i + step) % n) for i in range(n)]
+        from repro.core import plans
+        return list(plans.ring_perm(self.size, step))
 
     def reverse_ring_perm(self, step: int = 1) -> list[tuple[int, int]]:
-        n = self.size
-        return [(i, (i - step) % n) for i in range(n)]
+        from repro.core import plans
+        return list(plans.ring_perm(self.size, -step))
 
     def neighbor_perms(self, edges: Sequence[Tuple[int, int]]) -> list[tuple[int, int]]:
         """Validate an explicit point-to-point pattern (src, dst) pairs.

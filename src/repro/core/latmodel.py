@@ -171,6 +171,24 @@ def eq2_throughput_overlap(w: SWEWorkload, cfg: CommConfig,
     return w.freq * flop_total / denom_cycles
 
 
+def e2e_consumer_latency(msg_bytes: int, cfg: CommConfig, compute_s: float,
+                         hw: HardwareSpec = V5E, hops: int = 1) -> float:
+    """Overlap-aware Eq. 2 applied to a consumer loop: predicted seconds per
+    iteration of (hideable compute + collective) under ``cfg``.
+
+    The exposed time interpolates between fully hidden —
+    ``max(compute, comm)`` — and fully serialized — ``compute + comm`` — by
+    :func:`overlap_fraction`: ``ov·max(comm, compute) + (1−ov)·(comm +
+    compute)``.  This is the prediction behind the autotuner's ``e2e``
+    objective (§5: the config that wins the bare-latency microbench is not
+    the one that scales the consuming kernel), and what lets ``tune.prune``
+    rank candidates end-to-end without measuring them.
+    """
+    comm_s = pingping_latency(msg_bytes, cfg, hw, hops)
+    ov = overlap_fraction(cfg)
+    return ov * max(compute_s, comm_s) + (1.0 - ov) * (compute_s + comm_s)
+
+
 def stall_fraction(w: SWEWorkload, cfg: CommConfig, hw: HardwareSpec = V5E,
                    hops: int = 1) -> float:
     """Fraction of the step spent stalled on communication (paper: 75–80 %

@@ -1,0 +1,327 @@
+"""Persistent collective-plan cache — build a schedule once, replay it.
+
+ACCL+ holds a precompiled *plan* in the collective engine that applications
+replay call after call, instead of re-deriving chunk splits and round
+schedules per invocation.  This module is that cache for ACCL-X: a
+:class:`CommPlan` built once per ``(collective, communicator key, CommConfig,
+shape/dtype)`` captures everything the comm layer derives at trace time —
+
+- the :func:`~repro.core.streaming.aligned_chunks` wire-chunk layout,
+- the greedy edge-coloring of a multi-neighbor exchange into ppermute rounds,
+- ring/neighbor permutations (validated once, replayed as tuples),
+- the ack-window dependency structure of ordered transport,
+
+plus (for host-level entry points like the sweep engine) the **jitted
+program** itself, so a repeated call pays zero rebuild *and* zero retrace.
+
+Everything here is host-side Python: plans never hold traced values, only
+static schedule data and compiled callables, so cached and uncached execution
+are bitwise-identical by construction (enforced by ``tests/test_plans.py``).
+
+Cache control:
+
+- ``REPRO_PLAN_CACHE=0`` bypasses the cache entirely (every call re-derives);
+- :func:`clear_cache` empties it (e.g. between benchmark phases);
+- :func:`cache_stats` reports hit/miss counters, split by plan vs program —
+  the sweep CLI surfaces these in its wall-clock summary.
+
+Keying/invalidation: a plan key is the full value tuple
+``(kind, collective, comm_key, cfg_key, shape, dtype, extra)``.  Any change
+to the config (``CommConfig`` is frozen), the communicator's axes/sizes, the
+payload shape or dtype, or the pattern extras (edges, align, axis names)
+produces a different key — there is no in-place mutation to invalidate, stale
+entries are simply never looked up again.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+_LOCK = threading.RLock()
+_CACHE: dict[tuple, Any] = {}
+_STATS = {"plan_hits": 0, "plan_misses": 0,
+          "program_hits": 0, "program_misses": 0}
+
+
+def cache_enabled() -> bool:
+    """The cache is on unless ``REPRO_PLAN_CACHE=0`` (checked per call, so a
+    test can toggle bypass at runtime)."""
+    return os.environ.get("REPRO_PLAN_CACHE", "1") != "0"
+
+
+def clear_cache() -> None:
+    with _LOCK:
+        _CACHE.clear()
+
+
+def reset_stats() -> None:
+    with _LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+def cache_stats() -> dict:
+    with _LOCK:
+        return dict(_STATS, size=len(_CACHE))
+
+
+def _comm_key(comm) -> tuple:
+    """Stable identity of a communicator: its axes and their sizes.  Accepts
+    a Communicator, a plain axis-name tuple/str, or None."""
+    if comm is None:
+        return ()
+    if hasattr(comm, "axis_names"):
+        return (tuple(comm.axis_names), tuple(getattr(comm, "axis_sizes", ())))
+    if isinstance(comm, str):
+        return ((comm,), ())
+    return (tuple(comm), ())
+
+
+def _cfg_key(cfg) -> tuple:
+    """CommConfig is a frozen dataclass — its field tuple is the key."""
+    if cfg is None:
+        return ()
+    return tuple(dataclasses.astuple(cfg))
+
+
+def _memo(kind: str, key: tuple, build: Callable[[], Any],
+          hit_ctr: str, miss_ctr: str):
+    if not cache_enabled():
+        with _LOCK:
+            _STATS[miss_ctr] += 1
+        return build()
+    full = (kind,) + key
+    # Hold the (reentrant) lock across lookup AND build: concurrent
+    # same-key callers must not duplicate a multi-second jit compile or
+    # double-count the miss.
+    with _LOCK:
+        cached = _CACHE.get(full)
+        if cached is not None:
+            _STATS[hit_ctr] += 1
+            return cached
+        value = build()
+        _STATS[miss_ctr] += 1
+        _CACHE[full] = value
+        return value
+
+
+# ----------------------------------------------------------------------
+# Schedule fragments
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """Wire-chunk layout of one streamed message: how many chunks, how many
+    flat elements each, and which earlier chunk every chunk acks on
+    (``-1`` = independent — unordered transport or inside the window)."""
+    n_chunks: int
+    chunk_elems: int
+    ack_of: tuple[int, ...]
+
+    @property
+    def padded_elems(self) -> int:
+        return self.n_chunks * self.chunk_elems
+
+
+def _build_chunk_plan(size: int, itemsize: int, chunk_bytes: int,
+                      max_chunks: int, ordered: bool, window: int,
+                      align: int, equal_split: bool) -> ChunkPlan:
+    nbytes = size * itemsize
+    n = max(1, min(max_chunks, math.ceil(max(1, nbytes) / chunk_bytes)))
+    per = max(1, math.ceil(size / n))
+    if equal_split:
+        # chunked_permute layout: exactly n equal chunks (zero-padded tail).
+        chunk_elems = per
+    else:
+        # recv_slot-aligned layout: chunk boundaries land on `align`
+        # multiples, so the chunk count may shrink below n.
+        chunk_elems = max(align, math.ceil(per / align) * align)
+        n = max(1, math.ceil(size / chunk_elems))
+    ack = tuple((i - window) if (ordered and i >= window) else -1
+                for i in range(n))
+    return ChunkPlan(n_chunks=n, chunk_elems=chunk_elems, ack_of=ack)
+
+
+def chunk_plan(shape: Sequence[int], dtype, cfg, align: int = 1,
+               equal_split: bool = False) -> ChunkPlan:
+    """Cached :func:`~repro.core.streaming.aligned_chunks` layout plus the
+    ordered-transport ack structure for a message of ``shape``/``dtype``.
+
+    ``equal_split=True`` reproduces the plain ``chunked_permute`` split
+    (exactly ``num_chunks`` equal chunks); the default reproduces the
+    ``align``-aware layout of ``aligned_chunks``."""
+    import numpy as np
+    dt = np.dtype(dtype)
+    size = int(math.prod(shape)) if shape else 1
+    from repro.core.config import Transport
+    ordered = cfg.transport == Transport.ORDERED
+    key = (size, dt.str, cfg.chunk_bytes, cfg.max_chunks, ordered,
+           cfg.window, align, equal_split)
+    return _memo("chunks", key,
+                 lambda: _build_chunk_plan(size, dt.itemsize, cfg.chunk_bytes,
+                                           cfg.max_chunks, ordered,
+                                           cfg.window, align, equal_split),
+                 "plan_hits", "plan_misses")
+
+
+def _color_edges(edges: Sequence[tuple[int, int]]
+                 ) -> tuple[tuple[tuple[int, int], ...], ...]:
+    """Greedy edge coloring into ppermute-able rounds (each round a valid
+    permutation fragment).  The round count is Eq. 3's N_max."""
+    rounds: list[list[tuple[int, int]]] = []
+    for e in edges:
+        placed = False
+        for r in rounds:
+            if all(e[0] != s and e[1] != d for s, d in r):
+                r.append(tuple(e))
+                placed = True
+                break
+        if not placed:
+            rounds.append([tuple(e)])
+    return tuple(tuple(r) for r in rounds)
+
+
+def edge_rounds(edges: Sequence[tuple[int, int]]
+                ) -> tuple[tuple[tuple[int, int], ...], ...]:
+    """Cached greedy edge-coloring of a neighbor list into rounds."""
+    key = (tuple((int(s), int(d)) for s, d in edges),)
+    return _memo("rounds", key, lambda: _color_edges(edges),
+                 "plan_hits", "plan_misses")
+
+
+def ring_perm(n: int, step: int = 1) -> tuple[tuple[int, int], ...]:
+    """Cached ring permutation for an ``n``-rank communicator."""
+    return _memo("ring", (n, step),
+                 lambda: tuple((i, (i + step) % n) for i in range(n)),
+                 "plan_hits", "plan_misses")
+
+
+def validated_perm(comm, perm: Sequence[tuple[int, int]]
+                   ) -> tuple[tuple[int, int], ...]:
+    """Cached neighbor-perm validation: each rank sends at most once and all
+    endpoints are inside the communicator.  Raises the same ``ValueError`` as
+    ``Communicator.neighbor_perms`` on the first (and only) derivation."""
+    edges = tuple((int(s), int(d)) for s, d in perm)
+    ck = _comm_key(comm)
+
+    def build():
+        comm.neighbor_perms(edges)
+        return edges
+
+    return _memo("perm", (ck, edges), build, "plan_hits", "plan_misses")
+
+
+# ----------------------------------------------------------------------
+# The aggregate plan
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CommPlan:
+    """One collective call's replayable schedule.
+
+    Built once per ``(collective, communicator key, CommConfig, shape/dtype)``
+    [+ pattern extras]; subsequent identical calls replay the derived
+    structures without touching Python schedule code, and host-level callers
+    can attach/reuse the jitted program via :meth:`program`.
+    """
+    collective: str
+    comm_key: tuple
+    cfg_key: tuple
+    shape: tuple
+    dtype: str
+    chunks: Optional[ChunkPlan] = None
+    rounds: tuple = ()                 # edge-color rounds (multi_neighbor)
+    perms: tuple = ()                  # validated (src, dst) tuples per round
+    ring: tuple = ()                   # ring permutation (ring collectives)
+    extra: tuple = ()
+    _program: Any = dataclasses.field(default=None, repr=False)
+
+    def key(self) -> tuple:
+        return (self.collective, self.comm_key, self.cfg_key, self.shape,
+                self.dtype, self.extra)
+
+    def program(self, build: Callable[[], Any] | None = None):
+        """The plan's jitted program: built on first request, replayed after
+        (the ACCL+ precompiled-plan replay).  ``build`` is only invoked on a
+        miss; with the cache bypassed it runs every time."""
+        if self._program is not None and cache_enabled():
+            with _LOCK:
+                _STATS["program_hits"] += 1
+            return self._program
+        if build is None:
+            return None
+        with _LOCK:
+            _STATS["program_misses"] += 1
+        prog = build()
+        self._program = prog
+        return prog
+
+
+def get_plan(collective: str, comm, cfg, shape: Sequence[int], dtype,
+             align: int = 1, edges: Sequence[tuple[int, int]] | None = None,
+             rounds: Sequence[Sequence[tuple[int, int]]] | None = None,
+             extra: tuple = ()) -> CommPlan:
+    """Fetch (or build) the :class:`CommPlan` for one collective call site.
+
+    ``edges`` (multi-neighbor patterns) joins the key via the greedy round
+    coloring; ``rounds`` keys a caller-supplied (already colored) round
+    structure instead — each round is validated once against ``comm`` and
+    replayed as ``plan.perms``; ``align`` keys the recv_slot-aligned chunk
+    layout; ``extra`` carries collective-specific statics (e.g. split/concat
+    axes)."""
+    import numpy as np
+    ck = _comm_key(comm)
+    fk = _cfg_key(cfg)
+    shape = tuple(int(s) for s in shape)
+    dt = np.dtype(dtype).str
+    ek = (tuple((int(s), int(d)) for s, d in edges)
+          if edges is not None else None)
+    rk = (tuple(tuple((int(s), int(d)) for s, d in r) for r in rounds)
+          if rounds is not None else None)
+    key = (collective, ck, fk, shape, dt, align, ek, rk, tuple(extra))
+
+    def build() -> CommPlan:
+        from repro.core.config import CommMode, Transport
+        chunks = None
+        if cfg is not None and cfg.mode == CommMode.STREAMING:
+            chunks = _build_chunk_plan(
+                int(math.prod(shape)) if shape else 1,
+                np.dtype(dtype).itemsize, cfg.chunk_bytes, cfg.max_chunks,
+                cfg.transport == Transport.ORDERED, cfg.window, align,
+                equal_split=False)
+        colored: tuple = rk if rk is not None else ()
+        if ek is not None:
+            colored = _color_edges(ek)
+        if colored and comm is not None and hasattr(comm, "neighbor_perms"):
+            for r in colored:
+                comm.neighbor_perms(r)
+        ring: tuple = ()
+        # A ring is only well-defined over a single axis; a multi-axis
+        # communicator's global rank order corresponds to no physical ring.
+        if (comm is not None and getattr(comm, "axis_sizes", None)
+                and len(comm.axis_sizes) == 1):
+            n = comm.axis_sizes[0]
+            ring = tuple((i, (i + 1) % n) for i in range(n))
+        return CommPlan(collective=collective, comm_key=ck, cfg_key=fk,
+                        shape=shape, dtype=dt, chunks=chunks, rounds=colored,
+                        perms=colored, ring=ring, extra=tuple(extra))
+
+    return _memo("plan", key, build, "plan_hits", "plan_misses")
+
+
+# ----------------------------------------------------------------------
+# Jitted-program cache (host-level entry points)
+# ----------------------------------------------------------------------
+
+def jitted_program(key: Sequence, build: Callable[[], Callable]) -> Callable:
+    """Cache a compiled host-level program under a value key.
+
+    The sweep engine routes every microbenchmark/consumer-loop program
+    through this, so a warm sweep (same process, same collective/config/
+    size/topology) replays the compiled program with zero rebuild and zero
+    retrace — the plan-cache half of the warm-sweep wall-clock win."""
+    return _memo("program", tuple(key), build,
+                 "program_hits", "program_misses")

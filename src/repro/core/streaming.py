@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.config import CommConfig, CommMode, Compression, Transport
-from repro.core import plugins
+from repro.core import plans, plugins
 
 
 def num_chunks(nbytes: int, cfg: CommConfig) -> int:
@@ -42,11 +42,10 @@ def aligned_chunks(x: jnp.ndarray, cfg: CommConfig, align: int = 1
     ``chunk_elems`` is a multiple of ``align`` flat elements, so a wire chunk
     never splits a logical row of ``align`` elements — the recv_slot-aligned
     chunking that lets a halo consumer scatter-fold whole rows per chunk.
+    Derived once per (shape, dtype, config, align) via the plan cache.
     """
-    n = num_chunks(x.size * x.dtype.itemsize, cfg)
-    per = max(1, math.ceil(x.size / n))
-    chunk_elems = max(align, math.ceil(per / align) * align)
-    return max(1, math.ceil(x.size / chunk_elems)), chunk_elems
+    p = plans.chunk_plan(x.shape, x.dtype, cfg, align=align)
+    return p.n_chunks, p.chunk_elems
 
 
 def split_chunks(x: jnp.ndarray, n: int):
@@ -72,15 +71,18 @@ def chunked_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
 
     One ppermute per wire chunk; chunks are independent (unordered) or chained
     with an ack window (ordered).  Wire format per the compression plugin.
+    The chunk layout and ack-window structure replay from the plan cache.
     """
-    n = num_chunks(x.size * x.dtype.itemsize, cfg)
+    plan = plans.chunk_plan(x.shape, x.dtype, cfg, equal_split=True)
+    n = plan.n_chunks
     chunks, unsplit = split_chunks(x, n)
     received = []
     for i in range(n):
         payload = chunks[i]
-        if cfg.transport == Transport.ORDERED and i >= cfg.window:
+        if plan.ack_of[i] >= 0:
             # Ack chain: chunk i waits until chunk i-window was delivered.
-            payload, _ = lax.optimization_barrier((payload, received[i - cfg.window]))
+            payload, _ = lax.optimization_barrier(
+                (payload, received[plan.ack_of[i]]))
         enc, dec = plugins.wire_encode(payload, cfg)
         out = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm=list(perm)), enc)
         received.append(dec(out))
@@ -118,7 +120,8 @@ def pipelined_consume(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     delivery of chunk *i - window* (the ack window), exactly like
     :func:`chunked_permute`.  Returns (carry, received_message).
     """
-    n, chunk_elems = aligned_chunks(x, cfg, align)
+    plan = plans.chunk_plan(x.shape, x.dtype, cfg, align=align)
+    n, chunk_elems = plan.n_chunks, plan.chunk_elems
     flat = x.reshape(-1)
     pad = n * chunk_elems - flat.shape[0]
     if pad:
@@ -128,9 +131,9 @@ def pipelined_consume(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     received = []
     for i in range(n):
         payload = chunks[i]
-        if cfg.transport == Transport.ORDERED and i >= cfg.window:
+        if plan.ack_of[i] >= 0:
             payload, _ = lax.optimization_barrier(
-                (payload, received[i - cfg.window]))
+                (payload, received[plan.ack_of[i]]))
         enc, dec = plugins.wire_encode(payload, cfg)
         out = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm=list(perm)), enc)
         r = dec(out)

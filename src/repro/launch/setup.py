@@ -43,7 +43,8 @@ def build_session(cfg: ModelConfig, mesh: Mesh, comm: CommConfig | str,
                   seed: int = 0, concrete: bool = True,
                   attn_tiling: str = "auto",
                   seq_parallel: bool = False,
-                  tune_db_path=None) -> Session:
+                  tune_db_path=None,
+                  objective: str = "latency") -> Session:
     """Build a training session.
 
     ``comm="auto"`` asks the autotuner for the fastest measured config for
@@ -52,6 +53,9 @@ def build_session(cfg: ModelConfig, mesh: Mesh, comm: CommConfig | str,
     ``OPTIMIZED_CONFIG`` on a cold TuneDB.  The lookup size is a nominal
     1K-token microbatch; TuneDB answers by log-space-nearest message size,
     so the estimate only needs the right order of magnitude.
+    ``objective="e2e"`` ranks by the measured row_parallel consumer-loop
+    time instead of the bare combine latency — the per-layer matmul is
+    exactly the hideable compute of the paper's §5 argument.
     """
     mesh_ctx = MeshContext.from_mesh(mesh)
     tp = mesh_ctx.model_size
@@ -60,7 +64,7 @@ def build_session(cfg: ModelConfig, mesh: Mesh, comm: CommConfig | str,
         from repro.core.collectives import resolve_config
         msg_bytes = 4 * cfg.d_model * 1024
         comm = resolve_config(comm, "all_reduce", msg_bytes, mesh=mesh,
-                              db_path=tune_db_path)
+                              db_path=tune_db_path, objective=objective)
 
     init_fn = functools.partial(transformer.init_model, cfg=cfg, tp=tp)
     key = jax.random.PRNGKey(seed)

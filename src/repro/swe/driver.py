@@ -48,13 +48,17 @@ class Simulation:
 
 def build_simulation(n_elements: int, device_mesh: Mesh,
                      comm_cfg: CommConfig | str, swe: SWEConfig = SWEConfig(),
-                     seed: int = 0, tune_db_path=None) -> Simulation:
+                     seed: int = 0, tune_db_path=None,
+                     objective: str = "latency") -> Simulation:
     """Build the partitioned simulation.
 
     ``comm_cfg="auto"`` asks the autotuner for the fastest measured config
     for this partitioning's halo exchange (multi-neighbor pattern at the
     largest per-round message size), falling back to ``OPTIMIZED_CONFIG``
-    when no sweep has been run on this topology.
+    when no sweep has been run on this topology.  ``objective="e2e"`` ranks
+    by the measured halo-fold consumer loop instead of the bare exchange —
+    the step has interior compute the overlapped schedule can hide, exactly
+    the case where the microbench winner is not the end-to-end winner (§5).
     """
     mesh = generate_bight_mesh(n_elements, seed=seed)
     n_parts = device_mesh.shape["data"]
@@ -70,7 +74,7 @@ def build_simulation(n_elements: int, device_mesh: Mesh,
         hops = comm.max_hops(edges) if edges else None
         comm_cfg = resolve_config(comm_cfg, "multi_neighbor", halo_bytes,
                                   mesh=device_mesh, db_path=tune_db_path,
-                                  hops=hops)
+                                  hops=hops, objective=objective)
     sharding = NamedSharding(device_mesh, P("data"))
     state = jax.device_put(jnp.asarray(pm.state0, jnp.float32), sharding)
     return Simulation(mesh=mesh, pm=pm, device_mesh=device_mesh,

@@ -26,8 +26,8 @@ from repro.tune.db import (TuneDB, TuneEntry, default_db_path, select_config,
                            topology_key)
 from repro.tune.calibrate import (CalibrationResult, calibrate_from_db,
                                   fit_latency_model, model_vs_measured)
-from repro.tune.prune import (calibration_from_db, predicted_latency,
-                              prune_candidates)
+from repro.tune.prune import (calibration_from_db, predicted_e2e,
+                              predicted_latency, prune_candidates)
 
 
 def run_sweep(*args, **kwargs):
@@ -40,6 +40,7 @@ __all__ = [
     "CalibrationResult", "TuneDB", "TuneEntry", "calibrate_from_db",
     "calibration_from_db", "config_from_dict", "config_to_dict",
     "default_db_path", "enumerate_configs", "fit_latency_model",
-    "model_vs_measured", "predicted_latency", "prune_candidates",
-    "run_sweep", "select_config", "space_size", "topology_key",
+    "model_vs_measured", "predicted_e2e", "predicted_latency",
+    "prune_candidates", "run_sweep", "select_config", "space_size",
+    "topology_key",
 ]

@@ -52,13 +52,23 @@ class TuneEntry:
     collective: str
     msg_bytes: int
     config: dict                  # config_to_dict(CommConfig)
-    us_per_call: float
+    us_per_call: float            # bare collective latency (latency_us)
     gbps: float = 0.0             # derived effective bandwidth
     # Worst-case torus hop distance of the measured pattern
     # (Communicator.torus_hops / max_hops): 1 = direct link, >1 = routed —
     # the paper's direct-link vs Ethernet-switch distinction.  Entries
     # measured at different hop distances are distinct data points.
     hops: int = 1
+    # End-to-end seconds-per-iteration (µs) of the collective's consumer
+    # loop (row_parallel matmul+reduce, halo-fold step) — what the paper's
+    # §5 result says actually decides the scaling config.  0.0 = not
+    # measured (latency-only sweep).
+    e2e_us: float = 0.0
+
+    @property
+    def latency_us(self) -> float:
+        """Bare collective latency — alias of ``us_per_call``."""
+        return self.us_per_call
 
     @property
     def comm_config(self) -> CommConfig:
@@ -66,6 +76,13 @@ class TuneEntry:
 
     def key(self) -> tuple:
         return (self.topo, self.collective, self.msg_bytes)
+
+    def metric(self, objective: str = "latency") -> float:
+        """Ranking metric for ``objective`` (µs); e2e falls back to bare
+        latency for entries without a consumer-loop measurement."""
+        if objective == "e2e" and self.e2e_us > 0.0:
+            return self.e2e_us
+        return self.us_per_call
 
 
 class TuneDB:
@@ -86,8 +103,14 @@ class TuneDB:
         for i, e in enumerate(self.entries):
             if (e.key() == entry.key() and e.hops == entry.hops
                     and tuple(sorted(e.config.items())) == cfg_key):
-                if entry.us_per_call < e.us_per_call:
-                    self.entries[i] = entry
+                # Merge: fastest latency wins; an e2e measurement is kept
+                # even when it rides a slower latency rerun (and the
+                # fastest e2e wins when both entries carry one).
+                e2e = (min(e.e2e_us, entry.e2e_us)
+                       if e.e2e_us > 0.0 and entry.e2e_us > 0.0
+                       else max(e.e2e_us, entry.e2e_us))
+                best = entry if entry.us_per_call < e.us_per_call else e
+                self.entries[i] = dataclasses.replace(best, e2e_us=e2e)
                 return
         self.entries.append(entry)
 
@@ -115,15 +138,31 @@ class TuneDB:
             return [e for e in cands if e.hops == nearest_h]
         return cands
 
+    @staticmethod
+    def _rank(entries: list[TuneEntry], objective: str
+              ) -> Optional[TuneEntry]:
+        """Fastest entry under ``objective``.  For ``e2e``, entries with a
+        measured consumer-loop time outrank latency-only entries (a measured
+        e2e beats a proxy); with none measured, fall back to bare latency."""
+        if not entries:
+            return None
+        if objective == "e2e":
+            with_e2e = [e for e in entries if e.e2e_us > 0.0]
+            if with_e2e:
+                return min(with_e2e, key=lambda e: e.e2e_us)
+        return min(entries, key=lambda e: e.us_per_call)
+
     def best(self, collective: str, msg_bytes: int, topo: str | None = None,
-             hops: int | None = None) -> Optional[TuneEntry]:
+             hops: int | None = None, objective: str = "latency"
+             ) -> Optional[TuneEntry]:
         """Fastest entry at exactly ``msg_bytes`` (None if not measured)."""
         exact = [e for e in self.candidates(collective, topo, hops)
                  if e.msg_bytes == msg_bytes]
-        return min(exact, key=lambda e: e.us_per_call) if exact else None
+        return self._rank(exact, objective)
 
     def nearest(self, collective: str, msg_bytes: int, topo: str | None = None,
-                hops: int | None = None) -> Optional[TuneEntry]:
+                hops: int | None = None, objective: str = "latency"
+                ) -> Optional[TuneEntry]:
         """Fastest entry at the measured message size closest (in log space)
         to ``msg_bytes`` — message-size behaviour is scale-free, so log
         distance is the right metric (1 KiB is "nearer" 4 KiB than 64 KiB)."""
@@ -134,7 +173,7 @@ class TuneDB:
         nearest_size = min({e.msg_bytes for e in cands},
                            key=lambda s: abs(math.log(max(1, s)) - target))
         exact = [e for e in cands if e.msg_bytes == nearest_size]
-        return min(exact, key=lambda e: e.us_per_call)
+        return self._rank(exact, objective)
 
     # ------------------------------------------------------------------
     # Persistence
@@ -165,6 +204,7 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
                   path: os.PathLike | str | None = None,
                   topo: str | None = None,
                   hops: int | None = None,
+                  objective: str = "latency",
                   fallback: CommConfig = OPTIMIZED_CONFIG) -> CommConfig:
     """The autotuner's answer to "how should I communicate?".
 
@@ -176,18 +216,30 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
     config tuned on another platform's cost structure is worse than no
     tuning); falls back to the paper's ``OPTIMIZED_CONFIG`` on a cold cache
     so callers can unconditionally pass ``comm_cfg="auto"``.
+
+    ``objective`` selects the ranking metric: ``"latency"`` (bare collective
+    microbenchmark — the default) or ``"e2e"`` (the measured consumer-loop
+    wall clock, ``TuneEntry.e2e_us``).  The paper's §5 finding is exactly
+    that these disagree when the consumer has hideable compute: the config
+    that wins the microbench is not the one that scales the application.
+    Entries without an e2e measurement rank by bare latency under either
+    objective.
     """
+    if objective not in ("latency", "e2e"):
+        raise ValueError(f"objective must be 'latency' or 'e2e', "
+                         f"got {objective!r}")
     if db is None:
         db = TuneDB.load(path)
     if topo is None:
         topo = topology_key(mesh) if mesh is not None else topology_key()
     platform = topo.split(":", 1)[0]
-    entry = (db.best(collective, msg_bytes, topo, hops)
-             or db.nearest(collective, msg_bytes, topo, hops))
+    entry = (db.best(collective, msg_bytes, topo, hops, objective)
+             or db.nearest(collective, msg_bytes, topo, hops, objective))
     if entry is None:
         same_platform = TuneDB([e for e in db.entries
                                 if e.topo.split(":", 1)[0] == platform])
-        entry = same_platform.nearest(collective, msg_bytes, None, hops)
+        entry = same_platform.nearest(collective, msg_bytes, None, hops,
+                                      objective)
     if entry is None:
         return fallback
     return entry.comm_config

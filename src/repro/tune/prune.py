@@ -54,22 +54,63 @@ def predicted_latency(cfg: CommConfig, msg_bytes: int,
     return latmodel.pingping_latency(msg_bytes, cfg, hw)
 
 
+def predicted_e2e(cfg: CommConfig, msg_bytes: int,
+                  calibration: CalibrationResult, compute_s: float,
+                  collective: str | None = None) -> float:
+    """End-to-end consumer-loop prediction (seconds per iteration): the
+    overlap-aware Eq. 2 term applied to the consumer, on the calibrated
+    substrate.
+
+    ``compute_s`` is the hideable per-iteration compute (the row_parallel
+    matmul, the halo interior update).  The overlapped schedule hides the
+    calibrated comm latency behind it (``max``), the fused/host schedules
+    expose part or all of it — which is what reorders candidates relative
+    to :func:`predicted_latency` and lets the sweep prune on the ``e2e``
+    objective without measuring every consumer loop.
+
+    Chunking mirrors what the consumer actually executes: the row_parallel
+    consumer routes EVERY streaming-mode all_reduce through the chunked
+    ``overlapped_matmul_allreduce`` (not just overlapped scheduling), so a
+    streaming candidate is always priced per wire chunk — otherwise the
+    pruner would rank candidates against a program the e2e sweep never
+    runs.
+    """
+    import dataclasses
+    from repro.core.config import Scheduling
+    hw = calibration.to_hardware_spec()
+    chunked = cfg.mode == CommMode.STREAMING and (
+        collective in _CHUNKED_STREAMING
+        or collective == "all_reduce"
+        or cfg.scheduling == Scheduling.OVERLAPPED)
+    if not chunked and cfg.mode == CommMode.STREAMING:
+        cfg = dataclasses.replace(cfg, max_chunks=1)
+    return latmodel.e2e_consumer_latency(msg_bytes, cfg, compute_s, hw)
+
+
 def prune_candidates(cands: Sequence[CommConfig], msg_bytes: int,
                      calibration: CalibrationResult,
                      ratio: float = DEFAULT_RATIO,
-                     collective: str | None = None
+                     collective: str | None = None,
+                     objective: str = "latency",
+                     compute_s: float = 0.0
                      ) -> tuple[list[CommConfig], list[CommConfig]]:
-    """Split candidates into (measure, skip) by calibrated Eq. 1 ranking.
+    """Split candidates into (measure, skip) by calibrated model ranking.
 
     A candidate is skipped when the model predicts it to be more than
     ``ratio``× slower than the best predicted candidate (the incumbent).
     The incumbent itself is always kept, so the pruned sweep can never
     select a config the exhaustive sweep would not also have measured.
+    ``objective="e2e"`` ranks by :func:`predicted_e2e` (consumer loop with
+    ``compute_s`` of hideable compute) instead of bare Eq. 1 latency.
     """
     if not cands:
         return [], []
-    preds = [predicted_latency(c, msg_bytes, calibration, collective)
-             for c in cands]
+    if objective == "e2e":
+        preds = [predicted_e2e(c, msg_bytes, calibration, compute_s,
+                               collective) for c in cands]
+    else:
+        preds = [predicted_latency(c, msg_bytes, calibration, collective)
+                 for c in cands]
     best = min(preds)
     kept, skipped = [], []
     for cfg, pred in zip(cands, preds):

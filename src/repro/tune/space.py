@@ -82,8 +82,18 @@ _RELEVANT_FIELDS: dict[str, frozenset[str]] = {
 
 _DEFAULTS = CommConfig()
 
+# Collectives with an e2e consumer-loop benchmark whose *consumer* reads
+# Scheduling.OVERLAPPED even though the bare collective executes identically
+# to fused (row_parallel routes the combine through
+# overlapped_matmul_allreduce; the halo fold is double-buffered).  Under the
+# e2e objective the overlapped variants must stay distinct candidates — the
+# whole point of the paper's §5 finding is that the microbench cannot rank
+# them but the consumer loop can.
+CONSUMER_COLLECTIVES = frozenset({"all_reduce", "multi_neighbor"})
 
-def _canonicalize(cfg: CommConfig, collective: str | None) -> CommConfig:
+
+def _canonicalize(cfg: CommConfig, collective: str | None,
+                  objective: str = "latency") -> CommConfig:
     """Collapse fields a collective (or the config itself) never reads."""
     updates: dict = {}
     if collective is not None:
@@ -103,10 +113,13 @@ def _canonicalize(cfg: CommConfig, collective: str | None) -> CommConfig:
     # overlapped config exactly like the fused one, so collapse it and
     # never measure the duplicate.
     if merged.scheduling == Scheduling.OVERLAPPED:
+        keep_overlapped = (objective == "e2e"
+                           and collective in CONSUMER_COLLECTIVES)
         if collective == "all_to_all" and merged.mode != CommMode.STREAMING:
             # buffered all_to_all has no wire chunks to tile: same program
             merged = dataclasses.replace(merged, scheduling=Scheduling.FUSED)
-        elif collective not in (None, "multi_neighbor", "all_to_all"):
+        elif (collective not in (None, "multi_neighbor", "all_to_all")
+              and not keep_overlapped):
             merged = dataclasses.replace(merged, scheduling=Scheduling.FUSED)
         elif (collective == "multi_neighbor"
               and merged.mode == CommMode.BUFFERED
@@ -127,12 +140,17 @@ def _canonicalize(cfg: CommConfig, collective: str | None) -> CommConfig:
 
 def enumerate_configs(collective: str | None = None,
                       axes: dict[str, Sequence] | None = None,
-                      fast: bool = False) -> list[CommConfig]:
+                      fast: bool = False,
+                      objective: str = "latency") -> list[CommConfig]:
     """All valid, deduplicated ``CommConfig`` candidates for ``collective``.
 
     Invalid combinations are pruned by attempting construction — the single
     source of truth for validity is ``CommConfig.__post_init__`` itself, so
     the search space can never drift from the config's rules.
+
+    ``objective="e2e"`` keeps candidates distinct when the collective's
+    *consumer loop* distinguishes them even though the bare collective does
+    not (overlapped scheduling for :data:`CONSUMER_COLLECTIVES`).
     """
     if axes is None:
         axes = FAST_AXES if fast else DEFAULT_AXES
@@ -145,7 +163,7 @@ def enumerate_configs(collective: str | None = None,
             # Canonicalization can itself produce an invalid combo (e.g.
             # resetting an irrelevant algorithm='ring' to 'native' while
             # int8 compression stays relevant) — prune those too.
-            cfg = _canonicalize(cfg, collective)
+            cfg = _canonicalize(cfg, collective, objective)
         except ValueError:
             continue
         if cfg in seen:

@@ -25,7 +25,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.config import CommConfig, Scheduling
+from repro.core import plans
+from repro.core.config import CommConfig, CommMode, Scheduling, V5E
 from repro.tune import prune as tune_prune
 from repro.tune import space as tune_space
 from repro.tune.db import TuneDB, TuneEntry, default_db_path, topology_key
@@ -42,6 +43,31 @@ NAMED_SIZES = {"small": (1 << 14, 1 << 20), "full": FULL_SIZES}
 SWEEPABLE = ("sendrecv", "all_reduce", "all_gather", "reduce_scatter",
              "multi_neighbor", "all_to_all", "hierarchical_all_reduce")
 
+# Collectives with an end-to-end consumer-loop benchmark (the two
+# hideable-compute consumers of the paper's §5 argument): the row-parallel
+# matmul+reduce layer and the halo-fold step.
+CONSUMERS = {"all_reduce": "row_parallel", "multi_neighbor": "halo_fold"}
+
+OBJECTIVES = ("latency", "e2e")
+
+# row_parallel consumer geometry: the reduced output is (tokens, _ROWPAR_D)
+# with tokens*_ROWPAR_D*4 = msg_bytes; the hideable per-device matmul
+# contracts over _ROWPAR_FF features.
+_ROWPAR_D = 64
+_ROWPAR_FF = 128
+
+
+def consumer_flops(collective: str, msg_bytes: int) -> float:
+    """Hideable per-iteration compute (FLOPs) of a collective's consumer
+    loop — feeds the e2e prediction (compute_s = flops / peak)."""
+    if collective == "all_reduce":
+        # matmul: 2 * tokens * ff * d with tokens*d = msg_bytes/4 elements
+        return 2.0 * _ROWPAR_FF * (msg_bytes / 4.0)
+    if collective == "multi_neighbor":
+        # elementwise interior update over the state (~12 flops/element)
+        return 12.0 * (msg_bytes / 4.0)
+    return 0.0
+
 
 # ----------------------------------------------------------------------
 # Microbenchmark program builders
@@ -52,6 +78,15 @@ def _payload_elems(msg_bytes: int, n: int) -> int:
     reduce-scatter/all-to-all constraints hold for every collective."""
     elems = max(n, msg_bytes // 4)
     return elems + (-elems) % n
+
+
+def _mesh_key(mesh) -> tuple:
+    """Program-cache key component for the bench mesh's STRUCTURE.
+
+    ``topology_key`` is only platform:n_devices — two factorizations of the
+    same device count (an 8-rank axis vs a 4x2 inner/outer mesh) compile
+    different programs and must never replay each other's."""
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape))
 
 
 def _multi_neighbor_rounds(comm) -> list:
@@ -123,9 +158,80 @@ def _build_op(collective: str, comm, cfg: CommConfig,
     return op
 
 
+def _build_consumer_op(collective: str, comm, cfg: CommConfig,
+                       msg_bytes: int) -> tuple[Callable, tuple]:
+    """One iteration of the collective's consumer loop: (op, per_dev_shape).
+
+    ``op`` maps a per-device payload to a same-shaped payload so iterations
+    chain; the body is compute the schedule could hide the collective
+    behind — the end-to-end time is what the ``e2e`` objective ranks.
+    """
+    from jax import numpy as jnp
+    from repro.core import collectives, streaming
+
+    if collective == "all_reduce":
+        # Row-parallel TP layer: per-device matmul + combine of the partial
+        # sum.  Mirrors models.layers.row_parallel: streaming mode or
+        # overlapped scheduling routes the chunked, double-buffered
+        # overlapped_matmul_allreduce; buffered+fused/host issues one
+        # all_reduce after the full matmul.
+        tokens = max(8, msg_bytes // 4 // _ROWPAR_D)
+        w = jnp.asarray(
+            np.random.RandomState(0).randn(_ROWPAR_FF, _ROWPAR_D) * 0.05,
+            jnp.float32)
+
+        def op(h):
+            if (cfg.mode == CommMode.STREAMING
+                    or cfg.scheduling == Scheduling.OVERLAPPED):
+                y = streaming.overlapped_matmul_allreduce(h, w, comm, cfg)
+            else:
+                partial = jnp.dot(h, w, preferred_element_type=jnp.float32)
+                y = collectives.all_reduce(partial, comm, cfg)
+            # feed the reduced output back into the activation shape so the
+            # next iteration depends on this one
+            return jnp.tanh(h + 1e-3 * jnp.sum(y, axis=-1, keepdims=True))
+
+        return op, (tokens, _ROWPAR_FF)
+
+    if collective == "multi_neighbor":
+        # Halo-fold step: 4-neighbor exchange + fold of the received halos
+        # + an interior element update the overlapped schedule can issue
+        # while the exchange is in flight.
+        rounds = _multi_neighbor_rounds(comm)
+        n = comm.size
+        elems = _payload_elems(msg_bytes, n)
+
+        def op(x):
+            payloads = [x] * len(rounds)
+            interior = x * 0.999 + 0.001 * jnp.tanh(x)     # hideable compute
+            if cfg.scheduling == Scheduling.OVERLAPPED:
+                halo, _ = collectives.multi_neighbor_exchange(
+                    payloads, rounds, comm, cfg,
+                    consume=lambda c, r, m: c + m, init=jnp.zeros_like(x))
+            else:
+                received = collectives.multi_neighbor_exchange(
+                    payloads, rounds, comm, cfg)
+                halo = sum(received)
+            return interior + 1e-3 * jnp.tanh(halo)
+
+        return op, (elems,)
+
+    raise ValueError(f"no consumer-loop benchmark for {collective!r} "
+                     f"(consumers: {tuple(CONSUMERS)})")
+
+
 def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
-                  warmup: int = 1, reps: int = 3, inner: int = 8) -> float:
-    """Seconds per collective op under the config's scheduling discipline."""
+                  warmup: int = 1, reps: int = 3, inner: int = 8,
+                  per_dev_shape: tuple | None = None,
+                  cache_key: tuple | None = None) -> float:
+    """Seconds per collective op under the config's scheduling discipline.
+
+    With ``cache_key`` given, the jitted program is fetched from / stored in
+    the :mod:`repro.core.plans` program cache: a warm sweep (same process,
+    same collective/config/size/topology) replays the compiled program and
+    pays zero rebuild/retrace — the plan-cache half of the sweep wall-clock
+    win.
+    """
     import jax
     from jax import numpy as jnp
     from jax.sharding import PartitionSpec as P
@@ -135,23 +241,32 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
     # benches on a 2-axis inner×outer mesh; everything else on one axis).
     spec = P(tuple(mesh.axis_names))
     n = mesh.devices.size
-    elems = _payload_elems(msg_bytes, n)
-    x = jnp.zeros((n, elems), jnp.float32)
+    if per_dev_shape is None:
+        per_dev_shape = (_payload_elems(msg_bytes, n),)
+    x = jnp.zeros((n,) + tuple(per_dev_shape), jnp.float32)
 
-    single = jax.jit(compat.shard_map(
-        lambda xs: op(xs[0])[None], mesh=mesh,
-        in_specs=spec, out_specs=spec, check_vma=False))
+    def build_single():
+        return jax.jit(compat.shard_map(
+            lambda xs: op(xs[0])[None], mesh=mesh,
+            in_specs=spec, out_specs=spec, check_vma=False))
 
     if cfg.scheduling != Scheduling.HOST:
         # fused and overlapped are both device-scheduled: one dispatch
         # amortized over the compiled loop
-        def many(xs):
-            for _ in range(inner):
-                xs = compat.shard_map(
-                    lambda v: op(v[0])[None], mesh=mesh,
-                    in_specs=spec, out_specs=spec, check_vma=False)(xs)
-            return xs
-        fn = jax.jit(many)
+        def build_many():
+            def many(xs):
+                for _ in range(inner):
+                    xs = compat.shard_map(
+                        lambda v: op(v[0])[None], mesh=mesh,
+                        in_specs=spec, out_specs=spec, check_vma=False)(xs)
+                return xs
+            return jax.jit(many)
+
+        if cache_key is not None:
+            fn = plans.jitted_program(
+                cache_key + ("many", inner, tuple(per_dev_shape)), build_many)
+        else:
+            fn = build_many()
         for _ in range(warmup):
             x = jax.block_until_ready(fn(x))
         t0 = time.perf_counter()
@@ -161,6 +276,11 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
         return (time.perf_counter() - t0) / (reps * inner)
 
     # Host scheduling: one dispatch per op, host blocks between dispatches.
+    if cache_key is not None:
+        single = plans.jitted_program(
+            cache_key + ("single", tuple(per_dev_shape)), build_single)
+    else:
+        single = build_single()
     for _ in range(warmup):
         x = jax.block_until_ready(single(x))
     t0 = time.perf_counter()
@@ -186,8 +306,11 @@ def _seed_calibration(mesh, comm, db: TuneDB, topo: str,
         for cfg in tune_space.enumerate_configs("sendrecv", fast=True):
             try:
                 op = _build_op("sendrecv", comm, cfg)
-                sec = _time_program(op, mesh, msg_bytes, cfg,
-                                    reps=reps, inner=inner)
+                sec = _time_program(
+                    op, mesh, msg_bytes, cfg, reps=reps, inner=inner,
+                    cache_key=("sweep", topo, _mesh_key(mesh), "sendrecv",
+                               tuple(sorted(tune_space.config_to_dict(
+                                   cfg).items())), int(msg_bytes)))
             except Exception as e:  # noqa: BLE001
                 log(f"  seed skip sendrecv/{msg_bytes}B: "
                     f"{type(e).__name__}: {e}")
@@ -208,6 +331,7 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
               prune: bool = False,
               prune_ratio: float = tune_prune.DEFAULT_RATIO,
               calibration=None,
+              objective: str = "latency",
               stats: dict | None = None) -> TuneDB:
     """Measure every candidate config and return the populated TuneDB.
 
@@ -217,12 +341,23 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     sweep skips configs ranked more than ``prune_ratio``× off the predicted
     incumbent.  ``stats`` (optional dict) receives the bookkeeping:
     candidate/measured/pruned counts and wall clock, including the
-    estimated exhaustive wall clock the pruning saved.
+    estimated exhaustive wall clock the pruning saved and the plan-cache
+    hit/miss deltas.
+
+    ``objective="e2e"`` additionally measures each candidate *end-to-end*
+    for the collectives with a consumer-loop benchmark (:data:`CONSUMERS`:
+    the row-parallel matmul+reduce layer and the halo-fold step), records
+    ``TuneEntry.e2e_us``, keeps consumer-distinct candidates (overlapped
+    scheduling) in the space, and — with ``prune=True`` — ranks candidates
+    by the overlap-aware e2e prediction instead of bare Eq. 1 latency.
     """
     import jax
     from repro import compat
     from repro.core.communicator import Communicator
 
+    if objective not in OBJECTIVES:
+        raise ValueError(f"objective must be one of {OBJECTIVES}, "
+                         f"got {objective!r}")
     if mesh is None:
         mesh = compat.make_mesh((jax.device_count(),), ("x",))
     if sizes is None:
@@ -233,7 +368,9 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
         reps, inner = min(reps, 2), min(inner, 4)
     log = log or (lambda s: None)
     stats = stats if stats is not None else {}
-    stats.update(total=0, measured=0, pruned=0, errors=0, wall_s=0.0)
+    stats.update(total=0, measured=0, pruned=0, errors=0, e2e_measured=0,
+                 wall_s=0.0)
+    cache_before = plans.cache_stats()
     t_start = time.perf_counter()
 
     axis = mesh.axis_names[0]
@@ -270,48 +407,87 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
             inner_comm = Communicator.from_mesh(bench_mesh, "inner")
             outer_comm = Communicator.from_mesh(bench_mesh, "outer")
             subcomms = (inner_comm, outer_comm)
-        cands = tune_space.enumerate_configs(coll, fast=fast)
+        cands = tune_space.enumerate_configs(coll, fast=fast,
+                                             objective=objective)
         if max_configs is not None:
             cands = cands[:max_configs]
         hops = _pattern_hops(coll, comm)
+        consumer = CONSUMERS.get(coll) if objective == "e2e" else None
         log(f"[{topo}] {coll}: {len(cands)} configs x {len(sizes)} sizes "
-            f"(pattern hops={hops})")
+            f"(pattern hops={hops}"
+            + (f", e2e consumer={consumer}" if consumer else "") + ")")
         for msg_bytes in sizes:
             stats["total"] += len(cands)
             to_measure = cands
             if prune and calibration is not None:
+                compute_s = (consumer_flops(coll, msg_bytes)
+                             / V5E.peak_flops if consumer else 0.0)
                 to_measure, skipped = tune_prune.prune_candidates(
                     cands, msg_bytes, calibration, prune_ratio,
-                    collective=coll)
+                    collective=coll,
+                    objective="e2e" if consumer else "latency",
+                    compute_s=compute_s)
                 stats["pruned"] += len(skipped)
                 if skipped:
                     log(f"  prune {coll}/{msg_bytes}B: measuring "
                         f"{len(to_measure)}/{len(cands)} (model skipped "
                         f"{len(skipped)})")
+            cfg_key = lambda c: tuple(sorted(
+                tune_space.config_to_dict(c).items()))
             for i, cfg in enumerate(to_measure):
                 try:
                     op = _build_op(coll, comm, cfg, subcomms=subcomms)
-                    sec = _time_program(op, bench_mesh, msg_bytes, cfg,
-                                        reps=reps, inner=inner)
+                    sec = _time_program(
+                        op, bench_mesh, msg_bytes, cfg,
+                        reps=reps, inner=inner,
+                        cache_key=("sweep", topo, _mesh_key(bench_mesh),
+                                   coll, cfg_key(cfg), int(msg_bytes)))
                 except Exception as e:  # noqa: BLE001 — skip unrunnable combos
                     stats["errors"] += 1
                     log(f"  skip {coll}/{msg_bytes}B cfg{i}: "
                         f"{type(e).__name__}: {e}")
                     continue
+                e2e_us = 0.0
+                if consumer:
+                    try:
+                        cop, shape = _build_consumer_op(coll, comm, cfg,
+                                                        msg_bytes)
+                        e2e_sec = _time_program(
+                            cop, bench_mesh, msg_bytes, cfg,
+                            reps=reps, inner=inner, per_dev_shape=shape,
+                            cache_key=("sweep_e2e", topo,
+                                       _mesh_key(bench_mesh), coll,
+                                       cfg_key(cfg), int(msg_bytes)))
+                        e2e_us = e2e_sec * 1e6
+                        stats["e2e_measured"] += 1
+                    except Exception as e:  # noqa: BLE001
+                        stats["errors"] += 1
+                        log(f"  skip e2e {coll}/{msg_bytes}B cfg{i}: "
+                            f"{type(e).__name__}: {e}")
                 stats["measured"] += 1
                 db.add(TuneEntry(
                     topo=topo, collective=coll, msg_bytes=int(msg_bytes),
                     config=tune_space.config_to_dict(cfg),
                     us_per_call=sec * 1e6,
                     gbps=msg_bytes / sec / 1e9,
-                    hops=hops))
+                    hops=hops, e2e_us=e2e_us))
             best = db.best(coll, msg_bytes, topo)
             if best is not None:
                 log(f"  {coll:15s} {msg_bytes:>8d}B best "
                     f"{best.us_per_call:9.1f} us  ({best.gbps:6.3f} GB/s)  "
                     f"{best.config['mode']}/{best.config['scheduling']}"
                     f"/{best.config['algorithm']}")
+            if consumer:
+                be = db.best(coll, msg_bytes, topo, objective="e2e")
+                if be is not None and be.e2e_us > 0.0:
+                    log(f"  {coll:15s} {msg_bytes:>8d}B best e2e "
+                        f"{be.e2e_us:9.1f} us/iter "
+                        f"({consumer}) "
+                        f"{be.config['mode']}/{be.config['scheduling']}")
     stats["wall_s"] = time.perf_counter() - t_start
+    cache_after = plans.cache_stats()
+    for k in ("plan_hits", "plan_misses", "program_hits", "program_misses"):
+        stats[k] = cache_after[k] - cache_before.get(k, 0)
     # The visible pruning win: scale the measured wall clock (minus any
     # calibration-seed overhead) back up to the exhaustive candidate count
     # (per-config cost assumed comparable).
@@ -322,13 +498,20 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
 
 
 def sweep_summary(stats: dict) -> str:
-    """One-line wall-clock summary (exhaustive vs calibration-pruned)."""
+    """One-line wall-clock summary (exhaustive vs calibration-pruned), plus
+    the plan-cache hit/miss counts behind the warm-sweep win."""
     line = (f"sweep wall clock {stats.get('wall_s', 0.0):.1f}s: measured "
             f"{stats.get('measured', 0)}/{stats.get('total', 0)} candidate "
             f"configs")
+    if stats.get("e2e_measured"):
+        line += f" ({stats['e2e_measured']} consumer-loop e2e)"
     if stats.get("pruned"):
         line += (f" — {stats['pruned']} pruned by the calibrated model "
                  f"(exhaustive est. ~{stats.get('est_exhaustive_s', 0.0):.1f}s)")
+    line += (f" — plan cache: {stats.get('program_hits', 0)} program hits / "
+             f"{stats.get('program_misses', 0)} misses, "
+             f"{stats.get('plan_hits', 0)} plan hits / "
+             f"{stats.get('plan_misses', 0)} misses")
     return line
 
 
@@ -377,6 +560,17 @@ def main(argv: Sequence[str] | None = None) -> int:
                     help="exit non-zero unless the sweep measured strictly "
                     "fewer configs than the exhaustive candidate space "
                     "(CI guard for the pruning path)")
+    ap.add_argument("--objective", choices=OBJECTIVES, default="latency",
+                    help="ranking metric recorded by the sweep: bare "
+                    "collective latency, or 'e2e' — additionally measure "
+                    "each candidate inside its consumer loop (row_parallel "
+                    "matmul+reduce, halo-fold step) and record "
+                    "TuneEntry.e2e_us for select_config(objective='e2e')")
+    ap.add_argument("--warm-check", action="store_true",
+                    help="run the sweep twice in this process (cold, then "
+                    "warm against the populated plan cache) and exit "
+                    "non-zero unless the warm sweep's wall clock is at "
+                    "least 30%% lower (plan-cache effectiveness guard)")
     args = ap.parse_args(argv)
 
     _ensure_devices(args.devices)
@@ -398,14 +592,40 @@ def main(argv: Sequence[str] | None = None) -> int:
 
     db = TuneDB.load(args.out)
     stats: dict = {}
-    db = run_sweep(collectives=colls, sizes=sizes, fast=args.fast, db=db,
-                   max_configs=args.max_configs,
-                   log=lambda s: print(s, flush=True),
-                   prune=args.prune, prune_ratio=args.prune_ratio,
-                   stats=stats)
+    kwargs = dict(collectives=colls, sizes=sizes, fast=args.fast,
+                  max_configs=args.max_configs,
+                  log=lambda s: print(s, flush=True),
+                  prune=args.prune, prune_ratio=args.prune_ratio,
+                  objective=args.objective)
+    db = run_sweep(db=db, stats=stats, **kwargs)
     path = db.save(args.out)
     print(f"wrote {len(db)} entries -> {path}")
     print(sweep_summary(stats))
+
+    if args.warm_check:
+        warm_stats: dict = {}
+        db = run_sweep(db=db, stats=warm_stats, **kwargs)
+        db.save(args.out)
+        print("warm " + sweep_summary(warm_stats))
+        # Cold cost includes any calibration seeding: its compiles are part
+        # of what the first run pays and may themselves warm the program
+        # cache (a sendrecv sweep with --prune measures the seeded configs).
+        # A warm run skipping work via cached programs/calibration is
+        # exactly the claimed win; the hits guard below (not the wall
+        # clock) is what catches a silently broken cache.
+        cold_s = stats.get("wall_s", 0.0)
+        warm_s = warm_stats.get("wall_s", 0.0)
+        print(f"plan-cache warm check: cold {cold_s:.1f}s -> warm "
+              f"{warm_s:.1f}s ({1.0 - warm_s / max(cold_s, 1e-9):.0%} lower)")
+        if warm_stats.get("program_hits", 0) <= 0:
+            print("WARM-CHECK FAILED: the warm sweep replayed zero cached "
+                  "programs (plan cache broken?)", file=sys.stderr)
+            return 4
+        if warm_s > 0.7 * cold_s:
+            print("WARM-CHECK FAILED: warm sweep wall clock is not >= 30% "
+                  "lower than cold (plan cache ineffective)",
+                  file=sys.stderr)
+            return 4
 
     if args.calibrate:
         from repro.tune.calibrate import calibrate_from_db, model_vs_measured

@@ -67,30 +67,43 @@ def test_main_no_regressions_when_identical(tmp_path):
 
 def test_multi_baseline_enforcement(tmp_path):
     """Rows need >= 2 committed baselines to hard-fail; the reference is the
-    most lenient baseline; lmcoll_ rows stay report-only."""
+    most lenient baseline; e2e_ rows stay report-only.  The lmcoll_ rows
+    graduated to enforced now that two committed baselines carry them."""
     b1 = _write(tmp_path / "b1.json", {
         "fig9_accl_udp_p8": {"us_per_call": 100.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 10.0, "derived": ""},
         "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 50.0, "derived": ""},
+        "e2e_rowpar_lat_winner_us": {"us_per_call": 40.0, "derived": ""},
     })
     b2 = _write(tmp_path / "b2.json", {
         "fig9_accl_udp_p8": {"us_per_call": 120.0, "derived": ""},
         "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 55.0, "derived": ""},
+        "e2e_rowpar_lat_winner_us": {"us_per_call": 45.0, "derived": ""},
     })
     # everything regressed 2x vs the lenient baseline
     new = _write(tmp_path / "new.json", {
         "fig9_accl_udp_p8": {"us_per_call": 240.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 20.0, "derived": ""},
         "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 110.0, "derived": ""},
+        "e2e_rowpar_lat_winner_us": {"us_per_call": 90.0, "derived": ""},
     })
-    # the 2-baseline fig9 row is enforced -> exit 1
+    # the 2-baseline fig9 AND lmcoll rows are enforced -> exit 1
     assert bench_diff.main(["--old", b1, "--old", b2, "--new", new]) == 1
-    # remove the enforced regression: single-baseline + lmcoll rows are
-    # report-only, so the gate passes
+    # an lmcoll-only regression now gates too (promotion regression test)
+    lm_only = _write(tmp_path / "lm_only.json", {
+        "fig9_accl_udp_p8": {"us_per_call": 110.0, "derived": ""},
+        "fig9_new_row": {"us_per_call": 20.0, "derived": ""},
+        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 110.0, "derived": ""},
+        "e2e_rowpar_lat_winner_us": {"us_per_call": 45.0, "derived": ""},
+    })
+    assert bench_diff.main(["--old", b1, "--old", b2, "--new", lm_only]) == 1
+    # remove the enforced regressions: single-baseline + e2e_ rows are
+    # report-only, so the gate passes even with both regressed
     ok = _write(tmp_path / "ok.json", {
         "fig9_accl_udp_p8": {"us_per_call": 110.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 20.0, "derived": ""},      # 1 baseline
-        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 110.0, "derived": ""},
+        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 55.0, "derived": ""},
+        "e2e_rowpar_lat_winner_us": {"us_per_call": 90.0, "derived": ""},
     })
     assert bench_diff.main(["--old", b1, "--old", b2, "--new", ok]) == 0
 
@@ -106,17 +119,19 @@ def test_merge_baselines_lenient_reference():
 
 def test_split_enforced_tiers():
     regs = [("a", 10.0, 30.0, 3.0), ("b", 5.0, 20.0, 4.0),
-            ("lmcoll_x", 1.0, 9.0, 9.0)]
-    counts = {"a": 2, "b": 1, "lmcoll_x": 2}
+            ("lmcoll_x", 1.0, 9.0, 9.0), ("e2e_x", 1.0, 9.0, 9.0)]
+    counts = {"a": 2, "b": 1, "lmcoll_x": 2, "e2e_x": 2}
     hard, soft = bench_diff.split_enforced(
         regs, counts, n_baselines=2,
         report_only_prefixes=bench_diff.DEFAULT_REPORT_ONLY_PREFIXES)
-    assert [r[0] for r in hard] == ["a"]
-    assert sorted(r[0] for r in soft) == ["b", "lmcoll_x"]
+    # lmcoll_ rows are enforced now (>= 2 baselines, no longer a default
+    # report-only prefix); e2e_ rows ride report-only
+    assert [r[0] for r in hard] == ["a", "lmcoll_x"]
+    assert sorted(r[0] for r in soft) == ["b", "e2e_x"]
     # single-baseline mode keeps the old semantics: everything enforced
-    hard1, soft1 = bench_diff.split_enforced(regs, {"a": 1, "b": 1,
-                                                    "lmcoll_x": 1}, 1, ())
-    assert len(hard1) == 3 and not soft1
+    hard1, soft1 = bench_diff.split_enforced(
+        regs, {"a": 1, "b": 1, "lmcoll_x": 1, "e2e_x": 1}, 1, ())
+    assert len(hard1) == 4 and not soft1
 
 
 def test_main_bad_input(tmp_path, capsys):

@@ -1,0 +1,280 @@
+"""CommPlan cache: keying, hit/miss accounting, no-retrace replay, and
+bitwise parity of cached vs uncached execution across the scheduling x
+transport matrix."""
+import numpy as np
+import pytest
+
+from helpers import run_multidevice
+
+
+# ----------------------------------------------------------------------
+# Keying: what hits and what misses
+# ----------------------------------------------------------------------
+
+def _fresh_plans():
+    from repro.core import plans
+    plans.clear_cache()
+    plans.reset_stats()
+    return plans
+
+
+def test_plan_keying_hits_and_misses():
+    """Identical call hits; config, shape, dtype, and communicator changes
+    each miss."""
+    import dataclasses
+    plans = _fresh_plans()
+    from repro.core.communicator import Communicator
+    from repro.core.config import CommConfig, Transport
+
+    cfg = CommConfig(chunk_bytes=1 << 12)
+    comm = Communicator(("x",), (8,))
+
+    p1 = plans.get_plan("sendrecv", comm, cfg, (1024,), np.float32)
+    assert plans.cache_stats()["plan_misses"] == 1
+    p2 = plans.get_plan("sendrecv", comm, cfg, (1024,), np.float32)
+    assert p2 is p1                          # identical call -> hit
+    assert plans.cache_stats()["plan_hits"] == 1
+
+    # a fresh-but-equal communicator still hits (value keying, not identity)
+    p2b = plans.get_plan("sendrecv", Communicator(("x",), (8,)), cfg,
+                         (1024,), np.float32)
+    assert p2b is p1
+
+    # each of these must MISS
+    before = plans.cache_stats()["plan_misses"]
+    plans.get_plan("sendrecv", comm,
+                   dataclasses.replace(cfg, transport=Transport.ORDERED),
+                   (1024,), np.float32)                       # config change
+    plans.get_plan("sendrecv", comm, cfg, (2048,), np.float32)  # shape change
+    plans.get_plan("sendrecv", comm, cfg, (1024,), np.int8)     # dtype change
+    plans.get_plan("sendrecv", Communicator(("y",), (4,)), cfg,
+                   (1024,), np.float32)                       # comm change
+    plans.get_plan("all_reduce", comm, cfg, (1024,), np.float32)  # collective
+    assert plans.cache_stats()["plan_misses"] == before + 5
+
+
+def test_chunk_plan_matches_streaming_layouts():
+    """The cached layouts replay exactly what the engines derived inline:
+    equal_split == split_chunks/num_chunks, aligned == aligned_chunks."""
+    import math
+    plans = _fresh_plans()
+    import jax.numpy as jnp
+    from repro.core import streaming
+    from repro.core.config import CommConfig, Transport
+
+    rng = np.random.RandomState(0)
+    for _ in range(30):
+        size = int(rng.randint(1, 5000))
+        align = int(rng.choice([1, 3, 7, 16]))
+        cfg = CommConfig(chunk_bytes=int(rng.choice([512, 2048, 1 << 16])),
+                         max_chunks=int(rng.choice([2, 8, 16])),
+                         transport=Transport.ORDERED,
+                         window=int(rng.choice([1, 2, 4])))
+        x = jnp.zeros((size,), jnp.float32)
+        n_ref = streaming.num_chunks(size * 4, cfg)
+        p_eq = plans.chunk_plan((size,), np.float32, cfg, equal_split=True)
+        assert p_eq.n_chunks == n_ref
+        assert p_eq.chunk_elems == math.ceil(size / n_ref)
+        n_al, elems_al = streaming.aligned_chunks(x, cfg, align=align)
+        p_al = plans.chunk_plan((size,), np.float32, cfg, align=align)
+        assert (p_al.n_chunks, p_al.chunk_elems) == (n_al, elems_al)
+        assert elems_al % align == 0
+        # ack structure mirrors the ordered-transport window rule
+        for i, a in enumerate(p_eq.ack_of):
+            assert a == (i - cfg.window if i >= cfg.window else -1)
+
+
+def test_edge_rounds_and_ring_perm_cached():
+    plans = _fresh_plans()
+    from repro.core.collectives import edge_color_rounds
+    from repro.core.communicator import Communicator
+
+    edges = [(0, 1), (1, 2), (0, 2), (3, 0)]
+    r1 = edge_color_rounds(edges)
+    r2 = edge_color_rounds(list(edges))
+    assert r1 is r2
+    # every edge exactly once, every round ppermute-valid
+    flat = [e for r in r1 for e in r]
+    assert sorted(flat) == sorted(edges)
+    for r in r1:
+        assert len({s for s, _ in r}) == len(r)
+        assert len({d for _, d in r}) == len(r)
+
+    comm = Communicator(("x",), (8,))
+    assert comm.ring_perm() == [(i, (i + 1) % 8) for i in range(8)]
+    assert comm.reverse_ring_perm(2) == [(i, (i - 2) % 8) for i in range(8)]
+
+
+def test_validated_perm_still_rejects_invalid():
+    """Caching must not swallow the validation errors."""
+    plans = _fresh_plans()
+    from repro.core.communicator import Communicator
+    comm = Communicator(("x",), (4,))
+    with pytest.raises(ValueError):
+        plans.validated_perm(comm, [(0, 1), (0, 2)])   # duplicate source
+    with pytest.raises(ValueError):
+        plans.validated_perm(comm, [(0, 9)])           # outside communicator
+    assert plans.validated_perm(comm, [(0, 1), (1, 0)]) == ((0, 1), (1, 0))
+
+
+def test_cache_bypass_env(monkeypatch):
+    plans = _fresh_plans()
+    from repro.core.config import CommConfig
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "0")
+    p1 = plans.chunk_plan((100,), np.float32, CommConfig())
+    p2 = plans.chunk_plan((100,), np.float32, CommConfig())
+    assert p1 is not p2 and p1 == p2       # re-derived, identical values
+    assert plans.cache_stats()["plan_hits"] == 0
+    monkeypatch.delenv("REPRO_PLAN_CACHE")
+    p3 = plans.chunk_plan((100,), np.float32, CommConfig())
+    p4 = plans.chunk_plan((100,), np.float32, CommConfig())
+    assert p3 is p4
+
+
+# ----------------------------------------------------------------------
+# Jitted-program replay: no retrace on the second call
+# ----------------------------------------------------------------------
+
+def test_jitted_program_no_retrace_on_second_call():
+    """Trace-count probe: the builder (and the trace it wraps) runs once;
+    the second call replays the cached program."""
+    plans = _fresh_plans()
+    import jax
+    import jax.numpy as jnp
+
+    traces = []
+
+    def build():
+        def f(x):
+            traces.append(1)          # python side effect = one trace
+            return x * 2.0
+        return jax.jit(f)
+
+    x = jnp.arange(8.0)
+    f1 = plans.jitted_program(("probe", 8), build)
+    y1 = f1(x)
+    f2 = plans.jitted_program(("probe", 8), build)
+    y2 = f2(x)
+    assert f1 is f2
+    assert len(traces) == 1            # no retrace on the second call
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+    stats = plans.cache_stats()
+    assert stats["program_hits"] == 1 and stats["program_misses"] == 1
+    # a different key is a different program
+    plans.jitted_program(("probe", 16), build)(x)
+    assert len(traces) == 2
+
+
+def test_commplan_program_replay():
+    plans = _fresh_plans()
+    import jax
+    import jax.numpy as jnp
+    from repro.core.config import CommConfig
+
+    plan = plans.get_plan("all_reduce", None, CommConfig(), (8,), np.float32)
+    builds = []
+
+    def build():
+        builds.append(1)
+        return jax.jit(lambda v: v + 1.0)
+
+    p1 = plan.program(build)
+    p2 = plan.program(build)
+    assert p1 is p2 and len(builds) == 1
+    assert float(p1(jnp.zeros(()))) == 1.0
+
+
+# ----------------------------------------------------------------------
+# Bitwise parity: cached vs uncached across scheduling x transport
+# ----------------------------------------------------------------------
+
+def test_cached_vs_uncached_bitwise_parity_matrix():
+    """Every (scheduling, transport) combination of sendrecv, multi-neighbor
+    exchange, and ring all-reduce must produce bit-identical results with
+    the plan cache enabled and bypassed (REPRO_PLAN_CACHE=0)."""
+    out = run_multidevice("""
+import os
+import numpy as np
+import jax
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import plans
+from repro.core.config import (CommConfig, CommMode, Scheduling, Transport)
+from repro.core.communicator import Communicator
+from repro.core import collectives
+
+mesh = jax.make_mesh((8,), ("x",))
+comm = Communicator.from_mesh(mesh, "x")
+x = np.random.RandomState(0).randn(8, 130).astype(np.float32)
+
+def run_all(cfg):
+    results = []
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    def p2p(xs):
+        return collectives.sendrecv(xs[0], comm.ring_perm(), comm, cfg)[None]
+    results.append(np.asarray(p2p(x)))
+    rounds = [comm.ring_perm(1), comm.reverse_ring_perm(1), comm.ring_perm(2)]
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    def mn(xs):
+        outs = collectives.multi_neighbor_exchange(
+            [xs[0]] * len(rounds), rounds, comm, cfg)
+        return sum(outs)[None]
+    results.append(np.asarray(mn(x)))
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    def ar(xs):
+        import dataclasses
+        rcfg = dataclasses.replace(cfg, algorithm="ring")
+        return collectives.all_reduce(xs[0], comm, rcfg)[None]
+    results.append(np.asarray(ar(x)))
+    return results
+
+# HOST scheduling lowers the same per-op programs as FUSED (dispatch
+# granularity is a caller concern), so FUSED x OVERLAPPED x transports x
+# modes covers every distinct traced path.
+for mode in (CommMode.STREAMING, CommMode.BUFFERED):
+    for sched in (Scheduling.FUSED, Scheduling.OVERLAPPED):
+        for tr in (Transport.ORDERED, Transport.UNORDERED):
+            cfg = CommConfig(mode=mode, scheduling=sched, transport=tr,
+                             chunk_bytes=512, window=2)
+            os.environ.pop("REPRO_PLAN_CACHE", None)
+            plans.clear_cache(); plans.reset_stats()
+            cached = run_all(cfg)
+            # the multi-round exchange replays the same chunk/perm plans
+            # within one run: the cache was exercised, not bypassed
+            assert plans.cache_stats()["plan_hits"] > 0, (mode, sched, tr)
+            os.environ["REPRO_PLAN_CACHE"] = "0"
+            plans.clear_cache()
+            bypassed = run_all(cfg)
+            os.environ.pop("REPRO_PLAN_CACHE", None)
+            for a, c in zip(cached, bypassed):
+                assert a.tobytes() == c.tobytes(), (mode, sched, tr)
+print("PLAN PARITY OK")
+""", timeout=540)
+    assert "PLAN PARITY OK" in out
+
+
+# ----------------------------------------------------------------------
+# Warm sweep: the plan cache must make the second sweep cheaper
+# ----------------------------------------------------------------------
+
+def test_warm_sweep_reuses_programs_and_is_faster():
+    out = run_multidevice("""
+from repro import compat
+from repro.core import plans
+from repro.tune import TuneDB, run_sweep
+
+mesh = compat.make_mesh((8,), ("x",))
+cold, warm = {}, {}
+db = run_sweep(mesh=mesh, collectives=("sendrecv",), sizes=(1024,),
+               fast=True, max_configs=4, reps=1, inner=2, stats=cold)
+db = run_sweep(mesh=mesh, collectives=("sendrecv",), sizes=(1024,),
+               fast=True, max_configs=4, reps=1, inner=2, db=db, stats=warm)
+assert cold["program_misses"] > 0 and cold["program_hits"] == 0, cold
+assert warm["program_hits"] >= cold["program_misses"], (cold, warm)
+assert warm["program_misses"] == 0, warm
+# wall clock: warm must be at least 30% lower (it skips every compile)
+assert warm["wall_s"] < 0.7 * cold["wall_s"], (cold["wall_s"], warm["wall_s"])
+print("WARM SWEEP OK", round(cold["wall_s"], 2), round(warm["wall_s"], 2))
+""", timeout=540)
+    assert "WARM SWEEP OK" in out

@@ -64,13 +64,15 @@ def test_config_dict_roundtrip():
 # TuneDB
 # ----------------------------------------------------------------------
 
-def _entry(msg_bytes, us, topo="cpu:8", coll="all_reduce", hops=1, **cfg_kw):
+def _entry(msg_bytes, us, topo="cpu:8", coll="all_reduce", hops=1,
+           e2e_us=0.0, **cfg_kw):
     from repro.core.config import CommConfig
     from repro.tune.db import TuneEntry
     from repro.tune.space import config_to_dict
     return TuneEntry(topo=topo, collective=coll, msg_bytes=msg_bytes,
                      config=config_to_dict(CommConfig(**cfg_kw)),
-                     us_per_call=us, gbps=msg_bytes / us / 1e3, hops=hops)
+                     us_per_call=us, gbps=msg_bytes / us / 1e3, hops=hops,
+                     e2e_us=e2e_us)
 
 
 def test_tunedb_roundtrip_and_nearest(tmp_path):
@@ -211,6 +213,213 @@ def test_select_config_returns_measured_best():
     db.add(_entry(1024, 10.0, topo=topo, window=8))
     cfg = select_config("all_reduce", 1024, db=db)
     assert cfg.window == 8
+
+
+# ----------------------------------------------------------------------
+# End-to-end objective (overlap-aware selection)
+# ----------------------------------------------------------------------
+
+def test_e2e_objective_disagrees_with_latency():
+    """The §5 scenario: the bare-latency winner loses the consumer loop.
+    select_config must answer per objective."""
+    from repro.tune.db import TuneDB, select_config
+
+    db = TuneDB()
+    # microbench winner: buffered, but its consumer loop is slow
+    db.add(_entry(1024, 10.0, e2e_us=90.0, mode="buffered", window=1))
+    # microbench loser: overlapped/chunked, but the consumer hides the comm
+    db.add(_entry(1024, 14.0, e2e_us=40.0, window=8))
+
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8").window == 1
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8",
+                         objective="latency").window == 1
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8",
+                         objective="e2e").window == 8
+    with pytest.raises(ValueError):
+        select_config("all_reduce", 1024, db=db, objective="nope")
+
+
+def test_e2e_objective_falls_back_to_latency():
+    """Entries without a consumer-loop measurement rank by bare latency
+    under either objective; measured e2e outranks latency-only entries."""
+    from repro.tune.db import TuneDB, select_config
+    db = TuneDB()
+    db.add(_entry(1024, 10.0, window=1))             # no e2e measured
+    db.add(_entry(1024, 20.0, window=8))
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8",
+                         objective="e2e").window == 1
+    # one measured e2e entry beats any latency-only proxy
+    db.add(_entry(1024, 30.0, e2e_us=50.0, window=4))
+    assert select_config("all_reduce", 1024, db=db, topo="cpu:8",
+                         objective="e2e").window == 4
+
+
+def test_tunedb_e2e_roundtrip_and_merge(tmp_path):
+    from repro.tune.db import TuneDB
+    db = TuneDB()
+    db.add(_entry(1024, 50.0, e2e_us=120.0))
+    # slower latency rerun carrying a better e2e: latency keeps 50, e2e 100
+    db.add(_entry(1024, 60.0, e2e_us=100.0))
+    # faster latency rerun without e2e: latency 40, e2e preserved
+    db.add(_entry(1024, 40.0))
+    assert len(db) == 1
+    e = db.entries[0]
+    assert e.us_per_call == 40.0 and e.e2e_us == 100.0
+    assert e.latency_us == e.us_per_call     # the alias
+    assert e.metric() == 40.0 and e.metric("e2e") == 100.0
+
+    path = tmp_path / "tunedb.json"
+    db.save(path)
+    back = TuneDB.load(path)
+    assert back.entries[0].e2e_us == 100.0
+    # pre-e2e DBs (no e2e_us key) still load
+    import json
+    payload = json.loads(path.read_text())
+    for ent in payload["entries"]:
+        del ent["e2e_us"]
+    path.write_text(json.dumps(payload))
+    old = TuneDB.load(path)
+    assert old.entries[0].e2e_us == 0.0
+
+
+def test_e2e_consumer_latency_model():
+    """The overlap-aware Eq. 2 consumer term: overlapped hides comm under
+    compute (max), fused exposes part of it, host serializes."""
+    from repro.core import latmodel
+    from repro.core.config import (CommConfig, CommMode, Scheduling, V5E)
+
+    msg, compute = 1 << 20, 50e-6
+    over = CommConfig(scheduling=Scheduling.OVERLAPPED)
+    fused = CommConfig(scheduling=Scheduling.FUSED)
+    host = CommConfig(scheduling=Scheduling.HOST, mode=CommMode.BUFFERED)
+    comm_s = latmodel.pingping_latency(msg, over, V5E)
+    t_over = latmodel.e2e_consumer_latency(msg, over, compute, V5E)
+    t_fused = latmodel.e2e_consumer_latency(msg, fused, compute, V5E)
+    t_host = latmodel.e2e_consumer_latency(msg, host, compute, V5E)
+    assert t_over == pytest.approx(max(compute, comm_s))   # full hiding
+    assert t_over < t_fused < t_host
+    # serialized lower/upper bounds hold for any config
+    for cfg, t in ((over, t_over), (fused, t_fused), (host, t_host)):
+        c = latmodel.pingping_latency(msg, cfg, V5E)
+        assert max(compute, c) - 1e-12 <= t <= compute + c + 1e-12
+
+
+def test_prune_on_e2e_objective_reorders_candidates():
+    """Pruning on the e2e objective must keep the overlapped candidate that
+    latency-objective pruning ranks as strictly worse."""
+    from repro.core.config import CommConfig, Scheduling
+    from repro.tune.prune import (calibration_from_db, predicted_e2e,
+                                  predicted_latency, prune_candidates)
+
+    cal = calibration_from_db(_synthetic_db(_synthetic_truth_hw()),
+                              topo="cpu:8")
+    over = CommConfig(scheduling=Scheduling.OVERLAPPED, chunk_bytes=1 << 16)
+    fused = CommConfig(scheduling=Scheduling.FUSED)
+    msg = 1 << 20
+    # bare latency: the chunked overlapped config pays per-chunk commands
+    assert predicted_latency(over, msg, cal, "all_reduce") >= \
+        predicted_latency(fused, msg, cal, "all_reduce")
+    # with hideable compute dominating, e2e prediction flips the order
+    compute_s = 10.0 * predicted_latency(fused, msg, cal, "all_reduce")
+    assert predicted_e2e(over, msg, cal, compute_s, "all_reduce") < \
+        predicted_e2e(fused, msg, cal, compute_s, "all_reduce")
+    kept, skipped = prune_candidates([over, fused], msg, cal, ratio=1.05,
+                                     collective="all_reduce",
+                                     objective="e2e", compute_s=compute_s)
+    assert over in kept
+    kept_lat, _ = prune_candidates([over, fused], msg, cal, ratio=1.05,
+                                   collective="all_reduce")
+    assert fused in kept_lat
+
+
+def test_enumerate_configs_e2e_keeps_overlapped_consumers():
+    """Under the e2e objective the overlapped all_reduce variants stay
+    distinct (the consumer loop distinguishes them); the latency objective
+    still collapses them (the bare collective cannot)."""
+    from repro.core.config import Scheduling
+    from repro.tune.space import enumerate_configs
+
+    lat = enumerate_configs("all_reduce")
+    e2e = enumerate_configs("all_reduce", objective="e2e")
+    assert not any(c.scheduling == Scheduling.OVERLAPPED for c in lat)
+    assert any(c.scheduling == Scheduling.OVERLAPPED for c in e2e)
+    assert len(e2e) > len(lat)
+    # non-consumer collectives are unchanged
+    assert enumerate_configs("all_gather", objective="e2e") == \
+        enumerate_configs("all_gather")
+
+
+def test_communicator_auto_config_passes_ring_hops():
+    """The hop-aware preference must be live from auto_config: the ring
+    pattern's worst-case hop distance reaches select_config."""
+    from repro.core.communicator import Communicator
+    import repro.tune
+
+    comm = Communicator(("data",), (8,))     # 2x4 torus -> max ring hop 2
+    seen = {}
+    orig = repro.tune.select_config
+
+    def spy(collective, msg_bytes, **kw):
+        seen.update(kw)
+        return orig(collective, msg_bytes, **kw)
+
+    repro.tune.select_config = spy
+    try:
+        comm.auto_config("all_reduce", 1024)
+        assert seen.get("hops") == comm.max_hops(comm.ring_perm())
+        assert seen.get("hops", 0) >= 1
+        assert seen.get("objective") == "latency"
+        comm.auto_config("all_reduce", 1024, hops=3, objective="e2e")
+        assert seen.get("hops") == 3 and seen.get("objective") == "e2e"
+    finally:
+        repro.tune.select_config = orig
+
+
+def test_program_cache_key_separates_mesh_factorizations():
+    """topology_key is platform:n_devices only — the program-cache key must
+    additionally carry the mesh structure, or an 8-rank-axis sweep and a
+    4x2 inner/outer sweep (same device count) would replay each other's
+    compiled programs and record silently wrong measurements."""
+    from repro.tune.sweep import _mesh_key
+
+    class FakeDevs:
+        def __init__(self, shape):
+            self.shape = shape
+
+    class FakeMesh:
+        def __init__(self, axis_names, shape):
+            self.axis_names = axis_names
+            self.devices = FakeDevs(shape)
+
+    flat = _mesh_key(FakeMesh(("x",), (8,)))
+    two_axis = _mesh_key(FakeMesh(("inner", "outer"), (4, 2)))
+    assert flat != two_axis
+    assert _mesh_key(FakeMesh(("x",), (8,))) == flat
+
+
+def test_e2e_sweep_records_consumer_loop(tmp_path):
+    out = run_multidevice("""
+from repro import compat
+from repro.tune import TuneDB, run_sweep, select_config
+from repro.tune.sweep import sweep_summary
+
+mesh = compat.make_mesh((8,), ("x",))
+stats = {}
+db = run_sweep(mesh=mesh, collectives=("all_reduce",), sizes=(16384,),
+               fast=True, max_configs=6, reps=1, inner=2,
+               objective="e2e", stats=stats)
+ents = [e for e in db.entries if e.collective == "all_reduce"]
+assert ents and all(e.e2e_us > 0.0 for e in ents), stats
+assert stats["e2e_measured"] == len(ents), stats
+cfg = select_config("all_reduce", 16384, db=db, topo=ents[0].topo,
+                    objective="e2e")
+best_e2e = min(e.e2e_us for e in ents)
+picked = [e for e in ents if e.e2e_us == best_e2e]
+assert cfg == picked[0].comm_config
+assert "consumer-loop e2e" in sweep_summary(stats)
+print("E2E SWEEP OK")
+""")
+    assert "E2E SWEEP OK" in out
 
 
 # ----------------------------------------------------------------------
