@@ -30,14 +30,15 @@ def _ensure_devices():
 def main() -> None:
     _ensure_devices()
     from benchmarks import (b_eff, e2e_objective, lm_collectives, lm_roofline,
-                            resources, swe_scaling)
+                            resources, swe_scaling, topology_hops)
 
     print("name,us_per_call,derived")
     modules = [("b_eff(fig4)", b_eff), ("resources(fig3)", resources),
                ("swe(fig9,fig10,table1)", swe_scaling),
                ("lm_roofline", lm_roofline),
                ("lm_collectives", lm_collectives),
-               ("e2e_objective", e2e_objective)]
+               ("e2e_objective", e2e_objective),
+               ("topology_hops", topology_hops)]
     only = None
     json_path = "BENCH_comm.json"
     for a in sys.argv[1:]:
@@ -72,6 +73,13 @@ def main() -> None:
     for name, row in sorted(results.items()):
         if name.startswith("e2e_gain_"):
             print(f"# e2e objective {name}: lat-winner/e2e-winner = "
+                  f"{row['us_per_call']:.2f}x, {row['derived']}",
+                  file=sys.stderr)
+    # Hop-scaling report: measured multi-hop cost next to the Eq. 1
+    # prediction (rows from topology_hops on the virtual 2x4 torus).
+    for name, row in sorted(results.items()):
+        if name.startswith("topo_hop_ratio"):
+            print(f"# hop scaling {name}: measured "
                   f"{row['us_per_call']:.2f}x, {row['derived']}",
                   file=sys.stderr)
     if json_path:

@@ -34,17 +34,33 @@ def main():
                     help="with --comm auto: rank TuneDB entries by bare "
                          "exchange latency or by the measured halo-fold "
                          "consumer loop (sweep with --objective e2e first)")
+    ap.add_argument("--topology", default=None,
+                    help="place the partitions on a virtual torus, e.g. "
+                         "'2x4' or '2x4:snake' (rows x cols = partition "
+                         "count); multi-hop halo edges route through "
+                         "intermediate partitions and --comm auto selects "
+                         "a config per exchange round at its hop distance")
     args = ap.parse_args()
 
     n = jax.device_count()
     mesh = jax.make_mesh((n,), ("data",))
     cfg = {"streaming": CommConfig(), "overlapped": OVERLAPPED_CONFIG,
            "baseline": BASELINE_CONFIG, "auto": "auto"}[args.comm]
+    topology = None
+    if args.topology:
+        from repro.core.topology import TorusSpec
+        topology = TorusSpec.parse(args.topology)
     sim = driver.build_simulation(args.elements, mesh, cfg,
-                                  objective=args.objective)
+                                  objective=args.objective,
+                                  topology=topology)
     print(f"comm config ({args.comm}): {sim.comm_cfg}")
+    if sim.round_cfgs is not None:
+        print("per-edge round configs: "
+              + ", ".join(f"r{i}:{c.chunk_bytes >> 10}KiB/{c.transport.value}"
+                          for i, c in enumerate(sim.round_cfgs)))
     print(f"mesh: {sim.mesh.n_elements} elements over {n} partitions "
-          f"(N_max={sim.pm.n_max}, rounds={sim.pm.n_rounds})")
+          f"(N_max={sim.pm.n_max}, rounds={sim.pm.n_rounds}"
+          + (f", torus={topology.name}" if topology else "") + ")")
 
     run = driver.make_sim_runner(sim, n_inner=20)
     state = sim.state

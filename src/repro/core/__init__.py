@@ -11,6 +11,7 @@ Public API:
                  chunked_all_to_all
     latmodel:    pingping_latency, eq2_throughput, eq3_l_comm, roofline_terms
     plans:       CommPlan cache (schedules derived once, replayed per call)
+    topology:    TorusSpec virtual multi-hop torus placement + routed transport
     scheduler:   HostScheduledRunner, FusedRunner, make_runner
 """
 from repro.core.config import (
@@ -18,12 +19,13 @@ from repro.core.config import (
     CommConfig, CommMode, Compression, HardwareSpec, Scheduling, Transport,
 )
 from repro.core.communicator import Communicator
+from repro.core.topology import TorusSpec
 from repro.core import (collectives, latmodel, plans, plugins, scheduler,
-                        streaming)
+                        streaming, topology)
 
 __all__ = [
     "BASELINE_CONFIG", "MINIMAL_CONFIG", "OPTIMIZED_CONFIG", "V5E",
     "CommConfig", "CommMode", "Compression", "HardwareSpec", "Scheduling",
-    "Transport", "Communicator", "collectives", "latmodel", "plans",
-    "plugins", "scheduler", "streaming",
+    "Transport", "Communicator", "TorusSpec", "collectives", "latmodel",
+    "plans", "plugins", "scheduler", "streaming", "topology",
 ]

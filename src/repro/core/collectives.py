@@ -23,13 +23,14 @@ from jax import lax
 from repro.core.communicator import Communicator
 from repro.core.config import (CommConfig, CommMode, Compression, Scheduling,
                                Transport)
-from repro.core import plans, plugins, streaming
+from repro.core import plans, plugins, streaming, topology
 
 
 def resolve_config(cfg, collective: str = "all_reduce",
                    msg_bytes: int = 1 << 20, mesh=None,
                    db_path=None, hops: int | None = None,
-                   objective: str = "latency") -> CommConfig:
+                   objective: str = "latency",
+                   torus: str | None = None) -> CommConfig:
     """Resolve a ``CommConfig | "auto" | None`` to a concrete config.
 
     ``"auto"`` asks the autotuner (:func:`repro.tune.select_config`) for the
@@ -47,7 +48,7 @@ def resolve_config(cfg, collective: str = "all_reduce",
     if cfg is None or cfg == "auto":
         from repro.tune import select_config
         return select_config(collective, msg_bytes, mesh=mesh, path=db_path,
-                             hops=hops, objective=objective)
+                             hops=hops, objective=objective, torus=torus)
     raise TypeError(f"comm config must be CommConfig or 'auto', got {cfg!r}")
 
 
@@ -57,8 +58,16 @@ def resolve_config(cfg, collective: str = "all_reduce",
 
 def sendrecv(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
              comm: Communicator, cfg: CommConfig) -> jnp.ndarray:
-    """Single send/recv along an edge list (each rank sends at most once)."""
+    """Single send/recv along an edge list (each rank sends at most once).
+
+    On a communicator placed on a virtual torus
+    (:class:`~repro.core.topology.TorusSpec`) every multi-hop edge is routed:
+    the transfer physically executes one single-hop permute per torus hop
+    (store-and-forward through the intermediate ranks), value-identical to
+    the direct permute.
+    """
     perm = plans.validated_perm(comm, perm)
+    perm = topology.routed_perm(comm, perm)
     if cfg.mode == CommMode.STREAMING:
         return streaming.chunked_permute(x, perm, comm.axis, cfg)
     return streaming.buffered_permute(x, perm, comm.axis, cfg)
@@ -77,7 +86,7 @@ def edge_color_rounds(edges: Sequence[tuple[int, int]]):
 
 def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
                             rounds: Sequence[Sequence[tuple[int, int]]],
-                            comm: Communicator, cfg: CommConfig,
+                            comm: Communicator, cfg,
                             consume=None, init=None,
                             chunk_consume=None, chunk_align: int = 1):
     """Halo exchange with several neighbors: one sendrecv per round.
@@ -89,6 +98,12 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
     alternate between two buffers and the ordered ack chain runs per buffer,
     so a consumer can fold one buffer while the other is in flight.
 
+    ``cfg`` may be a sequence of per-round configs (the SWE driver's
+    per-edge hop-aware selection: each round's edges share a hop distance
+    and get the config tuned for it).  Per-round configs apply to the
+    serially scheduled path; the double-buffered overlapped engine pipelines
+    all rounds as one schedule and requires a uniform config.
+
     Overlapped scheduling additionally accepts the engine's consume hooks:
     ``consume(carry, round, message)`` folds whole rounds, and
     ``chunk_consume(carry, round, chunk_index, chunk)`` folds each
@@ -97,7 +112,21 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
     When either hook is given the return value is ``(carry, received)``;
     otherwise just ``received`` (round order).
     """
+    round_cfgs = None
+    if not isinstance(cfg, CommConfig):
+        round_cfgs = list(cfg)
+        if len(round_cfgs) != len(rounds):
+            raise ValueError(f"{len(round_cfgs)} per-round configs for "
+                             f"{len(rounds)} rounds")
+        # Degenerate empty pattern: behave like the uniform-config call
+        # (no rounds means no config is ever consulted).
+        cfg = round_cfgs[0] if round_cfgs else CommConfig()
     if cfg.scheduling == Scheduling.OVERLAPPED:
+        if round_cfgs is not None and any(c != cfg for c in round_cfgs):
+            raise ValueError(
+                "per-round configs require serial scheduling; the "
+                "double-buffered overlapped engine pipelines all rounds "
+                "under one config")
         # One CommPlan per (pattern, config, payload): the round structure is
         # validated once and replayed, and the chunk/ack layout it caches is
         # what pipelined_consume replays per round.
@@ -110,6 +139,9 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
             # no payload to key a plan on, but malformed rounds must still
             # be rejected, as they always were
             rounds = [plans.validated_perm(comm, perm) for perm in rounds]
+        # Virtual-torus lowering happens per round inside the engine so the
+        # double-buffered ack chain still runs per buffer.
+        rounds = [topology.routed_perm(comm, perm) for perm in rounds]
         carry, received = streaming.double_buffered_exchange(
             payloads, rounds, comm.axis, cfg, consume=consume, init=init,
             chunk_consume=chunk_consume, chunk_align=chunk_align)
@@ -119,9 +151,10 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
     received = []
     prev = None
     for r, (payload, perm) in enumerate(zip(payloads, rounds)):
-        if cfg.transport == Transport.ORDERED and prev is not None:
+        rcfg = round_cfgs[r] if round_cfgs is not None else cfg
+        if rcfg.transport == Transport.ORDERED and prev is not None:
             payload, _ = lax.optimization_barrier((payload, prev))
-        out = sendrecv(payload, perm, comm, cfg)
+        out = sendrecv(payload, perm, comm, rcfg)
         received.append(out)
         prev = out
     return received
@@ -132,10 +165,13 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
 # ----------------------------------------------------------------------
 
 def _ring_send(payload: jnp.ndarray, comm: Communicator, cfg: CommConfig) -> jnp.ndarray:
-    """One ring hop with wire encoding."""
+    """One ring hop with wire encoding.  On a virtual torus the rank ring's
+    multi-hop edges (e.g. row-major wraps) are routed through the fabric —
+    place ranks with ``topology.snake_placement`` for an all-hop-1 ring."""
     enc, dec = plugins.wire_encode(payload, cfg)
+    perm = topology.routed_perm(comm, comm.ring_perm())
     out = jax.tree.map(
-        lambda t: lax.ppermute(t, comm.axis, perm=comm.ring_perm()), enc)
+        lambda t: streaming.wire_permute(t, comm.axis, perm), enc)
     return dec(out)
 
 

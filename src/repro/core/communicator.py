@@ -12,12 +12,17 @@ The topology helpers mirror the paper's setups:
                              by the shallow-water halo exchange (paper §4.1).
 - ``torus_hops``           — hop distance on the physical 2-D ICI torus, which
                              feeds the latency model's switch/hop term.
+- ``topo``                 — optional :class:`~repro.core.topology.TorusSpec`
+                             virtual placement: hop distances follow the
+                             spec's torus coordinates and every multi-hop
+                             point-to-point edge is routed (store-and-forward
+                             single-hop permutes) by the transport layer.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 from jax import lax
@@ -29,18 +34,32 @@ class Communicator:
     """A process group over one or more mesh axes.
 
     ``axis_names`` is ordered major-to-minor; rank = row-major index over the
-    axis sizes, matching ``lax.axis_index(tuple)`` semantics.
+    axis sizes, matching ``lax.axis_index(tuple)`` semantics.  ``topo``
+    attaches a virtual torus placement: it changes hop *accounting* and how
+    the transport physically moves multi-hop messages, never their values.
     """
     axis_names: Tuple[str, ...]
     axis_sizes: Tuple[int, ...]
+    topo: Optional["TorusSpec"] = None
+
+    def __post_init__(self):
+        if self.topo is not None and self.topo.n_ranks != self.size:
+            raise ValueError(
+                f"torus spec {self.topo.name} places {self.topo.n_ranks} "
+                f"ranks but the communicator has {self.size}")
 
     @classmethod
-    def from_mesh(cls, mesh: Mesh, axis_names: Sequence[str] | str) -> "Communicator":
+    def from_mesh(cls, mesh: Mesh, axis_names: Sequence[str] | str,
+                  topo: Optional["TorusSpec"] = None) -> "Communicator":
         if isinstance(axis_names, str):
             axis_names = (axis_names,)
         axis_names = tuple(axis_names)
         sizes = tuple(mesh.shape[a] for a in axis_names)
-        return cls(axis_names=axis_names, axis_sizes=sizes)
+        return cls(axis_names=axis_names, axis_sizes=sizes, topo=topo)
+
+    def with_topology(self, topo: Optional["TorusSpec"]) -> "Communicator":
+        """The same process group placed on (or lifted off) a virtual torus."""
+        return dataclasses.replace(self, topo=topo)
 
     @property
     def size(self) -> int:
@@ -78,7 +97,9 @@ class Communicator:
         4-device results — ``OPTIMIZED_CONFIG`` on a cold cache).
 
         ``hops`` is the worst-case torus hop distance of the pattern the
-        collective will run (defaults to this communicator's ring pattern),
+        collective will run (defaults to this communicator's ring pattern —
+        placement-aware when a :class:`TorusSpec` is attached, in which case
+        measurements taken on the same virtual placement are preferred),
         so hop-matched measurements are preferred; ``objective="e2e"`` ranks
         by the measured consumer-loop time instead of bare latency."""
         from repro.tune import select_config, topology_key
@@ -86,7 +107,8 @@ class Communicator:
             hops = self.max_hops(self.ring_perm())
         return select_config(collective, msg_bytes, path=db_path,
                              topo=topology_key(n_devices=self.size),
-                             hops=hops, objective=objective)
+                             hops=hops, objective=objective,
+                             torus=self.topo.name if self.topo else "")
 
     # ------------------------------------------------------------------
     # Topology helpers (static, host-side)
@@ -114,15 +136,28 @@ class Communicator:
                 raise ValueError(f"edge ({s},{d}) outside communicator size {self.size}")
         return list(edges)
 
+    def hop_perm(self, d: int) -> list[tuple[int, int]]:
+        """Translation perm at exactly ``d`` torus hops (requires a
+        :class:`~repro.core.topology.TorusSpec`) — the pattern the
+        hop-distance sweep axis measures."""
+        if self.topo is None:
+            raise ValueError("hop_perm requires a torus spec "
+                             "(Communicator(..., topo=TorusSpec(...)))")
+        return self.topo.hop_perm(d)
+
     def torus_hops(self, src: int, dst: int, torus_shape: Tuple[int, int] | None = None
                    ) -> int:
         """Manhattan hop count between two ranks on the physical 2-D torus.
 
-        Ranks are laid out row-major on ``torus_shape`` (defaults to the
-        squarest factorization of the communicator size).  Feeds the
-        per-hop latency term (the paper's direct-link vs Ethernet-switch
-        comparison: each extra hop adds ~ici_hop_latency).
+        With a :class:`~repro.core.topology.TorusSpec` attached the distance
+        follows the spec's shape *and placement*; otherwise ranks are laid
+        out row-major on ``torus_shape`` (defaults to the squarest
+        factorization of the communicator size).  Feeds the per-hop latency
+        term (the paper's direct-link vs Ethernet-switch comparison: each
+        extra hop adds ~ici_hop_latency).
         """
+        if self.topo is not None and torus_shape is None:
+            return self.topo.hops(src, dst)
         n = self.size
         if torus_shape is None:
             a = int(math.isqrt(n))

@@ -69,12 +69,17 @@ def cache_stats() -> dict:
 
 
 def _comm_key(comm) -> tuple:
-    """Stable identity of a communicator: its axes and their sizes.  Accepts
-    a Communicator, a plain axis-name tuple/str, or None."""
+    """Stable identity of a communicator: its axes, their sizes, and any
+    virtual topology placed on it (a :class:`~repro.core.topology.TorusSpec`
+    changes how multi-hop perms are lowered, so two communicators differing
+    only in their spec must never alias a plan).  Accepts a Communicator, a
+    plain axis-name tuple/str, or None."""
     if comm is None:
         return ()
     if hasattr(comm, "axis_names"):
-        return (tuple(comm.axis_names), tuple(getattr(comm, "axis_sizes", ())))
+        topo = getattr(comm, "topo", None)
+        return (tuple(comm.axis_names), tuple(getattr(comm, "axis_sizes", ())),
+                topo.key() if topo is not None else None)
     if isinstance(comm, str):
         return ((comm,), ())
     return (tuple(comm), ())

@@ -35,6 +35,38 @@ def num_chunks(nbytes: int, cfg: CommConfig) -> int:
     return max(1, min(cfg.max_chunks, math.ceil(nbytes / cfg.chunk_bytes)))
 
 
+def wire_permute(t: jnp.ndarray, axis_name: str, perm) -> jnp.ndarray:
+    """One wire traversal of an (encoded) tensor: a plain edge list is a
+    single ``ppermute``; a :class:`~repro.core.topology.RoutedPerm` (virtual
+    multi-hop torus transport) executes each store-and-forward batch as
+    sequential single-hop permutes — intermediate ranks forward, arrived
+    messages hold via self-edges — and merges batches by destination mask
+    (a pure select).  Values are bitwise-identical to the direct permute;
+    only the number of physically executed hops differs.
+    """
+    from repro.core import topology
+    if not isinstance(perm, topology.RoutedPerm):
+        return lax.ppermute(t, axis_name, perm=list(perm))
+
+    def run_batch(batch):
+        out = t
+        for rnd in batch.rounds:
+            out = lax.ppermute(out, axis_name, perm=list(rnd))
+        return out
+
+    if len(perm.batches) == 1:
+        return run_batch(perm.batches[0])
+    idx = lax.axis_index(axis_name)
+    acc = jnp.zeros_like(t)
+    for batch in perm.batches:
+        out = run_batch(batch)
+        is_dst = jnp.zeros((), bool)
+        for d in batch.dests:
+            is_dst = jnp.logical_or(is_dst, idx == d)
+        acc = jnp.where(is_dst, out, acc)
+    return acc
+
+
 def aligned_chunks(x: jnp.ndarray, cfg: CommConfig, align: int = 1
                    ) -> tuple[int, int]:
     """Wire-chunk geometry for streaming ``x``: (n_chunks, chunk_elems).
@@ -84,7 +116,7 @@ def chunked_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
             payload, _ = lax.optimization_barrier(
                 (payload, received[plan.ack_of[i]]))
         enc, dec = plugins.wire_encode(payload, cfg)
-        out = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm=list(perm)), enc)
+        out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm), enc)
         received.append(dec(out))
     return unsplit(jnp.stack(received))
 
@@ -99,7 +131,7 @@ def buffered_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     peak throughput to (1/bw_link + 1/bw_mem)^-1).
     """
     enc, dec = plugins.wire_encode(x, cfg)
-    out = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm=list(perm)), enc)
+    out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm), enc)
     out = lax.optimization_barrier(out)
     return dec(out)
 
@@ -135,7 +167,7 @@ def pipelined_consume(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
             payload, _ = lax.optimization_barrier(
                 (payload, received[plan.ack_of[i]]))
         enc, dec = plugins.wire_encode(payload, cfg)
-        out = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm=list(perm)), enc)
+        out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm), enc)
         r = dec(out)
         received.append(r)
         carry = consume(carry, i, r)

@@ -1,0 +1,319 @@
+"""Virtual multi-hop torus topology — emulate 2-D torus placements on any mesh.
+
+The paper's central result is *where* a message travels: on the 48-FPGA
+installation the best ACCL configuration depends on the per-edge hop distance
+(direct QSFP link vs routed path), and the sweeps must therefore measure the
+same collective at several hop distances.  A CPU host mesh has no such
+structure — every ppermute edge costs the same — so this module supplies a
+**virtual torus transport**: a :class:`TorusSpec` places the communicator's
+ranks on an ``R x C`` torus, and every explicit point-to-point transfer whose
+edge spans more than one torus hop is *routed* — lowered to a sequence of
+single-hop ``ppermute`` rounds through the intermediate ranks
+(store-and-forward).  Each extra hop is then one extra physically executed
+permute, so measured latency genuinely grows with hop distance, with the
+calibrated per-hop cost of Eq. 1 (``per_hop_ns``) as the modeled counterpart.
+
+Routing is value-preserving by construction: intermediate ranks only forward,
+so the received message is bitwise-identical to a direct permute — enforced
+across torus shapes x placements x transports x scheduling modes by
+``tests/test_topology.py``.
+
+Glossary:
+
+- *cell*      — linear row-major index into the ``R x C`` torus.
+- *placement* — rank -> cell map (default identity).  ``snake_placement``
+  lays ranks boustrophedon so the rank ring ``i -> i+1`` is a hop-1 cycle.
+- *route*     — dimension-ordered (rows first, minimal wrap direction)
+  store-and-forward path; its length equals the Manhattan hop distance.
+- *hop perm*  — a translation of the whole torus by a fixed displacement:
+  every rank sends to the rank exactly ``d`` hops away, the pattern the
+  ``--hop-distances`` sweep axis measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Optional, Sequence, Tuple
+
+from repro.core.config import HardwareSpec, V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class TorusSpec:
+    """A virtual ``R x C`` torus placement with calibrated per-hop costs.
+
+    ``shape``          — (rows, cols); ``rows * cols`` ranks are emulated.
+    ``per_hop_ns``     — injected per-extra-hop latency for the Eq. 1 model
+                         (the paper's direct-link vs Ethernet-switch delta).
+    ``bisection_gbps`` — aggregate bisection bandwidth of the emulated torus;
+                         the per-link share feeds the modeled wire bandwidth.
+    ``placement``      — rank -> cell (row-major linear index); identity when
+                         omitted.  ``snake_placement`` makes the rank ring
+                         hop-1.
+    """
+    shape: Tuple[int, int]
+    per_hop_ns: float = 500.0
+    bisection_gbps: float = 400.0
+    placement: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        rows, cols = self.shape
+        if rows < 1 or cols < 1:
+            raise ValueError(f"torus shape must be positive, got {self.shape}")
+        object.__setattr__(self, "shape", (int(rows), int(cols)))
+        if self.placement is not None:
+            p = tuple(int(c) for c in self.placement)
+            if sorted(p) != list(range(self.n_ranks)):
+                raise ValueError(
+                    f"placement must be a permutation of range({self.n_ranks})"
+                    f", got {p}")
+            object.__setattr__(self, "placement", p)
+
+    # ------------------------------------------------------------------
+    # Construction helpers
+    # ------------------------------------------------------------------
+    @classmethod
+    def parse(cls, text: str, **kw) -> "TorusSpec":
+        """Parse the CLI spelling: ``"4x4"`` or ``"4x4:snake"``."""
+        body, _, tag = text.partition(":")
+        try:
+            rows, cols = (int(v) for v in body.lower().split("x"))
+        except ValueError:
+            raise ValueError(f"torus spec must look like '4x4[:snake]', "
+                             f"got {text!r}") from None
+        if tag and tag != "snake":
+            raise ValueError(f"unknown placement tag {tag!r} (only 'snake')")
+        placement = snake_placement((rows, cols)) if tag == "snake" else None
+        return cls(shape=(rows, cols), placement=placement, **kw)
+
+    @property
+    def n_ranks(self) -> int:
+        return self.shape[0] * self.shape[1]
+
+    @property
+    def name(self) -> str:
+        """Stable human-readable identity, used as the ``TuneEntry.torus``
+        key and in sweep cache keys — distinct placements must never alias,
+        so a custom placement carries a digest of its tuple."""
+        if self.placement is None:
+            tag = ""
+        elif self.placement == snake_placement(self.shape):
+            tag = ":snake"
+        else:
+            digest = zlib.crc32(repr(self.placement).encode()) & 0xFFFFFF
+            tag = f":p{digest:06x}"
+        return f"{self.shape[0]}x{self.shape[1]}{tag}"
+
+    def key(self) -> tuple:
+        """Value identity for plan-cache keying (placement included)."""
+        return (self.shape, self.per_hop_ns, self.bisection_gbps,
+                self.placement)
+
+    # ------------------------------------------------------------------
+    # Coordinates and distances
+    # ------------------------------------------------------------------
+    def cell(self, rank: int) -> int:
+        return self.placement[rank] if self.placement is not None else rank
+
+    def rank_at(self, cell: int) -> int:
+        if self.placement is None:
+            return cell
+        return self.placement.index(cell)
+
+    def coords(self, rank: int) -> Tuple[int, int]:
+        c = self.cell(rank)
+        return divmod(c, self.shape[1])
+
+    def hops(self, src: int, dst: int) -> int:
+        """Manhattan hop distance between two placed ranks."""
+        rows, cols = self.shape
+        (sr, sc), (dr, dc) = self.coords(src), self.coords(dst)
+        dy = min((sr - dr) % rows, (dr - sr) % rows)
+        dx = min((sc - dc) % cols, (dc - sc) % cols)
+        return dy + dx
+
+    def max_hops(self, edges: Sequence[Tuple[int, int]]) -> int:
+        return max((self.hops(s, d) for s, d in edges), default=0)
+
+    @property
+    def diameter(self) -> int:
+        """Worst-case hop distance on this torus."""
+        rows, cols = self.shape
+        return rows // 2 + cols // 2
+
+    # ------------------------------------------------------------------
+    # Patterns
+    # ------------------------------------------------------------------
+    def _displacement(self, d: int) -> Tuple[int, int]:
+        """A minimal (dy, dx) with dy + dx == d (so every translated edge is
+        exactly ``d`` hops)."""
+        rows, cols = self.shape
+        if not 0 <= d <= self.diameter:
+            raise ValueError(f"hop distance {d} outside [0, {self.diameter}] "
+                             f"for torus {self.shape}")
+        dy = min(d, rows // 2)
+        dx = d - dy
+        if dx > cols // 2:
+            dx = cols // 2
+            dy = d - dx
+        return dy, dx
+
+    def hop_perm(self, d: int) -> list[tuple[int, int]]:
+        """Translation perm at exactly ``d`` hops: every rank sends to the
+        rank ``d`` hops away (dy down, dx right, torus wrap).  This is the
+        pattern the ``--hop-distances`` sweep axis measures — a bijection, so
+        each rank sends and receives exactly once."""
+        rows, cols = self.shape
+        dy, dx = self._displacement(d)
+        perm = []
+        for rank in range(self.n_ranks):
+            r, c = self.coords(rank)
+            dst_cell = ((r + dy) % rows) * cols + (c + dx) % cols
+            perm.append((rank, self.rank_at(dst_cell)))
+        return perm
+
+    def reverse_hop_perm(self, d: int) -> list[tuple[int, int]]:
+        return [(dst, src) for src, dst in self.hop_perm(d)]
+
+    # ------------------------------------------------------------------
+    # Modeled hardware
+    # ------------------------------------------------------------------
+    def hardware(self, base: HardwareSpec = V5E) -> HardwareSpec:
+        """A :class:`HardwareSpec` carrying this torus's calibrated costs:
+        ``per_hop_ns`` as the Eq. 1 per-extra-hop latency and the bisection
+        bandwidth's per-link share (a ``2 x min(R, C)``-cut torus has
+        ``4 * min(R, C)`` directed links across the bisection) as the wire
+        bandwidth cap."""
+        link_bw = self.bisection_gbps * 1e9 / (4 * min(self.shape))
+        return dataclasses.replace(
+            base, name=f"torus-{self.name}",
+            ici_hop_latency=self.per_hop_ns * 1e-9,
+            ici_bw=min(base.ici_bw, link_bw))
+
+
+def snake_placement(shape: Tuple[int, int]) -> Tuple[int, ...]:
+    """Boustrophedon placement: rank ``i`` and ``i+1`` are always torus
+    neighbors, so the rank ring is a hop-1 cycle (the closing edge is hop-1
+    too when ``rows`` is even)."""
+    rows, cols = shape
+    cells = []
+    for r in range(rows):
+        cs = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
+        cells.extend(r * cols + c for c in cs)
+    return tuple(cells)
+
+
+# ----------------------------------------------------------------------
+# Store-and-forward routing
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RouteBatch:
+    """One conflict-free store-and-forward schedule: ``rounds`` are valid
+    single-hop ppermute perms (holds spelled as ``(r, r)`` self-edges);
+    ``dests`` are the final destinations this batch delivers to."""
+    rounds: Tuple[Tuple[Tuple[int, int], ...], ...]
+    dests: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedPerm:
+    """A multi-hop lowering of one edge list.
+
+    The wire layer (:func:`repro.core.streaming.wire_permute`) executes each
+    batch's rounds as sequential ppermutes; batches that could not share a
+    conflict-free schedule run one after another and merge by destination
+    mask (a pure select — bitwise-exact).
+    """
+    edges: Tuple[Tuple[int, int], ...]
+    batches: Tuple[RouteBatch, ...]
+    max_hops: int
+
+    @property
+    def n_rounds(self) -> int:
+        return sum(len(b.rounds) for b in self.batches)
+
+
+def route(spec: TorusSpec, src: int, dst: int) -> list[int]:
+    """Dimension-ordered minimal route (ranks visited, incl. endpoints):
+    rows first, then columns, each along the shorter wrap direction.  Length
+    is exactly ``spec.hops(src, dst) + 1``."""
+    rows, cols = spec.shape
+    r, c = spec.coords(src)
+    tr, tc = spec.coords(dst)
+    cells = [r * cols + c]
+    while r != tr:
+        step = 1 if (tr - r) % rows <= (r - tr) % rows else -1
+        r = (r + step) % rows
+        cells.append(r * cols + c)
+    while c != tc:
+        step = 1 if (tc - c) % cols <= (c - tc) % cols else -1
+        c = (c + step) % cols
+        cells.append(r * cols + c)
+    return [spec.rank_at(cell) for cell in cells]
+
+
+def _lockstep_rounds(routes: Sequence[Sequence[int]]
+                     ) -> Optional[list[list[tuple[int, int]]]]:
+    """Schedule all routes advancing one hop per round (arrived messages hold
+    via self-edges).  Returns None when two messages would ever occupy the
+    same rank — the caller then splits the edge list into batches."""
+    depth = max(len(r) for r in routes) - 1
+    pos = [[r[min(t, len(r) - 1)] for r in routes] for t in range(depth + 1)]
+    for col in pos:
+        if len(set(col)) != len(col):
+            return None
+    return [[(pos[t][m], pos[t + 1][m]) for m in range(len(routes))]
+            for t in range(depth)]
+
+
+def route_rounds(spec: TorusSpec, edges: Sequence[Tuple[int, int]]
+                 ) -> RoutedPerm:
+    """Lower an edge list to conflict-free store-and-forward batches.
+
+    Translation-invariant patterns (ring steps, :meth:`TorusSpec.hop_perm`)
+    schedule in ONE batch — every message advances in lockstep, the faithful
+    parallel-forwarding emulation.  Irregular patterns (the SWE partition's
+    RCB edges) greedily group edges whose lockstep schedules don't collide;
+    leftover edges open new batches (serialized forwarding — the emulated
+    fabric's link contention).
+    """
+    edges = tuple((int(s), int(d)) for s, d in edges)
+    routes = {e: route(spec, *e) for e in edges}
+    batches: list[RouteBatch] = []
+    pending = list(edges)
+    while pending:
+        batch: list[tuple[int, int]] = []
+        sched: Optional[list] = None
+        rest: list[tuple[int, int]] = []
+        for e in pending:
+            trial = _lockstep_rounds([routes[b] for b in batch] + [routes[e]])
+            if trial is not None:
+                batch.append(e)
+                sched = trial
+            else:
+                rest.append(e)
+        assert sched is not None  # a single route always schedules
+        batches.append(RouteBatch(
+            rounds=tuple(tuple(r) for r in sched),
+            dests=tuple(d for _, d in batch)))
+        pending = rest
+    return RoutedPerm(edges=edges, batches=tuple(batches),
+                      max_hops=spec.max_hops(edges))
+
+
+def routed_perm(comm, perm: Sequence[Tuple[int, int]]):
+    """The transport-facing entry point: return ``perm`` unchanged when the
+    communicator has no torus spec (or every edge is a direct link), else the
+    cached :class:`RoutedPerm` lowering.  Derivation is memoized through the
+    :mod:`repro.core.plans` cache (``REPRO_PLAN_CACHE=0`` re-derives — values
+    are identical either way)."""
+    spec = getattr(comm, "topo", None)
+    edges = tuple((int(s), int(d)) for s, d in perm)
+    if spec is None or spec.max_hops(edges) <= 1:
+        return edges
+    from repro.core import plans
+    return plans._memo("route", (spec.key(), edges),
+                       lambda: route_rounds(spec, edges),
+                       "plan_hits", "plan_misses")

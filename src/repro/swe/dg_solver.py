@@ -88,7 +88,8 @@ class SWEConfig:
 
 
 def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
-                 swe: SWEConfig = SWEConfig()):
+                 swe: SWEConfig = SWEConfig(), topology=None,
+                 round_cfgs=None):
     """Returns step(state, halo_arrays..., boundary_idx) for use inside
     shard_map.
 
@@ -96,9 +97,20 @@ def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
     ``comm_cfg.scheduling == OVERLAPPED`` selects the interior/boundary-split
     step (interior compute carries no dependency on the exchange); all other
     schedules use the exchange-then-update step.  Both are bitwise-equal.
+
+    ``topology`` places the partitions on a virtual multi-hop torus
+    (:class:`~repro.core.topology.TorusSpec`): exchange edges spanning more
+    than one hop are physically routed through intermediate partitions
+    (value-identical).  ``round_cfgs`` is the driver's per-edge hop-aware
+    selection — one config per exchange round (rounds group edges of
+    comparable hop distance); serial scheduling only, and ``comm_cfg``
+    remains the step-structure config.
     """
-    comm = Communicator((axis,), (pm.n_parts,))
+    comm = Communicator((axis,), (pm.n_parts,), topo=topology)
     rounds = pm.rounds
+    exchange_cfg = (list(round_cfgs) if round_cfgs is not None
+                    and comm_cfg.scheduling != Scheduling.OVERLAPPED
+                    else comm_cfg)
 
     def payloads_for(state, send_idx, send_mask):
         return [state[send_idx[r]] * send_mask[r][:, None]
@@ -117,7 +129,8 @@ def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
         if not rounds:
             return halo
         received = collectives.multi_neighbor_exchange(
-            payloads_for(state, send_idx, send_mask), rounds, comm, comm_cfg)
+            payloads_for(state, send_idx, send_mask), rounds, comm,
+            exchange_cfg)
         for r, recv in enumerate(received):
             halo = fold_round(halo, recv_slot[r], recv)
         return halo

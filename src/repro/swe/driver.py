@@ -44,12 +44,44 @@ class Simulation:
     swe: SWEConfig
     state: jnp.ndarray        # (P, E_max, 3) sharded over 'data'
     t: float = 0.0
+    # Virtual torus the partitions are placed on (multi-hop exchange edges
+    # route through intermediate partitions) and the per-round hop-aware
+    # config selection; None = flat mesh / uniform config.
+    topology: object = None            # TorusSpec | None
+    round_cfgs: Optional[list] = None  # per exchange round, serial paths only
+
+
+def _select_round_configs(rounds, comm, halo_bytes: int, tune_db_path=None,
+                          objective: str = "latency"):
+    """Per-edge hop-aware selection: one autotuned config per exchange round.
+
+    Each round's edges share one ppermute (and, on a torus, comparable hop
+    distances), so the round is the per-edge selection granularity: the
+    round's worst-case hop distance is looked up in the TuneDB (preferring
+    measurements taken on the same virtual placement) and the hop-matched
+    winner returned.  This replaces the single worst-case-hop config of the
+    uniform path — a 1-hop round no longer pays the transport tuned for the
+    3-hop round (the paper's per-edge result).
+    """
+    from repro.tune import select_config, topology_key
+    from repro.tune.db import TuneDB
+    topo = topology_key(n_devices=comm.size)
+    torus = comm.topo.name if comm.topo is not None else ""
+    db = TuneDB.load(tune_db_path)   # one read for all rounds
+    cfgs = []
+    for perm in rounds:
+        hops = max(1, comm.max_hops(perm))
+        cfgs.append(select_config("multi_neighbor", halo_bytes, topo=topo,
+                                  db=db, hops=hops,
+                                  objective=objective, torus=torus))
+    return cfgs
 
 
 def build_simulation(n_elements: int, device_mesh: Mesh,
                      comm_cfg: CommConfig | str, swe: SWEConfig = SWEConfig(),
                      seed: int = 0, tune_db_path=None,
-                     objective: str = "latency") -> Simulation:
+                     objective: str = "latency",
+                     topology=None) -> Simulation:
     """Build the partitioned simulation.
 
     ``comm_cfg="auto"`` asks the autotuner for the fastest measured config
@@ -59,26 +91,52 @@ def build_simulation(n_elements: int, device_mesh: Mesh,
     by the measured halo-fold consumer loop instead of the bare exchange —
     the step has interior compute the overlapped schedule can hide, exactly
     the case where the microbench winner is not the end-to-end winner (§5).
+
+    ``topology`` (a :class:`~repro.core.topology.TorusSpec`) places the
+    partitions on a virtual multi-hop torus.  With ``comm_cfg="auto"`` the
+    selection then happens **per edge**: every exchange round is tuned at
+    its own hop distance (``Simulation.round_cfgs``) instead of one config
+    at the pattern's worst-case hop.  The representative ``comm_cfg`` (step
+    structure / scheduling) is the worst-hop round's winner; per-round wire
+    configs apply on the serially scheduled paths, and their scheduling is
+    unified with the representative so the step structure stays coherent.
     """
     mesh = generate_bight_mesh(n_elements, seed=seed)
     n_parts = device_mesh.shape["data"]
     pm = partition_mesh(mesh, n_parts, dg_solver.initial_state(mesh))
+    round_cfgs = None
     if not isinstance(comm_cfg, CommConfig):
         from repro.core.collectives import resolve_config
         from repro.core.communicator import Communicator
         halo_bytes = int(pm.s_max) * 3 * 4   # (h, hu, hv) f32 per halo element
         # Worst-case torus hop distance of this partitioning's exchange
         # pattern — multi-hop edges prefer hop-matched measurements.
-        comm = Communicator(("data",), (n_parts,))
+        comm = Communicator(("data",), (n_parts,), topo=topology)
         edges = [e for r in pm.rounds for e in r]
         hops = comm.max_hops(edges) if edges else None
         comm_cfg = resolve_config(comm_cfg, "multi_neighbor", halo_bytes,
                                   mesh=device_mesh, db_path=tune_db_path,
-                                  hops=hops, objective=objective)
+                                  hops=hops, objective=objective,
+                                  torus=topology.name if topology else "")
+        # Per-edge selection is a torus feature: the flat mesh keeps PR 4's
+        # single worst-case-hop config (no silent behavior change), and the
+        # double-buffered overlapped engine pipelines all rounds under one
+        # config — don't select what can't be applied.
+        if (pm.rounds and topology is not None
+                and comm_cfg.scheduling != Scheduling.OVERLAPPED):
+            per_round = _select_round_configs(pm.rounds, comm, halo_bytes,
+                                              tune_db_path, objective)
+            # One scheduling discipline per step: unify each round's wire
+            # config with the representative's scheduling.
+            per_round = [dataclasses.replace(c, scheduling=comm_cfg.scheduling)
+                         for c in per_round]
+            if any(c != comm_cfg for c in per_round):
+                round_cfgs = per_round
     sharding = NamedSharding(device_mesh, P("data"))
     state = jax.device_put(jnp.asarray(pm.state0, jnp.float32), sharding)
     return Simulation(mesh=mesh, pm=pm, device_mesh=device_mesh,
-                      comm_cfg=comm_cfg, swe=swe, state=state)
+                      comm_cfg=comm_cfg, swe=swe, state=state,
+                      topology=topology, round_cfgs=round_cfgs)
 
 
 def _static_args(sim: Simulation):
@@ -103,7 +161,8 @@ def make_sim_runner(sim: Simulation, n_inner: int = 10):
     dispatch (the interior/boundary split of overlapped scheduling lives
     inside the step function)."""
     pm = sim.pm
-    step = make_step_fn(pm, sim.comm_cfg, "data", sim.swe)
+    step = make_step_fn(pm, sim.comm_cfg, "data", sim.swe,
+                        topology=sim.topology, round_cfgs=sim.round_cfgs)
     args = _static_args(sim)
     in_specs = (P("data"),) + (P("data"),) * len(args) + (P(),)
     arg_list = list(args.values())
@@ -135,7 +194,8 @@ def make_host_scheduled_runner(sim: Simulation):
     between two separately dispatched programs (2 dispatches / step)."""
     pm = sim.pm
     swe = sim.swe
-    step_full = make_step_fn(pm, sim.comm_cfg, "data", sim.swe)
+    step_full = make_step_fn(pm, sim.comm_cfg, "data", sim.swe,
+                             topology=sim.topology, round_cfgs=sim.round_cfgs)
     args = _static_args(sim)
     arg_list = list(args.values())
 

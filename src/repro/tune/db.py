@@ -59,6 +59,11 @@ class TuneEntry:
     # the paper's direct-link vs Ethernet-switch distinction.  Entries
     # measured at different hop distances are distinct data points.
     hops: int = 1
+    # Virtual torus the measurement ran on (TorusSpec.name, e.g. "4x4" or
+    # "2x4:snake"); "" = the substrate's native flat mesh.  Kept as a
+    # distinct data point per emulated placement — two tori can produce the
+    # same hop distance with different routing schedules.
+    torus: str = ""
     # End-to-end seconds-per-iteration (µs) of the collective's consumer
     # loop (row_parallel matmul+reduce, halo-fold step) — what the paper's
     # §5 result says actually decides the scaling config.  0.0 = not
@@ -102,6 +107,7 @@ class TuneDB:
         cfg_key = tuple(sorted(entry.config.items()))
         for i, e in enumerate(self.entries):
             if (e.key() == entry.key() and e.hops == entry.hops
+                    and e.torus == entry.torus
                     and tuple(sorted(e.config.items())) == cfg_key):
                 # Merge: fastest latency wins; an e2e measurement is kept
                 # even when it rides a slower latency rerun (and the
@@ -118,17 +124,27 @@ class TuneDB:
     # Queries
     # ------------------------------------------------------------------
     def candidates(self, collective: str, topo: str | None = None,
-                   hops: int | None = None) -> list[TuneEntry]:
+                   hops: int | None = None,
+                   torus: str | None = None) -> list[TuneEntry]:
         """Entries for ``collective`` (optionally per topology).
 
-        With ``hops`` given, prefer entries measured at exactly that hop
-        distance; when none exist, relax to the nearest measured distance —
-        a 3-hop edge is better served by a 2-hop measurement than a 1-hop
-        one (the direct-link vs routed cost structures differ).
+        With ``torus`` given (a ``TorusSpec.name``), prefer entries measured
+        on that virtual placement: a flat-mesh "2-hop" ring measurement never
+        routed and must not outrank a routed 2-hop measurement when the
+        caller IS on the torus (and vice versa); when none match, relax to
+        every entry.  With ``hops`` given, prefer entries measured at
+        exactly that hop distance; when none exist, relax to the nearest
+        measured distance — a 3-hop edge is better served by a 2-hop
+        measurement than a 1-hop one (the direct-link vs routed cost
+        structures differ).
         """
         cands = [e for e in self.entries
                  if e.collective == collective
                  and (topo is None or e.topo == topo)]
+        if torus is not None:
+            matched = [e for e in cands if e.torus == torus]
+            if matched:
+                cands = matched
         if hops is not None and cands:
             matched = [e for e in cands if e.hops == hops]
             if matched:
@@ -153,20 +169,20 @@ class TuneDB:
         return min(entries, key=lambda e: e.us_per_call)
 
     def best(self, collective: str, msg_bytes: int, topo: str | None = None,
-             hops: int | None = None, objective: str = "latency"
-             ) -> Optional[TuneEntry]:
+             hops: int | None = None, objective: str = "latency",
+             torus: str | None = None) -> Optional[TuneEntry]:
         """Fastest entry at exactly ``msg_bytes`` (None if not measured)."""
-        exact = [e for e in self.candidates(collective, topo, hops)
+        exact = [e for e in self.candidates(collective, topo, hops, torus)
                  if e.msg_bytes == msg_bytes]
         return self._rank(exact, objective)
 
     def nearest(self, collective: str, msg_bytes: int, topo: str | None = None,
-                hops: int | None = None, objective: str = "latency"
-                ) -> Optional[TuneEntry]:
+                hops: int | None = None, objective: str = "latency",
+                torus: str | None = None) -> Optional[TuneEntry]:
         """Fastest entry at the measured message size closest (in log space)
         to ``msg_bytes`` — message-size behaviour is scale-free, so log
         distance is the right metric (1 KiB is "nearer" 4 KiB than 64 KiB)."""
-        cands = self.candidates(collective, topo, hops)
+        cands = self.candidates(collective, topo, hops, torus)
         if not cands:
             return None
         target = math.log(max(1, msg_bytes))
@@ -205,6 +221,7 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
                   topo: str | None = None,
                   hops: int | None = None,
                   objective: str = "latency",
+                  torus: str | None = None,
                   fallback: CommConfig = OPTIMIZED_CONFIG) -> CommConfig:
     """The autotuner's answer to "how should I communicate?".
 
@@ -224,6 +241,12 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
     that wins the microbench is not the one that scales the application.
     Entries without an e2e measurement rank by bare latency under either
     objective.
+
+    ``torus`` (a ``TorusSpec.name``, e.g. ``"4x4"``) prefers entries
+    measured on that virtual placement: a caller routing over an emulated
+    torus must not be answered by an unrouted flat-mesh measurement that
+    happens to share a hop count (and relaxes to any entry when that
+    placement was never swept).
     """
     if objective not in ("latency", "e2e"):
         raise ValueError(f"objective must be 'latency' or 'e2e', "
@@ -233,13 +256,14 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
     if topo is None:
         topo = topology_key(mesh) if mesh is not None else topology_key()
     platform = topo.split(":", 1)[0]
-    entry = (db.best(collective, msg_bytes, topo, hops, objective)
-             or db.nearest(collective, msg_bytes, topo, hops, objective))
+    entry = (db.best(collective, msg_bytes, topo, hops, objective, torus)
+             or db.nearest(collective, msg_bytes, topo, hops, objective,
+                           torus))
     if entry is None:
         same_platform = TuneDB([e for e in db.entries
                                 if e.topo.split(":", 1)[0] == platform])
         entry = same_platform.nearest(collective, msg_bytes, None, hops,
-                                      objective)
+                                      objective, torus)
     if entry is None:
         return fallback
     return entry.comm_config

@@ -31,7 +31,8 @@ _CHUNKED_STREAMING = frozenset({"sendrecv", "multi_neighbor"})
 
 def predicted_latency(cfg: CommConfig, msg_bytes: int,
                       calibration: CalibrationResult,
-                      collective: str | None = None) -> float:
+                      collective: str | None = None,
+                      hops: int = 1) -> float:
     """Eq. 1 prediction (seconds) for one candidate on the calibrated
     substrate.
 
@@ -40,7 +41,10 @@ def predicted_latency(cfg: CommConfig, msg_bytes: int,
     incumbent at multi-MiB messages (the paper's segmentation/jumbo-frame
     finding).  Collectives that never split the wire (ring/native reduction
     collectives; all_to_all outside overlapped scheduling) are predicted at
-    a single command regardless of ``chunk_bytes``.
+    a single command regardless of ``chunk_bytes``.  ``hops`` is the edge's
+    torus hop distance: the route term re-serializes buffered messages per
+    hop and wormholes streaming chunks, which is what reorders candidates
+    between direct links and routed edges.
     """
     import dataclasses
     hw = calibration.to_hardware_spec()
@@ -51,12 +55,13 @@ def predicted_latency(cfg: CommConfig, msg_bytes: int,
         and cfg.scheduling == Scheduling.OVERLAPPED)
     if not chunked and cfg.mode == CommMode.STREAMING:
         cfg = dataclasses.replace(cfg, max_chunks=1)
-    return latmodel.pingping_latency(msg_bytes, cfg, hw)
+    return latmodel.pingping_latency(msg_bytes, cfg, hw, hops=hops)
 
 
 def predicted_e2e(cfg: CommConfig, msg_bytes: int,
                   calibration: CalibrationResult, compute_s: float,
-                  collective: str | None = None) -> float:
+                  collective: str | None = None,
+                  hops: int = 1) -> float:
     """End-to-end consumer-loop prediction (seconds per iteration): the
     overlap-aware Eq. 2 term applied to the consumer, on the calibrated
     substrate.
@@ -84,7 +89,8 @@ def predicted_e2e(cfg: CommConfig, msg_bytes: int,
         or cfg.scheduling == Scheduling.OVERLAPPED)
     if not chunked and cfg.mode == CommMode.STREAMING:
         cfg = dataclasses.replace(cfg, max_chunks=1)
-    return latmodel.e2e_consumer_latency(msg_bytes, cfg, compute_s, hw)
+    return latmodel.e2e_consumer_latency(msg_bytes, cfg, compute_s, hw,
+                                         hops=hops)
 
 
 def prune_candidates(cands: Sequence[CommConfig], msg_bytes: int,
@@ -92,7 +98,8 @@ def prune_candidates(cands: Sequence[CommConfig], msg_bytes: int,
                      ratio: float = DEFAULT_RATIO,
                      collective: str | None = None,
                      objective: str = "latency",
-                     compute_s: float = 0.0
+                     compute_s: float = 0.0,
+                     hops: int = 1
                      ) -> tuple[list[CommConfig], list[CommConfig]]:
     """Split candidates into (measure, skip) by calibrated model ranking.
 
@@ -102,15 +109,17 @@ def prune_candidates(cands: Sequence[CommConfig], msg_bytes: int,
     select a config the exhaustive sweep would not also have measured.
     ``objective="e2e"`` ranks by :func:`predicted_e2e` (consumer loop with
     ``compute_s`` of hideable compute) instead of bare Eq. 1 latency.
+    ``hops`` prices the candidates at the hop distance the sweep is about
+    to measure them at (the per-edge axis of a torus sweep).
     """
     if not cands:
         return [], []
     if objective == "e2e":
         preds = [predicted_e2e(c, msg_bytes, calibration, compute_s,
-                               collective) for c in cands]
+                               collective, hops=hops) for c in cands]
     else:
-        preds = [predicted_latency(c, msg_bytes, calibration, collective)
-                 for c in cands]
+        preds = [predicted_latency(c, msg_bytes, calibration, collective,
+                                   hops=hops) for c in cands]
     best = min(preds)
     kept, skipped = [], []
     for cfg, pred in zip(cands, preds):

@@ -88,7 +88,10 @@ _DEFAULTS = CommConfig()
 # overlapped_matmul_allreduce; the halo fold is double-buffered).  Under the
 # e2e objective the overlapped variants must stay distinct candidates — the
 # whole point of the paper's §5 finding is that the microbench cannot rank
-# them but the consumer loop can.
+# them but the consumer loop can.  all_to_all (the MoE dispatch/combine
+# consumer) needs no entry here: its streaming+overlapped variants are
+# already distinct under either objective (chunked_all_to_all), and its
+# buffered variants have no wire chunks to tile under any objective.
 CONSUMER_COLLECTIVES = frozenset({"all_reduce", "multi_neighbor"})
 
 

@@ -13,6 +13,9 @@ CLI::
     PYTHONPATH=src python -m repro.tune.sweep --fast            # smoke sweep
     PYTHONPATH=src python -m repro.tune.sweep --sizes 1024,65536 \
         --collectives all_reduce,sendrecv --out .repro_tune/tunedb.json
+    # virtual 4x4 torus, per-edge hop-distance axis (TuneEntry.hops)
+    PYTHONPATH=src python -m repro.tune.sweep --devices 16 --topology 4x4 \
+        --hop-distances 1,2,4 --collectives sendrecv --sizes small
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import numpy as np
 
 from repro.core import plans
 from repro.core.config import CommConfig, CommMode, Scheduling, V5E
+from repro.core.topology import TorusSpec
 from repro.tune import prune as tune_prune
 from repro.tune import space as tune_space
 from repro.tune.db import TuneDB, TuneEntry, default_db_path, topology_key
@@ -43,10 +47,17 @@ NAMED_SIZES = {"small": (1 << 14, 1 << 20), "full": FULL_SIZES}
 SWEEPABLE = ("sendrecv", "all_reduce", "all_gather", "reduce_scatter",
              "multi_neighbor", "all_to_all", "hierarchical_all_reduce")
 
-# Collectives with an end-to-end consumer-loop benchmark (the two
+# Collectives with an end-to-end consumer-loop benchmark (the
 # hideable-compute consumers of the paper's §5 argument): the row-parallel
-# matmul+reduce layer and the halo-fold step.
-CONSUMERS = {"all_reduce": "row_parallel", "multi_neighbor": "halo_fold"}
+# matmul+reduce layer, the halo-fold step, and the MoE
+# dispatch -> expert-FFN -> combine loop.
+CONSUMERS = {"all_reduce": "row_parallel", "multi_neighbor": "halo_fold",
+             "all_to_all": "moe_loop"}
+
+# Collectives whose benchmark pattern is parameterized by a torus hop
+# distance (the --hop-distances axis): the perm is a translation of the
+# whole virtual torus by exactly d hops.
+HOP_PATTERNED = ("sendrecv", "multi_neighbor")
 
 OBJECTIVES = ("latency", "e2e")
 
@@ -55,6 +66,10 @@ OBJECTIVES = ("latency", "e2e")
 # contracts over _ROWPAR_FF features.
 _ROWPAR_D = 64
 _ROWPAR_FF = 128
+# moe_loop consumer geometry: (tokens, _MOE_D) dispatch payload with
+# tokens*_MOE_D*4 = msg_bytes; each expert's FFN expands to _MOE_FF.
+_MOE_D = 32
+_MOE_FF = 64
 
 
 def consumer_flops(collective: str, msg_bytes: int) -> float:
@@ -66,6 +81,9 @@ def consumer_flops(collective: str, msg_bytes: int) -> float:
     if collective == "multi_neighbor":
         # elementwise interior update over the state (~12 flops/element)
         return 12.0 * (msg_bytes / 4.0)
+    if collective == "all_to_all":
+        # expert FFN: two matmuls (D->FF, FF->D) over tokens*D = msg/4 elems
+        return 4.0 * _MOE_FF * (msg_bytes / 4.0)
     return 0.0
 
 
@@ -111,18 +129,26 @@ def _pattern_hops(collective: str, comm) -> int:
 
 
 def _build_op(collective: str, comm, cfg: CommConfig,
-              subcomms=None) -> Callable:
+              subcomms=None, hop_distance: int | None = None) -> Callable:
     """Per-device body (x -> x-shaped array) exercising one collective op.
 
     ``subcomms`` is the (inner, outer) communicator pair for the
     hierarchical (cross-pod) all-reduce, which runs over a 2-axis mesh.
+    ``hop_distance`` (virtual torus only) replaces the hop-patterned
+    collectives' default edge list with a translation perm at exactly that
+    many torus hops — the per-edge axis of the hop-distance sweep.
     """
     from jax import numpy as jnp
     from repro.core import collectives
 
+    if hop_distance is not None and collective not in HOP_PATTERNED:
+        raise ValueError(f"{collective!r} has no hop-parameterized pattern "
+                         f"(hop-patterned: {HOP_PATTERNED})")
     if collective == "sendrecv":
+        perm = (comm.hop_perm(hop_distance) if hop_distance is not None
+                else comm.ring_perm())
         def op(x):
-            return collectives.sendrecv(x, comm.ring_perm(), comm, cfg)
+            return collectives.sendrecv(x, perm, comm, cfg)
     elif collective == "all_reduce":
         def op(x):
             return collectives.all_reduce(x, comm, cfg) / comm.size
@@ -137,10 +163,14 @@ def _build_op(collective: str, comm, cfg: CommConfig,
             y = collectives.reduce_scatter(x, comm, cfg)
             return x + 0.0 * jnp.sum(y)
     elif collective == "multi_neighbor":
+        if hop_distance is not None:
+            mn_rounds = [comm.hop_perm(hop_distance),
+                         comm.topo.reverse_hop_perm(hop_distance)]
+        else:
+            mn_rounds = _multi_neighbor_rounds(comm)
         def op(x):
-            rounds = _multi_neighbor_rounds(comm)
             outs = collectives.multi_neighbor_exchange(
-                [x] * len(rounds), rounds, comm, cfg)
+                [x] * len(mn_rounds), mn_rounds, comm, cfg)
             return sum(outs) / len(outs)
     elif collective == "all_to_all":
         def op(x):
@@ -159,12 +189,17 @@ def _build_op(collective: str, comm, cfg: CommConfig,
 
 
 def _build_consumer_op(collective: str, comm, cfg: CommConfig,
-                       msg_bytes: int) -> tuple[Callable, tuple]:
+                       msg_bytes: int,
+                       hop_distance: int | None = None
+                       ) -> tuple[Callable, tuple]:
     """One iteration of the collective's consumer loop: (op, per_dev_shape).
 
     ``op`` maps a per-device payload to a same-shaped payload so iterations
     chain; the body is compute the schedule could hide the collective
     behind — the end-to-end time is what the ``e2e`` objective ranks.
+    ``hop_distance`` (hop-patterned collectives on a virtual torus) swaps
+    the exchange pattern for the same translation perm the bare benchmark
+    measures, so a per-hop ``e2e_us`` really routed at that distance.
     """
     from jax import numpy as jnp
     from repro.core import collectives, streaming
@@ -197,7 +232,11 @@ def _build_consumer_op(collective: str, comm, cfg: CommConfig,
         # Halo-fold step: 4-neighbor exchange + fold of the received halos
         # + an interior element update the overlapped schedule can issue
         # while the exchange is in flight.
-        rounds = _multi_neighbor_rounds(comm)
+        if hop_distance is not None:
+            rounds = [comm.hop_perm(hop_distance),
+                      comm.topo.reverse_hop_perm(hop_distance)]
+        else:
+            rounds = _multi_neighbor_rounds(comm)
         n = comm.size
         elems = _payload_elems(msg_bytes, n)
 
@@ -215,6 +254,29 @@ def _build_consumer_op(collective: str, comm, cfg: CommConfig,
             return interior + 1e-3 * jnp.tanh(halo)
 
         return op, (elems,)
+
+    if collective == "all_to_all":
+        # MoE expert loop: dispatch (all_to_all) -> expert FFN -> combine
+        # (all_to_all back).  The FFN is the hideable compute: the chunked
+        # overlapped dispatch/combine (streaming.chunked_all_to_all) lets
+        # the scheduler run expert matmuls on chunk i while chunk i+1 is on
+        # the wire — the third consumer of the paper's §5 argument.
+        n = comm.size
+        tokens = max(n, msg_bytes // 4 // _MOE_D)
+        tokens += (-tokens) % n              # all_to_all split constraint
+        rng = np.random.RandomState(1)
+        w1 = jnp.asarray(rng.randn(_MOE_D, _MOE_FF) * 0.05, jnp.float32)
+        w2 = jnp.asarray(rng.randn(_MOE_FF, _MOE_D) * 0.05, jnp.float32)
+
+        def op(x):
+            y = collectives.all_to_all(x, comm, cfg)            # dispatch
+            h = jnp.tanh(jnp.dot(y, w1,
+                                 preferred_element_type=jnp.float32))
+            h = jnp.dot(h, w2, preferred_element_type=jnp.float32)
+            z = collectives.all_to_all(h.astype(x.dtype), comm, cfg)  # combine
+            return jnp.tanh(x + 1e-3 * z)
+
+        return op, (tokens, _MOE_D)
 
     raise ValueError(f"no consumer-loop benchmark for {collective!r} "
                      f"(consumers: {tuple(CONSUMERS)})")
@@ -295,20 +357,23 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
 
 def _seed_calibration(mesh, comm, db: TuneDB, topo: str,
                       sizes: Sequence[int], reps: int, inner: int,
-                      log: Callable[[str], None]):
+                      log: Callable[[str], None], timer=None,
+                      torus: str = ""):
     """Cold-cache calibration seed: measure the sendrecv corner configs so
     the Eq. 1 fit has points on THIS substrate before pruning starts.  The
     seed measurements are real TuneDB entries (they also serve selection)."""
     log("[prune] cold cache: seeding Eq.1 calibration with a sendrecv "
         "corner sweep")
+    timer = timer or _time_program
     hops = _pattern_hops("sendrecv", comm)
     for msg_bytes in sizes:
         for cfg in tune_space.enumerate_configs("sendrecv", fast=True):
             try:
                 op = _build_op("sendrecv", comm, cfg)
-                sec = _time_program(
+                sec = timer(
                     op, mesh, msg_bytes, cfg, reps=reps, inner=inner,
-                    cache_key=("sweep", topo, _mesh_key(mesh), "sendrecv",
+                    cache_key=("sweep", topo, torus, 0, _mesh_key(mesh),
+                               "sendrecv",
                                tuple(sorted(tune_space.config_to_dict(
                                    cfg).items())), int(msg_bytes)))
             except Exception as e:  # noqa: BLE001
@@ -319,7 +384,7 @@ def _seed_calibration(mesh, comm, db: TuneDB, topo: str,
                 topo=topo, collective="sendrecv", msg_bytes=int(msg_bytes),
                 config=tune_space.config_to_dict(cfg),
                 us_per_call=sec * 1e6, gbps=msg_bytes / sec / 1e9,
-                hops=hops))
+                hops=hops, torus=torus))
     return tune_prune.calibration_from_db(db, topo)
 
 
@@ -332,7 +397,10 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
               prune_ratio: float = tune_prune.DEFAULT_RATIO,
               calibration=None,
               objective: str = "latency",
-              stats: dict | None = None) -> TuneDB:
+              stats: dict | None = None,
+              topology: TorusSpec | None = None,
+              hop_distances: Sequence[int] | None = None,
+              timer: Callable | None = None) -> TuneDB:
     """Measure every candidate config and return the populated TuneDB.
 
     ``prune=True`` enables the paper-style model-guided search: an Eq. 1
@@ -346,10 +414,23 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
 
     ``objective="e2e"`` additionally measures each candidate *end-to-end*
     for the collectives with a consumer-loop benchmark (:data:`CONSUMERS`:
-    the row-parallel matmul+reduce layer and the halo-fold step), records
-    ``TuneEntry.e2e_us``, keeps consumer-distinct candidates (overlapped
-    scheduling) in the space, and — with ``prune=True`` — ranks candidates
-    by the overlap-aware e2e prediction instead of bare Eq. 1 latency.
+    the row-parallel matmul+reduce layer, the halo-fold step, and the MoE
+    dispatch→expert-FFN→combine loop), records ``TuneEntry.e2e_us``, keeps
+    consumer-distinct candidates (overlapped scheduling) in the space, and
+    — with ``prune=True`` — ranks candidates by the overlap-aware e2e
+    prediction instead of bare Eq. 1 latency.
+
+    ``topology`` places the bench communicator on a virtual multi-hop torus
+    (:class:`~repro.core.topology.TorusSpec`): multi-hop edges physically
+    route through intermediate ranks, so measured latency carries the
+    per-hop cost.  ``hop_distances`` adds the per-edge sweep axis — the
+    hop-patterned collectives (:data:`HOP_PATTERNED`) are measured once per
+    distance with ``TuneEntry.hops`` recording it, which is what lets
+    ``select_config(hops=...)`` answer per edge.
+
+    ``timer`` overrides the measurement function (signature of
+    :func:`_time_program`) — deterministic model-driven timers make the
+    selection pipeline testable end-to-end without wall-clock noise.
     """
     import jax
     from repro import compat
@@ -367,6 +448,7 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     if fast:
         reps, inner = min(reps, 2), min(inner, 4)
     log = log or (lambda s: None)
+    timer = timer or _time_program
     stats = stats if stats is not None else {}
     stats.update(total=0, measured=0, pruned=0, errors=0, e2e_measured=0,
                  wall_s=0.0)
@@ -374,9 +456,19 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     t_start = time.perf_counter()
 
     axis = mesh.axis_names[0]
-    comm = Communicator.from_mesh(mesh, axis)
+    comm = Communicator.from_mesh(mesh, axis, topo=topology)
     topo = topology_key(mesh)
+    torus = topology.name if topology is not None else ""
     n = mesh.devices.size
+    if hop_distances is not None:
+        if topology is None:
+            raise ValueError("--hop-distances requires --topology "
+                             "(hop distances live on a virtual torus)")
+        bad = [d for d in hop_distances
+               if not 1 <= d <= topology.diameter]
+        if bad:
+            raise ValueError(f"hop distances {bad} outside this torus's "
+                             f"[1, {topology.diameter}]")
 
     if prune and calibration is None:
         calibration = tune_prune.calibration_from_db(db, topo)
@@ -388,7 +480,8 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
             # the two measurements per config.
             t_seed = time.perf_counter()
             calibration = _seed_calibration(mesh, comm, db, topo, sizes,
-                                            reps, inner, log)
+                                            reps, inner, log, timer=timer,
+                                            torus=torus)
             stats["seed_s"] = time.perf_counter() - t_seed
         if calibration is None:
             log("[prune] calibration unavailable — sweeping exhaustively")
@@ -411,79 +504,92 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                                              objective=objective)
         if max_configs is not None:
             cands = cands[:max_configs]
-        hops = _pattern_hops(coll, comm)
+        # The per-edge axis: hop-patterned collectives sweep once per
+        # requested distance; everything else measures its natural pattern.
+        if (hop_distances is not None and coll in HOP_PATTERNED):
+            distances: list[int | None] = list(hop_distances)
+        else:
+            distances = [None]
         consumer = CONSUMERS.get(coll) if objective == "e2e" else None
-        log(f"[{topo}] {coll}: {len(cands)} configs x {len(sizes)} sizes "
-            f"(pattern hops={hops}"
-            + (f", e2e consumer={consumer}" if consumer else "") + ")")
-        for msg_bytes in sizes:
-            stats["total"] += len(cands)
-            to_measure = cands
-            if prune and calibration is not None:
-                compute_s = (consumer_flops(coll, msg_bytes)
-                             / V5E.peak_flops if consumer else 0.0)
-                to_measure, skipped = tune_prune.prune_candidates(
-                    cands, msg_bytes, calibration, prune_ratio,
-                    collective=coll,
-                    objective="e2e" if consumer else "latency",
-                    compute_s=compute_s)
-                stats["pruned"] += len(skipped)
-                if skipped:
-                    log(f"  prune {coll}/{msg_bytes}B: measuring "
-                        f"{len(to_measure)}/{len(cands)} (model skipped "
-                        f"{len(skipped)})")
-            cfg_key = lambda c: tuple(sorted(
-                tune_space.config_to_dict(c).items()))
-            for i, cfg in enumerate(to_measure):
-                try:
-                    op = _build_op(coll, comm, cfg, subcomms=subcomms)
-                    sec = _time_program(
-                        op, bench_mesh, msg_bytes, cfg,
-                        reps=reps, inner=inner,
-                        cache_key=("sweep", topo, _mesh_key(bench_mesh),
-                                   coll, cfg_key(cfg), int(msg_bytes)))
-                except Exception as e:  # noqa: BLE001 — skip unrunnable combos
-                    stats["errors"] += 1
-                    log(f"  skip {coll}/{msg_bytes}B cfg{i}: "
-                        f"{type(e).__name__}: {e}")
-                    continue
-                e2e_us = 0.0
-                if consumer:
+        for hop_d in distances:
+            hops = hop_d if hop_d is not None else _pattern_hops(coll, comm)
+            log(f"[{topo}{'/' + torus if torus else ''}] {coll}: "
+                f"{len(cands)} configs x {len(sizes)} sizes "
+                f"(pattern hops={hops}"
+                + (f", e2e consumer={consumer}" if consumer else "") + ")")
+            for msg_bytes in sizes:
+                stats["total"] += len(cands)
+                to_measure = cands
+                if prune and calibration is not None:
+                    compute_s = (consumer_flops(coll, msg_bytes)
+                                 / V5E.peak_flops if consumer else 0.0)
+                    to_measure, skipped = tune_prune.prune_candidates(
+                        cands, msg_bytes, calibration, prune_ratio,
+                        collective=coll,
+                        objective="e2e" if consumer else "latency",
+                        compute_s=compute_s, hops=hops)
+                    stats["pruned"] += len(skipped)
+                    if skipped:
+                        log(f"  prune {coll}/{msg_bytes}B: measuring "
+                            f"{len(to_measure)}/{len(cands)} (model skipped "
+                            f"{len(skipped)})")
+                cfg_key = lambda c: tuple(sorted(
+                    tune_space.config_to_dict(c).items()))
+                for i, cfg in enumerate(to_measure):
                     try:
-                        cop, shape = _build_consumer_op(coll, comm, cfg,
-                                                        msg_bytes)
-                        e2e_sec = _time_program(
-                            cop, bench_mesh, msg_bytes, cfg,
-                            reps=reps, inner=inner, per_dev_shape=shape,
-                            cache_key=("sweep_e2e", topo,
-                                       _mesh_key(bench_mesh), coll,
-                                       cfg_key(cfg), int(msg_bytes)))
-                        e2e_us = e2e_sec * 1e6
-                        stats["e2e_measured"] += 1
-                    except Exception as e:  # noqa: BLE001
+                        op = _build_op(coll, comm, cfg, subcomms=subcomms,
+                                       hop_distance=hop_d)
+                        sec = timer(
+                            op, bench_mesh, msg_bytes, cfg,
+                            reps=reps, inner=inner,
+                            cache_key=("sweep", topo, torus, hop_d or 0,
+                                       _mesh_key(bench_mesh),
+                                       coll, cfg_key(cfg), int(msg_bytes)))
+                    except Exception as e:  # noqa: BLE001 — skip unrunnable combos
                         stats["errors"] += 1
-                        log(f"  skip e2e {coll}/{msg_bytes}B cfg{i}: "
+                        log(f"  skip {coll}/{msg_bytes}B cfg{i}: "
                             f"{type(e).__name__}: {e}")
-                stats["measured"] += 1
-                db.add(TuneEntry(
-                    topo=topo, collective=coll, msg_bytes=int(msg_bytes),
-                    config=tune_space.config_to_dict(cfg),
-                    us_per_call=sec * 1e6,
-                    gbps=msg_bytes / sec / 1e9,
-                    hops=hops, e2e_us=e2e_us))
-            best = db.best(coll, msg_bytes, topo)
-            if best is not None:
-                log(f"  {coll:15s} {msg_bytes:>8d}B best "
-                    f"{best.us_per_call:9.1f} us  ({best.gbps:6.3f} GB/s)  "
-                    f"{best.config['mode']}/{best.config['scheduling']}"
-                    f"/{best.config['algorithm']}")
-            if consumer:
-                be = db.best(coll, msg_bytes, topo, objective="e2e")
-                if be is not None and be.e2e_us > 0.0:
-                    log(f"  {coll:15s} {msg_bytes:>8d}B best e2e "
-                        f"{be.e2e_us:9.1f} us/iter "
-                        f"({consumer}) "
-                        f"{be.config['mode']}/{be.config['scheduling']}")
+                        continue
+                    e2e_us = 0.0
+                    if consumer:
+                        try:
+                            cop, shape = _build_consumer_op(
+                                coll, comm, cfg, msg_bytes,
+                                hop_distance=hop_d)
+                            e2e_sec = timer(
+                                cop, bench_mesh, msg_bytes, cfg,
+                                reps=reps, inner=inner, per_dev_shape=shape,
+                                cache_key=("sweep_e2e", topo, torus,
+                                           hop_d or 0,
+                                           _mesh_key(bench_mesh), coll,
+                                           cfg_key(cfg), int(msg_bytes)))
+                            e2e_us = e2e_sec * 1e6
+                            stats["e2e_measured"] += 1
+                        except Exception as e:  # noqa: BLE001
+                            stats["errors"] += 1
+                            log(f"  skip e2e {coll}/{msg_bytes}B cfg{i}: "
+                                f"{type(e).__name__}: {e}")
+                    stats["measured"] += 1
+                    db.add(TuneEntry(
+                        topo=topo, collective=coll, msg_bytes=int(msg_bytes),
+                        config=tune_space.config_to_dict(cfg),
+                        us_per_call=sec * 1e6,
+                        gbps=msg_bytes / sec / 1e9,
+                        hops=hops, e2e_us=e2e_us, torus=torus))
+                best = db.best(coll, msg_bytes, topo, hops=hops)
+                if best is not None:
+                    log(f"  {coll:15s} {msg_bytes:>8d}B h{hops} best "
+                        f"{best.us_per_call:9.1f} us  ({best.gbps:6.3f} GB/s)  "
+                        f"{best.config['mode']}/{best.config['scheduling']}"
+                        f"/{best.config['algorithm']}")
+                if consumer:
+                    be = db.best(coll, msg_bytes, topo, hops=hops,
+                                 objective="e2e")
+                    if be is not None and be.e2e_us > 0.0:
+                        log(f"  {coll:15s} {msg_bytes:>8d}B h{hops} best e2e "
+                            f"{be.e2e_us:9.1f} us/iter "
+                            f"({consumer}) "
+                            f"{be.config['mode']}/{be.config['scheduling']}")
     stats["wall_s"] = time.perf_counter() - t_start
     cache_after = plans.cache_stats()
     for k in ("plan_hits", "plan_misses", "program_hits", "program_misses"):
@@ -564,8 +670,19 @@ def main(argv: Sequence[str] | None = None) -> int:
                     help="ranking metric recorded by the sweep: bare "
                     "collective latency, or 'e2e' — additionally measure "
                     "each candidate inside its consumer loop (row_parallel "
-                    "matmul+reduce, halo-fold step) and record "
-                    "TuneEntry.e2e_us for select_config(objective='e2e')")
+                    "matmul+reduce, halo-fold step, MoE dispatch/combine) "
+                    "and record TuneEntry.e2e_us for "
+                    "select_config(objective='e2e')")
+    ap.add_argument("--topology", default=None,
+                    help="virtual torus placement, e.g. '4x4' or "
+                    "'2x4:snake' (rows x cols must equal the device "
+                    "count); multi-hop edges are physically routed "
+                    "through intermediate ranks")
+    ap.add_argument("--hop-distances", default=None,
+                    help="comma list of torus hop distances to sweep the "
+                    "hop-patterned collectives at (requires --topology); "
+                    "each distance is recorded as TuneEntry.hops so "
+                    "select_config(hops=...) answers per edge")
     ap.add_argument("--warm-check", action="store_true",
                     help="run the sweep twice in this process (cold, then "
                     "warm against the populated plan cache) and exit "
@@ -589,6 +706,25 @@ def main(argv: Sequence[str] | None = None) -> int:
     unknown = [c for c in colls if c not in SWEEPABLE]
     if unknown:
         ap.error(f"unknown collective(s) {unknown}; sweepable: {SWEEPABLE}")
+    topology = None
+    if args.topology:
+        try:
+            topology = TorusSpec.parse(args.topology)
+        except ValueError as e:
+            ap.error(str(e))
+        if topology.n_ranks != jax.device_count():
+            ap.error(f"--topology {args.topology} places {topology.n_ranks} "
+                     f"ranks but {jax.device_count()} devices are up "
+                     f"(use --devices {topology.n_ranks})")
+    hop_distances = None
+    if args.hop_distances:
+        if topology is None:
+            ap.error("--hop-distances requires --topology")
+        try:
+            hop_distances = [int(d) for d in args.hop_distances.split(",")]
+        except ValueError:
+            ap.error(f"--hop-distances must be comma-separated integers, "
+                     f"got {args.hop_distances!r}")
 
     db = TuneDB.load(args.out)
     stats: dict = {}
@@ -596,7 +732,8 @@ def main(argv: Sequence[str] | None = None) -> int:
                   max_configs=args.max_configs,
                   log=lambda s: print(s, flush=True),
                   prune=args.prune, prune_ratio=args.prune_ratio,
-                  objective=args.objective)
+                  objective=args.objective,
+                  topology=topology, hop_distances=hop_distances)
     db = run_sweep(db=db, stats=stats, **kwargs)
     path = db.save(args.out)
     print(f"wrote {len(db)} entries -> {path}")

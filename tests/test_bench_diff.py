@@ -21,12 +21,14 @@ def fixture_jsons(tmp_path):
         "fig9_base_mpi_p8": {"us_per_call": 500.0, "derived": ""},
         "fig9_gone": {"us_per_call": 50.0, "derived": ""},
         "fig3_full_ring_hlo_ops": {"us_per_call": 120.0, "derived": ""},
+        "topo_hop_ratio_sendrecv": {"us_per_call": 1.5, "derived": ""},
         "zero_row": {"us_per_call": 0.0, "derived": ""},
     })
     new = _write(tmp_path / "new.json", {
         "fig9_accl_udp_p8": {"us_per_call": 130.0, "derived": ""},   # +30%
         "fig9_base_mpi_p8": {"us_per_call": 300.0, "derived": ""},   # -40%
         "fig3_full_ring_hlo_ops": {"us_per_call": 400.0, "derived": ""},
+        "topo_hop_ratio_sendrecv": {"us_per_call": 4.5, "derived": ""},
         "zero_row": {"us_per_call": 9.0, "derived": ""},
     })
     return old, new
@@ -40,9 +42,10 @@ def test_compare_classifies_rows(fixture_jsons):
     assert regs[0][3] == pytest.approx(1.3)
     assert [i[0] for i in imps] == ["fig9_base_mpi_p8"]
     assert missing == ["fig9_gone"]
-    # fig3_* is a count, not a latency — a 3.3x increase is NOT a regression;
-    # zero-valued baselines are skipped (no division blowup)
-    assert all(not r[0].startswith("fig3_") for r in regs)
+    # fig3_* is a count and topo_hop_ratio_* a ratio, not latencies — a 3x
+    # increase is NOT a regression there; zero-valued baselines are skipped
+    # (no division blowup)
+    assert all(not r[0].startswith(("fig3_", "topo_hop_ratio")) for r in regs)
 
 
 def test_main_exit_codes(fixture_jsons, capsys):
@@ -67,43 +70,44 @@ def test_main_no_regressions_when_identical(tmp_path):
 
 def test_multi_baseline_enforcement(tmp_path):
     """Rows need >= 2 committed baselines to hard-fail; the reference is the
-    most lenient baseline; e2e_ rows stay report-only.  The lmcoll_ rows
-    graduated to enforced now that two committed baselines carry them."""
+    most lenient baseline; topo_ rows stay report-only.  The e2e_ rows
+    graduated to enforced now that two committed baselines carry them
+    (bench_pr4 + bench_pr5)."""
     b1 = _write(tmp_path / "b1.json", {
         "fig9_accl_udp_p8": {"us_per_call": 100.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 10.0, "derived": ""},
-        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 50.0, "derived": ""},
         "e2e_rowpar_lat_winner_us": {"us_per_call": 40.0, "derived": ""},
+        "topo_hops_sendrecv_h2_65536B": {"us_per_call": 30.0, "derived": ""},
     })
     b2 = _write(tmp_path / "b2.json", {
         "fig9_accl_udp_p8": {"us_per_call": 120.0, "derived": ""},
-        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 55.0, "derived": ""},
         "e2e_rowpar_lat_winner_us": {"us_per_call": 45.0, "derived": ""},
+        "topo_hops_sendrecv_h2_65536B": {"us_per_call": 35.0, "derived": ""},
     })
     # everything regressed 2x vs the lenient baseline
     new = _write(tmp_path / "new.json", {
         "fig9_accl_udp_p8": {"us_per_call": 240.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 20.0, "derived": ""},
-        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 110.0, "derived": ""},
         "e2e_rowpar_lat_winner_us": {"us_per_call": 90.0, "derived": ""},
+        "topo_hops_sendrecv_h2_65536B": {"us_per_call": 80.0, "derived": ""},
     })
-    # the 2-baseline fig9 AND lmcoll rows are enforced -> exit 1
+    # the 2-baseline fig9 AND e2e rows are enforced -> exit 1
     assert bench_diff.main(["--old", b1, "--old", b2, "--new", new]) == 1
-    # an lmcoll-only regression now gates too (promotion regression test)
-    lm_only = _write(tmp_path / "lm_only.json", {
+    # an e2e-only regression now gates too (promotion regression test)
+    e2e_only = _write(tmp_path / "e2e_only.json", {
         "fig9_accl_udp_p8": {"us_per_call": 110.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 20.0, "derived": ""},
-        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 110.0, "derived": ""},
-        "e2e_rowpar_lat_winner_us": {"us_per_call": 45.0, "derived": ""},
+        "e2e_rowpar_lat_winner_us": {"us_per_call": 90.0, "derived": ""},
+        "topo_hops_sendrecv_h2_65536B": {"us_per_call": 35.0, "derived": ""},
     })
-    assert bench_diff.main(["--old", b1, "--old", b2, "--new", lm_only]) == 1
-    # remove the enforced regressions: single-baseline + e2e_ rows are
+    assert bench_diff.main(["--old", b1, "--old", b2, "--new", e2e_only]) == 1
+    # remove the enforced regressions: single-baseline + topo_ rows are
     # report-only, so the gate passes even with both regressed
     ok = _write(tmp_path / "ok.json", {
         "fig9_accl_udp_p8": {"us_per_call": 110.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 20.0, "derived": ""},      # 1 baseline
-        "lmcoll_tp_reduce_fused_tp4": {"us_per_call": 55.0, "derived": ""},
-        "e2e_rowpar_lat_winner_us": {"us_per_call": 90.0, "derived": ""},
+        "e2e_rowpar_lat_winner_us": {"us_per_call": 45.0, "derived": ""},
+        "topo_hops_sendrecv_h2_65536B": {"us_per_call": 80.0, "derived": ""},
     })
     assert bench_diff.main(["--old", b1, "--old", b2, "--new", ok]) == 0
 
@@ -119,18 +123,18 @@ def test_merge_baselines_lenient_reference():
 
 def test_split_enforced_tiers():
     regs = [("a", 10.0, 30.0, 3.0), ("b", 5.0, 20.0, 4.0),
-            ("lmcoll_x", 1.0, 9.0, 9.0), ("e2e_x", 1.0, 9.0, 9.0)]
-    counts = {"a": 2, "b": 1, "lmcoll_x": 2, "e2e_x": 2}
+            ("e2e_x", 1.0, 9.0, 9.0), ("topo_x", 1.0, 9.0, 9.0)]
+    counts = {"a": 2, "b": 1, "e2e_x": 2, "topo_x": 2}
     hard, soft = bench_diff.split_enforced(
         regs, counts, n_baselines=2,
         report_only_prefixes=bench_diff.DEFAULT_REPORT_ONLY_PREFIXES)
-    # lmcoll_ rows are enforced now (>= 2 baselines, no longer a default
-    # report-only prefix); e2e_ rows ride report-only
-    assert [r[0] for r in hard] == ["a", "lmcoll_x"]
-    assert sorted(r[0] for r in soft) == ["b", "e2e_x"]
+    # e2e_ rows are enforced now (>= 2 baselines, no longer a default
+    # report-only prefix); topo_ rows ride report-only
+    assert [r[0] for r in hard] == ["a", "e2e_x"]
+    assert sorted(r[0] for r in soft) == ["b", "topo_x"]
     # single-baseline mode keeps the old semantics: everything enforced
     hard1, soft1 = bench_diff.split_enforced(
-        regs, {"a": 1, "b": 1, "lmcoll_x": 1, "e2e_x": 1}, 1, ())
+        regs, {"a": 1, "b": 1, "e2e_x": 1, "topo_x": 1}, 1, ())
     assert len(hard1) == 4 and not soft1
 
 

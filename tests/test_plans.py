@@ -4,7 +4,7 @@ transport matrix."""
 import numpy as np
 import pytest
 
-from helpers import run_multidevice
+from helpers import require_hypothesis, run_multidevice
 
 
 # ----------------------------------------------------------------------
@@ -51,6 +51,60 @@ def test_plan_keying_hits_and_misses():
                    (1024,), np.float32)                       # comm change
     plans.get_plan("all_reduce", comm, cfg, (1024,), np.float32)  # collective
     assert plans.cache_stats()["plan_misses"] == before + 5
+
+
+def test_plan_keying_distinct_inputs_never_alias():
+    """Hypothesis property: two get_plan calls differing in ANY component —
+    collective, communicator axes/sizes, **topology spec** (shape, per-hop
+    cost, placement), config, shape, or dtype — must never return the same
+    cached plan object; identical inputs always must."""
+    hypothesis = require_hypothesis()
+    from hypothesis import given, settings, strategies as st
+
+    import dataclasses
+    plans = _fresh_plans()
+    from repro.core.communicator import Communicator
+    from repro.core.config import CommConfig, Transport
+    from repro.core.topology import TorusSpec, snake_placement
+
+    specs = st.one_of(
+        st.none(),
+        st.builds(lambda shape, hop, snake: TorusSpec(
+            shape, per_hop_ns=hop,
+            placement=snake_placement(shape) if snake else None),
+            st.sampled_from([(2, 4), (4, 2), (1, 8), (2, 2)]),
+            st.sampled_from([250.0, 500.0]),
+            st.booleans()))
+
+    inputs = st.tuples(
+        st.sampled_from(["sendrecv", "multi_neighbor", "all_reduce"]),
+        st.sampled_from([("x",), ("y",)]),
+        specs,
+        st.sampled_from([1 << 12, 1 << 16]),        # chunk_bytes
+        st.sampled_from(list(Transport)),
+        st.sampled_from([(256,), (1024,), (64, 3)]),
+        st.sampled_from(["float32", "int8"]),
+    )
+
+    def build(inp):
+        coll, axes, spec, chunk, transport, shape, dtype = inp
+        n = spec.n_ranks if spec is not None else 8
+        comm = Communicator(axes, (n,), topo=spec)
+        cfg = CommConfig(chunk_bytes=chunk, transport=transport)
+        return plans.get_plan(coll, comm, cfg, shape, np.dtype(dtype))
+
+    @settings(max_examples=60, deadline=None)
+    @given(a=inputs, b=inputs)
+    def prop(a, b):
+        pa, pb = build(a), build(b)
+        if a == b:
+            assert pa is pb
+        else:
+            assert pa is not pb
+        # and replay is stable
+        assert build(a) is pa
+
+    prop()
 
 
 def test_chunk_plan_matches_streaming_layouts():

@@ -422,6 +422,35 @@ print("E2E SWEEP OK")
     assert "E2E SWEEP OK" in out
 
 
+def test_moe_all_to_all_e2e_sweep_selects_measured_best(tmp_path):
+    """The MoE dispatch -> expert-FFN -> combine loop is the third CONSUMERS
+    entry: an e2e-objective all_to_all sweep must record consumer-loop times
+    and select_config(objective='e2e') must return the measured winner."""
+    out = run_multidevice("""
+from repro import compat
+from repro.tune import TuneDB, run_sweep, select_config
+from repro.tune.sweep import CONSUMERS, consumer_flops
+
+assert CONSUMERS["all_to_all"] == "moe_loop"
+assert consumer_flops("all_to_all", 1 << 14) > 0
+
+mesh = compat.make_mesh((8,), ("x",))
+stats = {}
+db = run_sweep(mesh=mesh, collectives=("all_to_all",), sizes=(16384,),
+               fast=True, max_configs=5, reps=1, inner=2,
+               objective="e2e", stats=stats)
+ents = [e for e in db.entries if e.collective == "all_to_all"]
+assert ents and all(e.e2e_us > 0.0 for e in ents), stats
+assert stats["e2e_measured"] == len(ents), stats
+cfg = select_config("all_to_all", 16384, db=db, topo=ents[0].topo,
+                    objective="e2e")
+best = min(ents, key=lambda e: e.e2e_us)
+assert cfg == best.comm_config
+print("MOE E2E SWEEP OK")
+""")
+    assert "MOE E2E SWEEP OK" in out
+
+
 # ----------------------------------------------------------------------
 # Calibration
 # ----------------------------------------------------------------------
