@@ -16,6 +16,8 @@ import numpy as np
 from repro.core import latmodel
 from repro.core.config import (BASELINE_CONFIG, OVERLAPPED_CONFIG, CommConfig,
                                V5E)
+from repro.obs import trace as obs_trace
+from repro.runtime.fault_tolerance import StepWatchdog
 from repro.swe import driver
 
 
@@ -66,10 +68,17 @@ def main():
     state = sim.state
     m0 = float(np.sum(np.asarray(state)[..., 0] * sim.pm.area * sim.pm.valid))
     state = jax.block_until_ready(run(state, 0.0))   # compile
+    # Segment-level watchdog: each 20-step dispatch is one "step" — a slow
+    # segment (straggling host, recompile) shows up as a watchdog.straggler
+    # instant in the trace and on the watchdog.stragglers counter.
+    watchdog = StepWatchdog(warmup=2, window=16)
     t0 = time.perf_counter()
     t = 20 * 1e-4
     for i in range(args.steps // 20 - 1):
+        watchdog.start_step(i)
         state = run(state, t)
+        jax.block_until_ready(state)
+        watchdog.end_step()
         t += 20 * 1e-4
     jax.block_until_ready(state)
     dt = (time.perf_counter() - t0) / max(args.steps - 20, 1)
@@ -77,6 +86,11 @@ def main():
     print(f"ran {args.steps} steps, {dt*1e6:.0f} us/step on CPU devices")
     print(f"mass conservation: {m0:.6f} -> {m1:.6f} "
           f"(drift {(m1-m0)/m0:.2e})")
+    print(f"watchdog: median segment {watchdog.median_step*1e3:.1f}ms, "
+          f"{len(watchdog.events)} straggler(s)")
+    if obs_trace.enabled():
+        print(f"tracing: {len(obs_trace.events())} events buffered "
+              f"(REPRO_TRACE={obs_trace.mode()!r})")
 
     # Eq. 2/3 model (with the overlap term) at the paper's scales
     w = driver.build_workload(sim)

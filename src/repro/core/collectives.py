@@ -24,6 +24,25 @@ from repro.core.communicator import Communicator
 from repro.core.config import (CommConfig, CommMode, Compression, Scheduling,
                                Transport)
 from repro.core import plans, plugins, streaming, topology
+from repro.obs import metrics as obs_metrics, trace as obs_trace
+
+
+def _nbytes(x) -> int:
+    """Static per-rank byte count of a (possibly traced) payload."""
+    try:
+        return int(x.size) * int(x.dtype.itemsize)
+    except (AttributeError, TypeError):
+        return 0
+
+
+def _record_edges(comm: Communicator, perm, nbytes: int) -> None:
+    """Per-edge byte accounting: every edge moves ``nbytes``, counted under
+    its torus hop distance (the per-edge axis of the paper's Fig. 9)."""
+    reg = obs_metrics.registry()
+    reg.counter("comm.bytes").inc(nbytes * len(perm))
+    for s, d in perm:
+        reg.counter("comm.edge_bytes",
+                    hops=comm.torus_hops(int(s), int(d))).inc(nbytes)
 
 
 def resolve_config(cfg, collective: str = "all_reduce",
@@ -67,10 +86,19 @@ def sendrecv(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     the direct permute.
     """
     perm = plans.validated_perm(comm, perm)
+    nbytes = _nbytes(x)
+    hops = comm.max_hops(perm)
+    _record_edges(comm, perm, nbytes)
     perm = topology.routed_perm(comm, perm)
-    if cfg.mode == CommMode.STREAMING:
-        return streaming.chunked_permute(x, perm, comm.axis, cfg)
-    return streaming.buffered_permute(x, perm, comm.axis, cfg)
+    with obs_trace.span("sendrecv", cat="collective", nbytes=nbytes,
+                        hops=hops, edges=len(perm.edges)
+                        if isinstance(perm, topology.RoutedPerm)
+                        else len(perm),
+                        mode=cfg.mode, transport=cfg.transport,
+                        scheduling=cfg.scheduling):
+        if cfg.mode == CommMode.STREAMING:
+            return streaming.chunked_permute(x, perm, comm.axis, cfg)
+        return streaming.buffered_permute(x, perm, comm.axis, cfg)
 
 
 def edge_color_rounds(edges: Sequence[tuple[int, int]]):
@@ -121,6 +149,12 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
         # Degenerate empty pattern: behave like the uniform-config call
         # (no rounds means no config is ever consulted).
         cfg = round_cfgs[0] if round_cfgs else CommConfig()
+    obs_metrics.registry().counter("comm.exchange_rounds").inc(len(rounds))
+    exchange_span = obs_trace.span(
+        "multi_neighbor", cat="collective", rounds=len(rounds),
+        hops=comm.max_hops([e for r in rounds for e in r]),
+        nbytes=_nbytes(payloads[0]) if payloads else 0,
+        mode=cfg.mode, transport=cfg.transport, scheduling=cfg.scheduling)
     if cfg.scheduling == Scheduling.OVERLAPPED:
         if round_cfgs is not None and any(c != cfg for c in round_cfgs):
             raise ValueError(
@@ -142,21 +176,23 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
         # Virtual-torus lowering happens per round inside the engine so the
         # double-buffered ack chain still runs per buffer.
         rounds = [topology.routed_perm(comm, perm) for perm in rounds]
-        carry, received = streaming.double_buffered_exchange(
-            payloads, rounds, comm.axis, cfg, consume=consume, init=init,
-            chunk_consume=chunk_consume, chunk_align=chunk_align)
+        with exchange_span:
+            carry, received = streaming.double_buffered_exchange(
+                payloads, rounds, comm.axis, cfg, consume=consume, init=init,
+                chunk_consume=chunk_consume, chunk_align=chunk_align)
         if consume is not None or chunk_consume is not None:
             return carry, received
         return received
     received = []
     prev = None
-    for r, (payload, perm) in enumerate(zip(payloads, rounds)):
-        rcfg = round_cfgs[r] if round_cfgs is not None else cfg
-        if rcfg.transport == Transport.ORDERED and prev is not None:
-            payload, _ = lax.optimization_barrier((payload, prev))
-        out = sendrecv(payload, perm, comm, rcfg)
-        received.append(out)
-        prev = out
+    with exchange_span:
+        for r, (payload, perm) in enumerate(zip(payloads, rounds)):
+            rcfg = round_cfgs[r] if round_cfgs is not None else cfg
+            if rcfg.transport == Transport.ORDERED and prev is not None:
+                payload, _ = lax.optimization_barrier((payload, prev))
+            out = sendrecv(payload, perm, comm, rcfg)
+            received.append(out)
+            prev = out
     return received
 
 
@@ -285,46 +321,61 @@ def all_reduce(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
     the logical cotangent.  shard_map's default transpose (psum again, or the
     ring algorithm's permute chain) would compound a tp× factor per combine.
     """
-    if op == "sum":
-        @jax.custom_vjp
-        def f(v):
-            return _all_reduce_sum_fwd(v, comm, cfg)
+    with obs_trace.span("all_reduce", cat="collective", op=op,
+                        nbytes=_nbytes(x), algorithm=cfg.algorithm,
+                        mode=cfg.mode, transport=cfg.transport,
+                        scheduling=cfg.scheduling,
+                        hops=comm.max_hops(comm.ring_perm())
+                        if cfg.algorithm == "ring" and comm.single_axis
+                        else 1):
+        if op == "sum":
+            @jax.custom_vjp
+            def f(v):
+                return _all_reduce_sum_fwd(v, comm, cfg)
 
-        def fwd(v):
-            return _all_reduce_sum_fwd(v, comm, cfg), None
+            def fwd(v):
+                return _all_reduce_sum_fwd(v, comm, cfg), None
 
-        def bwd(_, ct):
-            return (ct,)
+            def bwd(_, ct):
+                return (ct,)
 
-        f.defvjp(fwd, bwd)
-        return f(x)
-    if cfg.algorithm == "ring" and comm.single_axis:
-        return ring_all_reduce(x, comm, cfg, op)
-    if op == "max":
-        return lax.pmax(x, comm.axis_names)
-    if op == "min":
-        return lax.pmin(x, comm.axis_names)
-    raise ValueError(f"native all_reduce does not support op={op}")
+            f.defvjp(fwd, bwd)
+            return f(x)
+        if cfg.algorithm == "ring" and comm.single_axis:
+            return ring_all_reduce(x, comm, cfg, op)
+        if op == "max":
+            return lax.pmax(x, comm.axis_names)
+        if op == "min":
+            return lax.pmin(x, comm.axis_names)
+        raise ValueError(f"native all_reduce does not support op={op}")
 
 
 def all_gather(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
                axis: int = 0, tiled: bool = True) -> jnp.ndarray:
-    if cfg.algorithm == "ring" and comm.single_axis:
-        stacked = ring_all_gather(x, comm, cfg)
-        if not tiled:
-            return stacked
-        n = comm.size
-        parts = [jnp.take(stacked, i, axis=0) for i in range(n)]
-        return jnp.concatenate(parts, axis=axis)
-    return lax.all_gather(x, comm.axis_names, axis=axis, tiled=tiled)
+    with obs_trace.span("all_gather", cat="collective", nbytes=_nbytes(x),
+                        algorithm=cfg.algorithm, mode=cfg.mode,
+                        transport=cfg.transport, scheduling=cfg.scheduling):
+        if cfg.algorithm == "ring" and comm.single_axis:
+            stacked = ring_all_gather(x, comm, cfg)
+            if not tiled:
+                return stacked
+            n = comm.size
+            parts = [jnp.take(stacked, i, axis=0) for i in range(n)]
+            return jnp.concatenate(parts, axis=axis)
+        return lax.all_gather(x, comm.axis_names, axis=axis, tiled=tiled)
 
 
 def reduce_scatter(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
                    op: str = "sum") -> jnp.ndarray:
-    if cfg.algorithm == "ring" and comm.single_axis:
-        return ring_reduce_scatter(x, comm, cfg, op)
-    assert op == "sum"
-    return lax.psum_scatter(x, comm.axis_names, scatter_dimension=0, tiled=True)
+    with obs_trace.span("reduce_scatter", cat="collective",
+                        nbytes=_nbytes(x), algorithm=cfg.algorithm,
+                        mode=cfg.mode, transport=cfg.transport,
+                        scheduling=cfg.scheduling):
+        if cfg.algorithm == "ring" and comm.single_axis:
+            return ring_reduce_scatter(x, comm, cfg, op)
+        assert op == "sum"
+        return lax.psum_scatter(x, comm.axis_names, scatter_dimension=0,
+                                tiled=True)
 
 
 def all_to_all(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
@@ -336,18 +387,22 @@ def all_to_all(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
     so the dispatch/combine overlaps its own transfer — bitwise-identical
     to the fused op.
     """
-    if (cfg.scheduling == Scheduling.OVERLAPPED
-            and cfg.mode == CommMode.STREAMING):
-        return streaming.chunked_all_to_all(x, comm, cfg, split_axis,
-                                            concat_axis)
-    if cfg.compression != Compression.NONE and cfg.enable_compression_plugin:
-        orig = x.dtype
-        y = lax.all_to_all(x.astype(jnp.bfloat16), comm.axis_names,
-                           split_axis=split_axis, concat_axis=concat_axis,
-                           tiled=True)
-        return y.astype(orig)
-    return lax.all_to_all(x, comm.axis_names, split_axis=split_axis,
-                          concat_axis=concat_axis, tiled=True)
+    with obs_trace.span("all_to_all", cat="collective", nbytes=_nbytes(x),
+                        mode=cfg.mode, transport=cfg.transport,
+                        scheduling=cfg.scheduling):
+        if (cfg.scheduling == Scheduling.OVERLAPPED
+                and cfg.mode == CommMode.STREAMING):
+            return streaming.chunked_all_to_all(x, comm, cfg, split_axis,
+                                                concat_axis)
+        if (cfg.compression != Compression.NONE
+                and cfg.enable_compression_plugin):
+            orig = x.dtype
+            y = lax.all_to_all(x.astype(jnp.bfloat16), comm.axis_names,
+                               split_axis=split_axis, concat_axis=concat_axis,
+                               tiled=True)
+            return y.astype(orig)
+        return lax.all_to_all(x, comm.axis_names, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
 
 
 def broadcast(x: jnp.ndarray, root: int, comm: Communicator,
@@ -366,12 +421,17 @@ def hierarchical_all_reduce(x: jnp.ndarray, inner: Communicator,
     of the paper's switch-topology tuning.  Requires leading dim divisible by
     the inner size; falls back to flat psum otherwise.
     """
-    flat = x.reshape(-1)
-    n = inner.size
-    pad = (-flat.shape[0]) % n
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    seg = reduce_scatter(flat, inner, cfg)
-    seg = all_reduce(seg, outer, cfg)
-    full = all_gather(seg, inner, cfg, axis=0, tiled=True)
-    return full[: x.size].reshape(x.shape)
+    with obs_trace.span("hierarchical_all_reduce", cat="collective",
+                        nbytes=_nbytes(x), inner=inner.size,
+                        outer=outer.size, mode=cfg.mode,
+                        transport=cfg.transport,
+                        scheduling=cfg.scheduling):
+        flat = x.reshape(-1)
+        n = inner.size
+        pad = (-flat.shape[0]) % n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        seg = reduce_scatter(flat, inner, cfg)
+        seg = all_reduce(seg, outer, cfg)
+        full = all_gather(seg, inner, cfg, axis=0, tiled=True)
+        return full[: x.size].reshape(x.shape)

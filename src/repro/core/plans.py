@@ -40,10 +40,16 @@ import os
 import threading
 from typing import Any, Callable, Optional, Sequence
 
+from repro.obs import metrics as obs_metrics
+
 _LOCK = threading.RLock()
 _CACHE: dict[tuple, Any] = {}
-_STATS = {"plan_hits": 0, "plan_misses": 0,
-          "program_hits": 0, "program_misses": 0}
+# Hit/miss counters live in the observability registry (repro.obs.metrics)
+# under plans.<name>; cache_stats() below stays as a thin compatibility shim
+# over them for existing callers/tests.
+_STAT_NAMES = ("plan_hits", "plan_misses", "program_hits", "program_misses")
+_STATS = {k: obs_metrics.registry().counter(f"plans.{k}")
+          for k in _STAT_NAMES}
 
 
 def cache_enabled() -> bool:
@@ -58,14 +64,18 @@ def clear_cache() -> None:
 
 
 def reset_stats() -> None:
-    with _LOCK:
-        for k in _STATS:
-            _STATS[k] = 0
+    for c in _STATS.values():
+        c.reset()
 
 
 def cache_stats() -> dict:
+    """Compatibility shim over the :mod:`repro.obs.metrics` registry: the
+    same ``{plan,program}_{hits,misses}`` + ``size`` dict this module always
+    returned, now read from the shared counters."""
     with _LOCK:
-        return dict(_STATS, size=len(_CACHE))
+        out = {k: int(c.value) for k, c in _STATS.items()}
+        out["size"] = len(_CACHE)
+        return out
 
 
 def _comm_key(comm) -> tuple:
@@ -95,8 +105,7 @@ def _cfg_key(cfg) -> tuple:
 def _memo(kind: str, key: tuple, build: Callable[[], Any],
           hit_ctr: str, miss_ctr: str):
     if not cache_enabled():
-        with _LOCK:
-            _STATS[miss_ctr] += 1
+        _STATS[miss_ctr].inc()
         return build()
     full = (kind,) + key
     # Hold the (reentrant) lock across lookup AND build: concurrent
@@ -105,10 +114,10 @@ def _memo(kind: str, key: tuple, build: Callable[[], Any],
     with _LOCK:
         cached = _CACHE.get(full)
         if cached is not None:
-            _STATS[hit_ctr] += 1
+            _STATS[hit_ctr].inc()
             return cached
         value = build()
-        _STATS[miss_ctr] += 1
+        _STATS[miss_ctr].inc()
         _CACHE[full] = value
         return value
 
@@ -253,13 +262,11 @@ class CommPlan:
         (the ACCL+ precompiled-plan replay).  ``build`` is only invoked on a
         miss; with the cache bypassed it runs every time."""
         if self._program is not None and cache_enabled():
-            with _LOCK:
-                _STATS["program_hits"] += 1
+            _STATS["program_hits"].inc()
             return self._program
         if build is None:
             return None
-        with _LOCK:
-            _STATS["program_misses"] += 1
+        _STATS["program_misses"].inc()
         prog = build()
         self._program = prog
         return prog

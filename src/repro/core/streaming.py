@@ -29,6 +29,7 @@ from jax import lax
 
 from repro.core.config import CommConfig, CommMode, Compression, Transport
 from repro.core import plans, plugins
+from repro.obs import trace as obs_trace
 
 
 def num_chunks(nbytes: int, cfg: CommConfig) -> int:
@@ -111,13 +112,17 @@ def chunked_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     received = []
     for i in range(n):
         payload = chunks[i]
-        if plan.ack_of[i] >= 0:
-            # Ack chain: chunk i waits until chunk i-window was delivered.
-            payload, _ = lax.optimization_barrier(
-                (payload, received[plan.ack_of[i]]))
-        enc, dec = plugins.wire_encode(payload, cfg)
-        out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm), enc)
-        received.append(dec(out))
+        with obs_trace.span("wire.chunk", cat="wire", chunk=i, of=n,
+                            elems=int(payload.size),
+                            acked=int(plan.ack_of[i])):
+            if plan.ack_of[i] >= 0:
+                # Ack chain: chunk i waits until chunk i-window was delivered.
+                payload, _ = lax.optimization_barrier(
+                    (payload, received[plan.ack_of[i]]))
+            enc, dec = plugins.wire_encode(payload, cfg)
+            out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm),
+                               enc)
+            received.append(dec(out))
     return unsplit(jnp.stack(received))
 
 
@@ -130,10 +135,11 @@ def buffered_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     landed (the paper's l_m staging-copy term, which also halves effective
     peak throughput to (1/bw_link + 1/bw_mem)^-1).
     """
-    enc, dec = plugins.wire_encode(x, cfg)
-    out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm), enc)
-    out = lax.optimization_barrier(out)
-    return dec(out)
+    with obs_trace.span("wire.message", cat="wire", elems=int(x.size)):
+        enc, dec = plugins.wire_encode(x, cfg)
+        out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm), enc)
+        out = lax.optimization_barrier(out)
+        return dec(out)
 
 
 def pipelined_consume(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
@@ -163,14 +169,18 @@ def pipelined_consume(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     received = []
     for i in range(n):
         payload = chunks[i]
-        if plan.ack_of[i] >= 0:
-            payload, _ = lax.optimization_barrier(
-                (payload, received[plan.ack_of[i]]))
-        enc, dec = plugins.wire_encode(payload, cfg)
-        out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm), enc)
-        r = dec(out)
-        received.append(r)
-        carry = consume(carry, i, r)
+        with obs_trace.span("wire.chunk", cat="wire", chunk=i, of=n,
+                            elems=int(chunk_elems),
+                            acked=int(plan.ack_of[i])):
+            if plan.ack_of[i] >= 0:
+                payload, _ = lax.optimization_barrier(
+                    (payload, received[plan.ack_of[i]]))
+            enc, dec = plugins.wire_encode(payload, cfg)
+            out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm),
+                               enc)
+            r = dec(out)
+            received.append(r)
+            carry = consume(carry, i, r)
     msg = jnp.stack(received).reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
     return carry, msg
 
@@ -208,30 +218,35 @@ def double_buffered_exchange(payloads: Sequence[jnp.ndarray],
     are bitwise-identical to a serialized exchange — only the dependency
     structure differs.
     """
+    from repro.core import topology
     bufs: tuple[list, list] = ([], [])
     carry = init
     received = []
     for r, (payload, perm) in enumerate(zip(payloads, perms)):
         buf = bufs[r % 2]
-        if cfg.transport == Transport.ORDERED and buf:
-            # Per-buffer ack chain: no cross-buffer serialization.
-            payload, _ = lax.optimization_barrier((payload, buf[-1]))
-        if cfg.mode == CommMode.STREAMING:
-            if chunk_consume is not None:
-                carry, msg = pipelined_consume(
-                    payload, perm, axis_name, cfg,
-                    lambda c, i, ch, _r=r: chunk_consume(c, _r, i, ch),
-                    carry, align=chunk_align)
+        hops = (perm.max_hops if isinstance(perm, topology.RoutedPerm)
+                else 1)
+        with obs_trace.span("round", cat="collective", round=r, buf=r % 2,
+                            hops=hops, elems=int(payload.size)):
+            if cfg.transport == Transport.ORDERED and buf:
+                # Per-buffer ack chain: no cross-buffer serialization.
+                payload, _ = lax.optimization_barrier((payload, buf[-1]))
+            if cfg.mode == CommMode.STREAMING:
+                if chunk_consume is not None:
+                    carry, msg = pipelined_consume(
+                        payload, perm, axis_name, cfg,
+                        lambda c, i, ch, _r=r: chunk_consume(c, _r, i, ch),
+                        carry, align=chunk_align)
+                else:
+                    carry, msg = pipelined_consume(
+                        payload, perm, axis_name, cfg,
+                        lambda c, _i, _chunk: c, carry)
+                    if consume is not None:
+                        carry = consume(carry, r, msg)
             else:
-                carry, msg = pipelined_consume(
-                    payload, perm, axis_name, cfg,
-                    lambda c, _i, _chunk: c, carry)
+                msg = buffered_permute(payload, perm, axis_name, cfg)
                 if consume is not None:
                     carry = consume(carry, r, msg)
-        else:
-            msg = buffered_permute(payload, perm, axis_name, cfg)
-            if consume is not None:
-                carry = consume(carry, r, msg)
         buf.append(msg)
         received.append(msg)
     return carry, received

@@ -1,0 +1,22 @@
+"""ACCL-X observability: comm-event tracing + metrics.
+
+The telemetry substrate under the comm stack — what lets you *see* where
+communication time goes (the paper's per-configuration/per-edge breakdowns,
+ACCL+'s collective-engine timing feed):
+
+- :mod:`repro.obs.trace`   — low-overhead span tracer (``REPRO_TRACE`` env
+  gate, thread-safe ring buffer, Chrome ``trace_event`` export for
+  Perfetto).  Instrumented through every layer: collectives, wire chunks,
+  driver phases, sweep candidates, watchdog events.
+- :mod:`repro.obs.metrics` — always-on registry of counters, gauges, and
+  fixed-bucket latency histograms (plan-cache hit/miss, bytes per edge,
+  rounds per exchange, sweep candidates pruned, straggler events).
+- :mod:`repro.obs.report`  — ``python -m repro.obs.report trace.json``
+  prints per-edge / per-collective latency tables from an exported trace.
+"""
+from repro.obs import metrics, trace
+from repro.obs.metrics import registry
+from repro.obs.trace import configure, enabled, events, flush, instant, span
+
+__all__ = ["configure", "enabled", "events", "flush", "instant", "metrics",
+           "registry", "span", "trace"]

@@ -24,10 +24,14 @@ import signal
 import statistics
 import threading
 import time
+from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 # ----------------------------------------------------------------------
@@ -42,14 +46,29 @@ class StragglerEvent:
 
 
 class StepWatchdog:
-    """Robust step-time outlier detection (median + k·MAD)."""
+    """Robust step-time outlier detection (median + k·MAD).
 
-    def __init__(self, k: float = 5.0, warmup: int = 5, window: int = 50):
+    Retention is bounded for long-running jobs: ``events`` keeps the most
+    recent ``max_events`` stragglers (older ones are counted in
+    ``events_dropped`` and the ``watchdog.events_dropped`` metrics counter,
+    never silently lost), and ``durations`` keeps enough history for the
+    rolling ``window`` plus a stable ``median_step`` — O(1) memory over an
+    unbounded run instead of one float per step forever.
+
+    Every completed step emits a ``watchdog.step`` instant event when
+    tracing is on; detected stragglers additionally emit
+    ``watchdog.straggler`` and bump the ``watchdog.stragglers`` counter.
+    """
+
+    def __init__(self, k: float = 5.0, warmup: int = 5, window: int = 50,
+                 max_events: int = 256):
         self.k = k
         self.warmup = warmup
         self.window = window
-        self.durations: list[float] = []
-        self.events: list[StragglerEvent] = []
+        self.max_events = max_events
+        self.durations: deque[float] = deque(maxlen=max(4 * window, 200))
+        self.events: deque[StragglerEvent] = deque(maxlen=max_events)
+        self.events_dropped = 0
         self._t0: Optional[float] = None
         self._step = 0
 
@@ -61,7 +80,7 @@ class StepWatchdog:
         if self._t0 is None:
             return None
         dt = time.perf_counter() - self._t0
-        hist = self.durations[-self.window:]
+        hist = list(self.durations)[-self.window:]
         event = None
         if len(hist) >= self.warmup:
             med = statistics.median(hist)
@@ -69,8 +88,18 @@ class StepWatchdog:
             thr = med + self.k * mad
             if dt > thr:
                 event = StragglerEvent(self._step, dt, thr)
+                if len(self.events) == self.events.maxlen:
+                    self.events_dropped += 1
+                    obs_metrics.registry().counter(
+                        "watchdog.events_dropped").inc()
                 self.events.append(event)
+                obs_metrics.registry().counter("watchdog.stragglers").inc()
+                obs_trace.instant("watchdog.straggler", cat="watchdog",
+                                  step=self._step, ms=dt * 1e3,
+                                  threshold_ms=thr * 1e3)
         self.durations.append(dt)
+        obs_trace.instant("watchdog.step", cat="watchdog", step=self._step,
+                          ms=dt * 1e3)
         return event
 
     @property

@@ -36,6 +36,7 @@ from jax import lax
 from repro.core import collectives, streaming
 from repro.core.communicator import Communicator
 from repro.core.config import CommConfig, Scheduling
+from repro.obs import trace as obs_trace
 from repro.swe.partition import PartitionedMesh
 
 G = 9.81
@@ -195,11 +196,14 @@ def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
     def step_serial(state, t, area, normals, neigh_idx, edge_type, valid,
                     send_idx, send_mask, recv_slot, boundary_idx):
         # 1. fire exchange (streaming: overlaps with local flux compute)
-        halo = exchange(state, send_idx, send_mask, recv_slot)
+        with obs_trace.span("swe.exchange", cat="phase",
+                            rounds=pm.n_rounds):
+            halo = exchange(state, send_idx, send_mask, recv_slot)
         # 2+3. fluxes (local edges depend only on state; remote edges read
         # the halo — XLA schedules the permutes against the local part)
-        f = fluxes(state, halo, normals, neigh_idx, edge_type, t)
-        return apply_update(state, f, area, valid)
+        with obs_trace.span("swe.update", cat="phase"):
+            f = fluxes(state, halo, normals, neigh_idx, edge_type, t)
+            return apply_update(state, f, area, valid)
 
     def step_overlapped(state, t, area, normals, neigh_idx, edge_type, valid,
                         send_idx, send_mask, recv_slot, boundary_idx):
@@ -208,20 +212,24 @@ def make_step_fn(pm: PartitionedMesh, comm_cfg: CommConfig, axis: str = "data",
         # the chunk permutes are in flight.  Boundary rows come out wrong
         # here and are overwritten below.
         zero_halo = jnp.zeros((pm.h_max, 3), state.dtype)
-        f_int = fluxes(state, zero_halo, normals, neigh_idx, edge_type, t)
-        new = apply_update(state, f_int, area, valid)
+        with obs_trace.span("swe.interior", cat="phase"):
+            f_int = fluxes(state, zero_halo, normals, neigh_idx, edge_type, t)
+            new = apply_update(state, f_int, area, valid)
         # Double-buffered exchange folds rounds into the halo as they land.
-        halo = exchange_overlapped(state, send_idx, send_mask, recv_slot)
+        with obs_trace.span("swe.exchange", cat="phase",
+                            rounds=pm.n_rounds):
+            halo = exchange_overlapped(state, send_idx, send_mask, recv_slot)
         # Boundary pass: recompute ONLY the elements with a remote edge
         # against the real halo, then scatter them over the interior result.
         # Padded boundary_idx entries duplicate a real row with identical
         # values, so the scatter stays deterministic.
-        ext = jnp.concatenate([state, halo], axis=0)
-        b = boundary_idx
-        f_b = edge_fluxes(state[b], ext[neigh_idx[b]], normals[b],
-                          edge_type[b], t)
-        new_b = apply_update(state[b], f_b, area[b], valid[b])
-        return new.at[b].set(new_b)
+        with obs_trace.span("swe.boundary", cat="phase"):
+            ext = jnp.concatenate([state, halo], axis=0)
+            b = boundary_idx
+            f_b = edge_fluxes(state[b], ext[neigh_idx[b]], normals[b],
+                              edge_type[b], t)
+            new_b = apply_update(state[b], f_b, area[b], valid[b])
+            return new.at[b].set(new_b)
 
     if comm_cfg.scheduling == Scheduling.OVERLAPPED:
         return step_overlapped

@@ -29,6 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.config import CommConfig, Scheduling
 from repro.core import latmodel
+from repro.obs import trace as obs_trace
 from repro.swe import dg_solver
 from repro.swe.dg_solver import SWEConfig, make_step_fn
 from repro.swe.mesh_gen import Mesh as SweMesh, generate_bight_mesh
@@ -184,7 +185,12 @@ def make_sim_runner(sim: Simulation, n_inner: int = 10):
     fn = jax.jit(sm)
 
     def run(state, t):
-        return fn(state, *arg_list, jnp.asarray(t, jnp.float32))
+        # Host wall-clock span: one fused dispatch of n_inner steps.  The
+        # dispatch is async, so the span covers launch, not completion —
+        # callers that need completion time block outside.
+        with obs_trace.span("swe.segment", cat="driver", steps=n_inner,
+                            scheduling=sim.comm_cfg.scheduling.value):
+            return fn(state, *arg_list, jnp.asarray(t, jnp.float32))
 
     return run
 
@@ -228,11 +234,14 @@ def make_host_scheduled_runner(sim: Simulation):
 
         def run(self, state, t, n_steps: int):
             for i in range(n_steps):
-                payload = gather_sm(state, args["send_idx"], args["send_mask"])
-                jax.block_until_ready(payload)     # host round-trip (l_k)
-                state = step_sm(state, *arg_list,
-                                jnp.asarray(t, jnp.float32))
-                jax.block_until_ready(state)
+                with obs_trace.span("swe.host_step", cat="driver", step=i,
+                                    dispatches=2):
+                    payload = gather_sm(state, args["send_idx"],
+                                        args["send_mask"])
+                    jax.block_until_ready(payload)  # host round-trip (l_k)
+                    state = step_sm(state, *arg_list,
+                                    jnp.asarray(t, jnp.float32))
+                    jax.block_until_ready(state)
                 self.dispatches += 2
                 t += swe.dt
             return state, t

@@ -15,6 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.checkpointer import AsyncCheckpointer
 from repro.data.pipeline import DataConfig, PrefetchLoader, SyntheticLM
 from repro.launch import setup as setup_mod
+from repro.obs import trace as obs_trace
 from repro.runtime.fault_tolerance import PreemptionGuard, StepWatchdog
 
 
@@ -58,9 +59,10 @@ def train(sess: setup_mod.Session, data_cfg: DataConfig, loop: LoopConfig,
         for i in range(start_step, start_step + loop.n_steps):
             batch = next(loader)
             watchdog.start_step(i)
-            params, opt_state, metrics = step_fn(params, opt_state,
-                                                 put(batch))
-            jax.block_until_ready(metrics["loss"])
+            with obs_trace.span("train.step", cat="train", step=i):
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     put(batch))
+                jax.block_until_ready(metrics["loss"])
             ev = watchdog.end_step()
             if ev is not None:
                 log(f"[straggler] step {ev.step}: {ev.duration*1e3:.1f}ms "

@@ -31,6 +31,8 @@ import numpy as np
 from repro.core import plans
 from repro.core.config import CommConfig, CommMode, Scheduling, V5E
 from repro.core.topology import TorusSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.tune import prune as tune_prune
 from repro.tune import space as tune_space
 from repro.tune.db import TuneDB, TuneEntry, default_db_path, topology_key
@@ -452,7 +454,14 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     stats = stats if stats is not None else {}
     stats.update(total=0, measured=0, pruned=0, errors=0, e2e_measured=0,
                  wall_s=0.0)
-    cache_before = plans.cache_stats()
+    # Plan-cache deltas come from the obs.metrics registry (the counters
+    # behind plans.cache_stats()), so the warm-sweep report shares one
+    # source of truth with every other telemetry consumer.
+    reg = obs_metrics.registry()
+    cache_ctrs = {k: reg.counter(f"plans.{k}") for k in
+                  ("plan_hits", "plan_misses",
+                   "program_hits", "program_misses")}
+    cache_before = {k: int(c.value) for k, c in cache_ctrs.items()}
     t_start = time.perf_counter()
 
     axis = mesh.axis_names[0]
@@ -529,6 +538,7 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                         objective="e2e" if consumer else "latency",
                         compute_s=compute_s, hops=hops)
                     stats["pruned"] += len(skipped)
+                    reg.counter("sweep.pruned").inc(len(skipped))
                     if skipped:
                         log(f"  prune {coll}/{msg_bytes}B: measuring "
                             f"{len(to_measure)}/{len(cands)} (model skipped "
@@ -539,12 +549,20 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                     try:
                         op = _build_op(coll, comm, cfg, subcomms=subcomms,
                                        hop_distance=hop_d)
-                        sec = timer(
-                            op, bench_mesh, msg_bytes, cfg,
-                            reps=reps, inner=inner,
-                            cache_key=("sweep", topo, torus, hop_d or 0,
-                                       _mesh_key(bench_mesh),
-                                       coll, cfg_key(cfg), int(msg_bytes)))
+                        with obs_trace.span("sweep.candidate", cat="sweep",
+                                            collective=coll,
+                                            msg_bytes=int(msg_bytes),
+                                            hops=hops, cfg=i) as sp:
+                            sec = timer(
+                                op, bench_mesh, msg_bytes, cfg,
+                                reps=reps, inner=inner,
+                                cache_key=("sweep", topo, torus, hop_d or 0,
+                                           _mesh_key(bench_mesh),
+                                           coll, cfg_key(cfg),
+                                           int(msg_bytes)))
+                            sp.set(us_per_call=sec * 1e6)
+                        reg.histogram("sweep.us",
+                                      collective=coll).observe(sec * 1e6)
                     except Exception as e:  # noqa: BLE001 — skip unrunnable combos
                         stats["errors"] += 1
                         log(f"  skip {coll}/{msg_bytes}B cfg{i}: "
@@ -565,6 +583,8 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                                            cfg_key(cfg), int(msg_bytes)))
                             e2e_us = e2e_sec * 1e6
                             stats["e2e_measured"] += 1
+                            reg.histogram("sweep.e2e_us",
+                                          collective=coll).observe(e2e_us)
                         except Exception as e:  # noqa: BLE001
                             stats["errors"] += 1
                             log(f"  skip e2e {coll}/{msg_bytes}B cfg{i}: "
@@ -591,9 +611,9 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                             f"({consumer}) "
                             f"{be.config['mode']}/{be.config['scheduling']}")
     stats["wall_s"] = time.perf_counter() - t_start
-    cache_after = plans.cache_stats()
-    for k in ("plan_hits", "plan_misses", "program_hits", "program_misses"):
-        stats[k] = cache_after[k] - cache_before.get(k, 0)
+    for k, c in cache_ctrs.items():
+        stats[k] = int(c.value) - cache_before[k]
+    stats["latency_hist"] = reg.find("sweep.us{")
     # The visible pruning win: scale the measured wall clock (minus any
     # calibration-seed overhead) back up to the exhaustive candidate count
     # (per-config cost assumed comparable).
@@ -618,6 +638,11 @@ def sweep_summary(stats: dict) -> str:
              f"{stats.get('program_misses', 0)} misses, "
              f"{stats.get('plan_hits', 0)} plan hits / "
              f"{stats.get('plan_misses', 0)} misses")
+    hists = stats.get("latency_hist") or {}
+    for name, h in sorted(hists.items()):
+        if h.get("count"):
+            line += (f"\n  {name}: p50 {h['p50']:.1f} us, "
+                     f"p95 {h['p95']:.1f} us over {h['count']} candidates")
     return line
 
 

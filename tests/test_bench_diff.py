@@ -70,9 +70,9 @@ def test_main_no_regressions_when_identical(tmp_path):
 
 def test_multi_baseline_enforcement(tmp_path):
     """Rows need >= 2 committed baselines to hard-fail; the reference is the
-    most lenient baseline; topo_ rows stay report-only.  The e2e_ rows
-    graduated to enforced now that two committed baselines carry them
-    (bench_pr4 + bench_pr5)."""
+    most lenient baseline.  The e2e_ rows graduated with bench_pr4 +
+    bench_pr5; the topo_ hop rows with bench_pr5 + bench_pr6 — both are
+    enforced now."""
     b1 = _write(tmp_path / "b1.json", {
         "fig9_accl_udp_p8": {"us_per_call": 100.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 10.0, "derived": ""},
@@ -91,7 +91,7 @@ def test_multi_baseline_enforcement(tmp_path):
         "e2e_rowpar_lat_winner_us": {"us_per_call": 90.0, "derived": ""},
         "topo_hops_sendrecv_h2_65536B": {"us_per_call": 80.0, "derived": ""},
     })
-    # the 2-baseline fig9 AND e2e rows are enforced -> exit 1
+    # the 2-baseline fig9, e2e AND topo rows are enforced -> exit 1
     assert bench_diff.main(["--old", b1, "--old", b2, "--new", new]) == 1
     # an e2e-only regression now gates too (promotion regression test)
     e2e_only = _write(tmp_path / "e2e_only.json", {
@@ -101,13 +101,21 @@ def test_multi_baseline_enforcement(tmp_path):
         "topo_hops_sendrecv_h2_65536B": {"us_per_call": 35.0, "derived": ""},
     })
     assert bench_diff.main(["--old", b1, "--old", b2, "--new", e2e_only]) == 1
-    # remove the enforced regressions: single-baseline + topo_ rows are
-    # report-only, so the gate passes even with both regressed
+    # a topo_-only regression gates as well (PR 6 promotion)
+    topo_only = _write(tmp_path / "topo_only.json", {
+        "fig9_accl_udp_p8": {"us_per_call": 110.0, "derived": ""},
+        "fig9_new_row": {"us_per_call": 20.0, "derived": ""},
+        "e2e_rowpar_lat_winner_us": {"us_per_call": 45.0, "derived": ""},
+        "topo_hops_sendrecv_h2_65536B": {"us_per_call": 80.0, "derived": ""},
+    })
+    assert bench_diff.main(["--old", b1, "--old", b2, "--new", topo_only]) == 1
+    # remove the enforced regressions: single-baseline rows stay
+    # report-only, so the gate passes with only fig9_new_row regressed
     ok = _write(tmp_path / "ok.json", {
         "fig9_accl_udp_p8": {"us_per_call": 110.0, "derived": ""},
         "fig9_new_row": {"us_per_call": 20.0, "derived": ""},      # 1 baseline
         "e2e_rowpar_lat_winner_us": {"us_per_call": 45.0, "derived": ""},
-        "topo_hops_sendrecv_h2_65536B": {"us_per_call": 80.0, "derived": ""},
+        "topo_hops_sendrecv_h2_65536B": {"us_per_call": 35.0, "derived": ""},
     })
     assert bench_diff.main(["--old", b1, "--old", b2, "--new", ok]) == 0
 
@@ -128,10 +136,15 @@ def test_split_enforced_tiers():
     hard, soft = bench_diff.split_enforced(
         regs, counts, n_baselines=2,
         report_only_prefixes=bench_diff.DEFAULT_REPORT_ONLY_PREFIXES)
-    # e2e_ rows are enforced now (>= 2 baselines, no longer a default
-    # report-only prefix); topo_ rows ride report-only
-    assert [r[0] for r in hard] == ["a", "e2e_x"]
-    assert sorted(r[0] for r in soft) == ["b", "topo_x"]
+    # e2e_ and topo_ rows are enforced now (>= 2 baselines, the default
+    # report-only prefix list is empty); only single-baseline rows ride soft
+    assert [r[0] for r in hard] == ["a", "e2e_x", "topo_x"]
+    assert [r[0] for r in soft] == ["b"]
+    # an explicit report-only prefix still works
+    hard2, soft2 = bench_diff.split_enforced(
+        regs, counts, n_baselines=2, report_only_prefixes=("topo_",))
+    assert [r[0] for r in hard2] == ["a", "e2e_x"]
+    assert sorted(r[0] for r in soft2) == ["b", "topo_x"]
     # single-baseline mode keeps the old semantics: everything enforced
     hard1, soft1 = bench_diff.split_enforced(
         regs, {"a": 1, "b": 1, "e2e_x": 1, "topo_x": 1}, 1, ())
