@@ -30,7 +30,7 @@ def _ensure_devices():
 def main() -> None:
     _ensure_devices()
     from benchmarks import (b_eff, e2e_objective, lm_collectives, lm_roofline,
-                            resources, swe_scaling, topology_hops)
+                            plan_store, resources, swe_scaling, topology_hops)
 
     print("name,us_per_call,derived")
     modules = [("b_eff(fig4)", b_eff), ("resources(fig3)", resources),
@@ -38,7 +38,8 @@ def main() -> None:
                ("lm_roofline", lm_roofline),
                ("lm_collectives", lm_collectives),
                ("e2e_objective", e2e_objective),
-               ("topology_hops", topology_hops)]
+               ("topology_hops", topology_hops),
+               ("plan_store", plan_store)]
     only = None
     json_path = "BENCH_comm.json"
     for a in sys.argv[1:]:
@@ -80,6 +81,13 @@ def main() -> None:
     for name, row in sorted(results.items()):
         if name.startswith("topo_hop_ratio"):
             print(f"# hop scaling {name}: measured "
+                  f"{row['us_per_call']:.2f}x, {row['derived']}",
+                  file=sys.stderr)
+    # Plan-store report: what disk persistence saves a fresh process
+    # (rows from plan_store; smaller ratio = better warm start).
+    for name, row in sorted(results.items()):
+        if name == "pstore_warm_ratio":
+            print(f"# plan store {name}: fresh-process warm/cold = "
                   f"{row['us_per_call']:.2f}x, {row['derived']}",
                   file=sys.stderr)
     if json_path:

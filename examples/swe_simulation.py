@@ -42,7 +42,21 @@ def main():
                          "count); multi-hop halo edges route through "
                          "intermediate partitions and --comm auto selects "
                          "a config per exchange round at its hop distance")
+    ap.add_argument("--plan-dir", default=None,
+                    help="persist CommPlans and compiled programs to this "
+                         "directory (or set REPRO_PLAN_DIR): a rerun of the "
+                         "same simulation starts warm — schedules replay "
+                         "from disk and XLA compiles come from the wired "
+                         "compilation cache")
     args = ap.parse_args()
+
+    from repro.core import planstore
+    if args.plan_dir is not None:
+        planstore.configure(args.plan_dir)
+    store = planstore.active()
+    if store is not None:
+        print(f"plan store: {store.root} "
+              f"({store.entry_count()} entries on disk)")
 
     n = jax.device_count()
     mesh = jax.make_mesh((n,), ("data",))
@@ -88,6 +102,12 @@ def main():
           f"(drift {(m1-m0)/m0:.2e})")
     print(f"watchdog: median segment {watchdog.median_step*1e3:.1f}ms, "
           f"{len(watchdog.events)} straggler(s)")
+    if store is not None:
+        from repro.core import plans
+        st = plans.cache_stats()
+        print(f"plan store: {st['disk_hits']} disk hits / "
+              f"{st['disk_misses']} misses / {st['disk_writes']} writes "
+              f"-> {store.root}")
     if obs_trace.enabled():
         print(f"tracing: {len(obs_trace.events())} events buffered "
               f"(REPRO_TRACE={obs_trace.mode()!r})")

@@ -23,7 +23,12 @@ Cache control:
 - ``REPRO_PLAN_CACHE=0`` bypasses the cache entirely (every call re-derives);
 - :func:`clear_cache` empties it (e.g. between benchmark phases);
 - :func:`cache_stats` reports hit/miss counters, split by plan vs program —
-  the sweep CLI surfaces these in its wall-clock summary.
+  the sweep CLI surfaces these in its wall-clock summary;
+- ``REPRO_PLAN_DIR=/path`` (or :func:`repro.core.planstore.configure`) adds
+  the disk tier: plan entries persist as versioned JSON and traced programs
+  through JAX's persistent compilation cache, so a *fresh process* starts
+  warm — lookups go memory → disk → build, and every disk outcome lands on
+  the ``plans.disk_hits`` / ``plans.disk_misses`` counters.
 
 Keying/invalidation: a plan key is the full value tuple
 ``(kind, collective, comm_key, cfg_key, shape, dtype, extra)``.  Any change
@@ -35,15 +40,21 @@ entries are simply never looked up again.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import math
 import os
 import threading
 from typing import Any, Callable, Optional, Sequence
 
+from repro.core import planstore
 from repro.obs import metrics as obs_metrics
 
 _LOCK = threading.RLock()
 _CACHE: dict[tuple, Any] = {}
+# Lookup sentinel: a cached value may legitimately be falsy or None (a build
+# that derived "nothing to do"), so presence is tested against this object,
+# never by truthiness.
+_MISSING = object()
 # Hit/miss counters live in the observability registry (repro.obs.metrics)
 # under plans.<name>; cache_stats() below stays as a thin compatibility shim
 # over them for existing callers/tests.
@@ -66,15 +77,18 @@ def clear_cache() -> None:
 def reset_stats() -> None:
     for c in _STATS.values():
         c.reset()
+    planstore.reset_disk_stats()
 
 
 def cache_stats() -> dict:
     """Compatibility shim over the :mod:`repro.obs.metrics` registry: the
     same ``{plan,program}_{hits,misses}`` + ``size`` dict this module always
-    returned, now read from the shared counters."""
+    returned, now read from the shared counters, plus the disk-tier
+    ``disk_{hits,misses,writes,corrupt}`` counts."""
     with _LOCK:
         out = {k: int(c.value) for k, c in _STATS.items()}
         out["size"] = len(_CACHE)
+        out.update(planstore.disk_stats())
         return out
 
 
@@ -95,11 +109,29 @@ def _comm_key(comm) -> tuple:
     return (tuple(comm), ())
 
 
+# Bump when the _cfg_key encoding changes shape: the stamp rides every
+# persisted key, so old disk entries turn into misses instead of aliasing.
+CFG_KEY_SCHEMA = "cfg-v2"
+
+
 def _cfg_key(cfg) -> tuple:
-    """CommConfig is a frozen dataclass — its field tuple is the key."""
+    """Canonical, stably serializable identity of a CommConfig.
+
+    ``dataclasses.astuple`` would yield enum *objects*, which JSON cannot
+    carry and whose ordering is positional (a field reorder silently aliases
+    old keys).  Instead each field becomes a ``(name, primitive)`` pair with
+    enum members folded to their string values, stamped with
+    :data:`CFG_KEY_SCHEMA` so any future encoding change invalidates every
+    persisted key at once."""
     if cfg is None:
         return ()
-    return tuple(dataclasses.astuple(cfg))
+    out: list = [CFG_KEY_SCHEMA]
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        if isinstance(v, enum.Enum):
+            v = v.value
+        out.append((f.name, v))
+    return tuple(out)
 
 
 def _memo(kind: str, key: tuple, build: Callable[[], Any],
@@ -112,13 +144,23 @@ def _memo(kind: str, key: tuple, build: Callable[[], Any],
     # same-key callers must not duplicate a multi-second jit compile or
     # double-count the miss.
     with _LOCK:
-        cached = _CACHE.get(full)
-        if cached is not None:
+        cached = _CACHE.get(full, _MISSING)
+        if cached is not _MISSING:
             _STATS[hit_ctr].inc()
             return cached
+        store = planstore.active()
+        persistable = store is not None and kind in planstore.DISK_KINDS
+        if persistable:
+            value = store.get(kind, key)
+            if value is not planstore.MISSING:
+                _STATS[hit_ctr].inc()
+                _CACHE[full] = value
+                return value
         value = build()
         _STATS[miss_ctr].inc()
         _CACHE[full] = value
+        if persistable:
+            store.put(kind, key, value)
         return value
 
 
@@ -261,15 +303,26 @@ class CommPlan:
         """The plan's jitted program: built on first request, replayed after
         (the ACCL+ precompiled-plan replay).  ``build`` is only invoked on a
         miss; with the cache bypassed it runs every time."""
-        if self._program is not None and cache_enabled():
-            _STATS["program_hits"].inc()
-            return self._program
-        if build is None:
-            return None
-        _STATS["program_misses"].inc()
-        prog = build()
-        self._program = prog
-        return prog
+        if not cache_enabled():
+            if build is None:
+                return None
+            _STATS["program_misses"].inc()
+            prog = build()
+            self._program = prog
+            return prog
+        # Hold the module lock across check AND build, same as _memo: two
+        # threads racing a cold plan must not both pay a multi-second jit
+        # build or double-count the miss.
+        with _LOCK:
+            if self._program is not None:
+                _STATS["program_hits"].inc()
+                return self._program
+            if build is None:
+                return None
+            _STATS["program_misses"].inc()
+            prog = build()
+            self._program = prog
+            return prog
 
 
 def get_plan(collective: str, comm, cfg, shape: Sequence[int], dtype,
@@ -328,12 +381,48 @@ def get_plan(collective: str, comm, cfg, shape: Sequence[int], dtype,
 # Jitted-program cache (host-level entry points)
 # ----------------------------------------------------------------------
 
-def jitted_program(key: Sequence, build: Callable[[], Callable]) -> Callable:
+def jitted_program(key: Sequence, build: Callable[[], Callable],
+                   example_args: tuple | None = None) -> Callable:
     """Cache a compiled host-level program under a value key.
 
     The sweep engine routes every microbenchmark/consumer-loop program
     through this, so a warm sweep (same process, same collective/config/
     size/topology) replays the compiled program with zero rebuild and zero
-    retrace — the plan-cache half of the warm-sweep wall-clock win."""
-    return _memo("program", tuple(key), build,
-                 "program_hits", "program_misses")
+    retrace — the plan-cache half of the warm-sweep wall-clock win.
+
+    With ``example_args`` given AND a plan store active
+    (``REPRO_PLAN_DIR``), the program additionally persists *across
+    processes*: on a miss the jitted callable is AOT-compiled against the
+    example arguments and the executable serialized to disk; a fresh
+    process deserializes and replays it, paying neither trace nor XLA
+    compile — the ACCL+ precompiled-plan restart.  Callers must then invoke
+    the returned program with arguments matching ``example_args`` in shape,
+    dtype, and sharding.  When AOT compile/serialization is unavailable the
+    plain jitted callable is returned (memory-only, as before)."""
+    full = tuple(key)
+    store = planstore.active() if cache_enabled() else None
+    if example_args is None or store is None:
+        return _memo("program", full, build,
+                     "program_hits", "program_misses")
+    with _LOCK:
+        cached = _CACHE.get(("program",) + full, _MISSING)
+        if cached is not _MISSING:
+            _STATS["program_hits"].inc()
+            return cached
+        value = store.get_executable(full)
+        if value is not planstore.MISSING:
+            _STATS["program_hits"].inc()
+            _CACHE[("program",) + full] = value
+            return value
+        fn = build()
+        _STATS["program_misses"].inc()
+        compiled = None
+        try:
+            compiled = fn.lower(*example_args).compile()
+        except Exception:  # noqa: BLE001 — AOT is an optimization only
+            compiled = None
+        if compiled is not None:
+            store.put_executable(full, compiled)
+            fn = compiled
+        _CACHE[("program",) + full] = fn
+        return fn

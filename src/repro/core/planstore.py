@@ -1,0 +1,419 @@
+"""Disk-backed CommPlan/program store — warm starts across processes.
+
+The in-process :mod:`repro.core.plans` cache reproduces the ACCL+ resident
+plan store and wins ~35x on warm sweeps, but every new CLI invocation, CI
+job, and serving replica starts cold: full rebuild of every schedule plus a
+full XLA recompile of every program.  This module is the persistence layer
+that closes that gap — a versioned, crash-safe, shared directory of plan
+entries keyed by the exact same value scheme the in-memory cache uses:
+
+- **Plan entries** (chunk layouts, edge-color rounds, ring/neighbor perms,
+  aggregate :class:`~repro.core.plans.CommPlan`) serialize to one small JSON
+  file each under ``<dir>/plans/``.  Keys are canonicalized to pure JSON
+  primitives (``plans._cfg_key`` stamps a schema version and folds enum
+  members to their string values) and hashed into the filename; the full key
+  is stored in the entry and checked on read, so a hash collision or a
+  recycled file can never answer the wrong lookup.
+- **Traced programs** persist two ways.  Host-level programs whose example
+  arguments are known at build time (the sweep's jitted microbenchmarks,
+  via ``plans.jitted_program(..., example_args=...)``) are AOT-compiled and
+  serialized whole (``jax.experimental.serialize_executable``) under
+  ``<dir>/programs/`` — a fresh process deserializes and runs, paying
+  neither trace nor compile.  Everything else goes through **JAX's
+  persistent compilation cache**: activating a store points
+  ``jax_compilation_cache_dir`` at ``<dir>/xla-cache/`` (with the
+  min-size/min-time thresholds dropped so every program qualifies), so a
+  fresh process re-traces but replays the expensive XLA compile from disk.
+
+Durability contract:
+
+- **Atomic writes** — entries are written to a unique temp file in the same
+  directory and ``os.replace``d into place; a reader never observes a torn
+  entry, and two processes racing the same key both land a valid file (last
+  writer wins with identical content).
+- **Corrupt/stale entries are misses, never crashes** — unparseable JSON, a
+  schema-version mismatch, a key mismatch, or an undecodable value all count
+  ``plans.disk_misses`` (and ``plans.disk_corrupt``), best-effort unlink the
+  bad file, and let the caller rebuild and overwrite.
+- **Versioning** — every entry embeds :data:`SCHEMA_VERSION`; bumping it (or
+  the ``plans._cfg_key`` schema stamp) invalidates the whole store in place
+  without a migration step.
+
+Activation: set ``REPRO_PLAN_DIR=/path`` (picked up lazily, survives the
+sweep CLI's re-exec) or call :func:`configure` (the ``--plan-dir`` CLI
+flags).  When no directory is configured the module is inert and the plan
+cache behaves exactly as before — memory-only.
+
+Counters (in the :mod:`repro.obs.metrics` registry): ``plans.disk_hits``,
+``plans.disk_misses``, ``plans.disk_writes``, ``plans.disk_corrupt``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+from repro.obs import metrics as obs_metrics
+
+SCHEMA_VERSION = 1
+ENV_VAR = "REPRO_PLAN_DIR"
+
+# plans._memo kinds whose values serialize to JSON and persist here.
+# "program" (compiled callables) is deliberately absent: it persists through
+# the JAX compilation cache wired by _wire_jax_cache instead.
+DISK_KINDS = frozenset({"chunks", "rounds", "ring", "perm", "plan"})
+
+#: Sentinel returned by :meth:`PlanStore.get` when no usable entry exists
+#: (distinct from a legitimately-cached ``None`` value).
+MISSING = object()
+
+_LOCK = threading.RLock()
+_OVERRIDE: Optional[str] = None      # configure() override; None = env rules
+_EXPLICIT = False                    # configure() was called (even with "")
+_STORES: dict[str, "PlanStore"] = {}
+_WIRED_DIRS: set[str] = set()
+
+_DISK_STAT_NAMES = ("disk_hits", "disk_misses", "disk_writes", "disk_corrupt")
+_DISK_STATS = {k: obs_metrics.registry().counter(f"plans.{k}")
+               for k in _DISK_STAT_NAMES}
+
+
+def configure(path: os.PathLike | str | None, wire_jax: bool = True
+              ) -> Optional[Path]:
+    """Explicitly set the store directory (CLI ``--plan-dir``).
+
+    ``path=None`` clears the override so ``REPRO_PLAN_DIR`` governs again;
+    ``path=""`` disables the store even when the env var is set.  Returns
+    the resolved directory (None when disabled).  ``wire_jax=False`` skips
+    pointing JAX's compilation cache at the store (unit tests that must not
+    mutate global jax config).
+    """
+    global _OVERRIDE, _EXPLICIT
+    with _LOCK:
+        _OVERRIDE = str(path) if path is not None else None
+        _EXPLICIT = path is not None
+    store = active(wire_jax=wire_jax)
+    return store.root if store is not None else None
+
+
+def plan_dir() -> Optional[Path]:
+    """The configured store directory: explicit :func:`configure` override
+    first, then ``REPRO_PLAN_DIR``; None when neither is set."""
+    with _LOCK:
+        if _EXPLICIT:
+            return Path(_OVERRIDE) if _OVERRIDE else None
+    env = os.environ.get(ENV_VAR, "")
+    return Path(env) if env else None
+
+
+def active(wire_jax: bool = True) -> Optional["PlanStore"]:
+    """The live :class:`PlanStore` for the configured directory, or None
+    when persistence is off.  First activation of a directory wires the JAX
+    persistent compilation cache into it (the traced-program half)."""
+    d = plan_dir()
+    if d is None:
+        return None
+    key = str(d)
+    with _LOCK:
+        store = _STORES.get(key)
+        if store is None:
+            store = _STORES[key] = PlanStore(d)
+        if wire_jax and key not in _WIRED_DIRS:
+            _WIRED_DIRS.add(key)
+            _wire_jax_cache(d)
+    return store
+
+
+def disk_stats() -> dict:
+    """Current ``plans.disk_*`` counter values."""
+    return {k: int(c.value) for k, c in _DISK_STATS.items()}
+
+
+def reset_disk_stats() -> None:
+    for c in _DISK_STATS.values():
+        c.reset()
+
+
+def _wire_jax_cache(root: Path) -> None:
+    """Point JAX's persistent compilation cache at ``<root>/xla-cache`` so
+    traced programs (the sweep's jitted microbenchmarks, the driver's step
+    programs) skip XLA compilation in every later process.  Thresholds are
+    dropped to zero so the small host-CPU programs of the emulated runs
+    qualify.  Best-effort: an old jax without a knob just skips it."""
+    try:
+        import jax
+    except Exception:  # noqa: BLE001 — store stays usable for plan entries
+        return
+    cache_dir = root / "xla-cache"
+    try:
+        cache_dir.mkdir(parents=True, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    except Exception:  # noqa: BLE001
+        return
+    for name, value in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                        ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(name, value)
+        except Exception:  # noqa: BLE001
+            pass
+
+
+# ----------------------------------------------------------------------
+# Key canonicalization
+# ----------------------------------------------------------------------
+
+def canonical_key(key: Any) -> str:
+    """Deterministic JSON encoding of a plan key.
+
+    Keys are nested tuples of JSON primitives (the ``plans._cfg_key``
+    canonicalization guarantees no enum objects leak in); tuples become
+    lists.  Anything else raises ``TypeError`` — the caller treats the key
+    as non-persistable and stays memory-only rather than writing a lossy
+    entry."""
+    return json.dumps(_jsonable_key(key), separators=(",", ":"),
+                      allow_nan=False)
+
+
+def _jsonable_key(obj: Any) -> Any:
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable_key(v) for v in obj]
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    raise TypeError(f"non-serializable plan-key component: {obj!r} "
+                    f"({type(obj).__name__})")
+
+
+def _tuplify(obj: Any) -> Any:
+    """Inverse of :func:`_jsonable_key` for values: JSON lists back to the
+    tuples the in-memory cache stores."""
+    if isinstance(obj, list):
+        return tuple(_tuplify(v) for v in obj)
+    return obj
+
+
+# ----------------------------------------------------------------------
+# Value (de)serialization per kind
+# ----------------------------------------------------------------------
+
+def _encode_value(kind: str, value: Any) -> Any:
+    if kind == "chunks":
+        return {"n_chunks": value.n_chunks, "chunk_elems": value.chunk_elems,
+                "ack_of": list(value.ack_of)}
+    if kind == "plan":
+        chunks = None
+        if value.chunks is not None:
+            chunks = _encode_value("chunks", value.chunks)
+        return {"collective": value.collective,
+                "comm_key": _jsonable_key(value.comm_key),
+                "cfg_key": _jsonable_key(value.cfg_key),
+                "shape": list(value.shape), "dtype": value.dtype,
+                "chunks": chunks, "rounds": _jsonable_key(value.rounds),
+                "perms": _jsonable_key(value.perms),
+                "ring": _jsonable_key(value.ring),
+                "extra": _jsonable_key(value.extra)}
+    # rounds / ring / perm: nested tuples of ints
+    return _jsonable_key(value)
+
+
+def _decode_value(kind: str, payload: Any) -> Any:
+    from repro.core import plans
+    if kind == "chunks":
+        return plans.ChunkPlan(n_chunks=int(payload["n_chunks"]),
+                               chunk_elems=int(payload["chunk_elems"]),
+                               ack_of=tuple(int(a) for a in payload["ack_of"]))
+    if kind == "plan":
+        chunks = (None if payload["chunks"] is None
+                  else _decode_value("chunks", payload["chunks"]))
+        return plans.CommPlan(
+            collective=payload["collective"],
+            comm_key=_tuplify(payload["comm_key"]),
+            cfg_key=_tuplify(payload["cfg_key"]),
+            shape=tuple(int(s) for s in payload["shape"]),
+            dtype=payload["dtype"], chunks=chunks,
+            rounds=_tuplify(payload["rounds"]),
+            perms=_tuplify(payload["perms"]),
+            ring=_tuplify(payload["ring"]),
+            extra=_tuplify(payload["extra"]))
+    return _tuplify(payload)
+
+
+# ----------------------------------------------------------------------
+# The store
+# ----------------------------------------------------------------------
+
+class PlanStore:
+    """One plan directory: JSON plan entries + the XLA compilation cache.
+
+    Thread-safe within a process (the module lock covers filesystem ops);
+    cross-process safety comes from atomic replace-on-write — concurrent
+    writers of one key both produce a valid file, readers see old or new,
+    never torn."""
+
+    def __init__(self, root: os.PathLike | str):
+        self.root = Path(root)
+        self.plans_path = self.root / "plans"
+        self.programs_path = self.root / "programs"
+
+    def _entry_path(self, kind: str, canon: str) -> Path:
+        digest = hashlib.sha256(
+            f"{kind}\x00{canon}".encode()).hexdigest()[:32]
+        return self.plans_path / f"{kind}-{digest}.json"
+
+    def get(self, kind: str, key: Any) -> Any:
+        """The stored value for ``(kind, key)``, or :data:`MISSING`.
+
+        Every failure mode — absent file, torn/corrupt JSON, schema-version
+        mismatch, key mismatch, undecodable value — is a miss: the bad file
+        is best-effort removed and the caller rebuilds and overwrites."""
+        try:
+            canon = canonical_key(key)
+        except TypeError:
+            return MISSING
+        path = self._entry_path(kind, canon)
+        try:
+            raw = path.read_text()
+        except (OSError, UnicodeDecodeError):
+            _DISK_STATS["disk_misses"].inc()
+            return MISSING
+        try:
+            entry = json.loads(raw)
+            if (entry.get("schema") != SCHEMA_VERSION
+                    or entry.get("kind") != kind
+                    or entry.get("key") != json.loads(canon)):
+                raise ValueError("stale or mismatched entry")
+            value = _decode_value(kind, entry["value"])
+        except Exception:  # noqa: BLE001 — any bad entry is a rebuildable miss
+            _DISK_STATS["disk_corrupt"].inc()
+            _DISK_STATS["disk_misses"].inc()
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return MISSING
+        _DISK_STATS["disk_hits"].inc()
+        return value
+
+    def put(self, kind: str, key: Any, value: Any) -> bool:
+        """Persist ``value`` under ``(kind, key)`` atomically (write a
+        unique temp file, then ``os.replace``).  Returns False — without
+        raising — when the key/value is not serializable or the filesystem
+        refuses; persistence is an optimization, never a failure source."""
+        try:
+            canon = canonical_key(key)
+            payload = {"schema": SCHEMA_VERSION, "kind": kind,
+                       "key": json.loads(canon),
+                       "value": _encode_value(kind, value)}
+            blob = json.dumps(payload, separators=(",", ":"),
+                              allow_nan=False)
+        except (TypeError, ValueError, AttributeError):
+            return False
+        path = self._entry_path(kind, canon)
+        tmp = path.with_name(
+            f"{path.name}.{os.getpid()}.{threading.get_ident()}.tmp")
+        try:
+            self.plans_path.mkdir(parents=True, exist_ok=True)
+            tmp.write_text(blob)
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                tmp.unlink()
+            except OSError:
+                pass
+            return False
+        _DISK_STATS["disk_writes"].inc()
+        return True
+
+    # ------------------------------------------------------------------
+    # Serialized executables (the traced-program half)
+    # ------------------------------------------------------------------
+    def _exec_path(self, canon: str) -> Path:
+        digest = hashlib.sha256(f"xprog\x00{canon}".encode()).hexdigest()[:32]
+        return self.programs_path / f"program-{digest}.pkl"
+
+    def get_executable(self, key: Any) -> Any:
+        """Deserialize + load a persisted compiled program for ``key``, or
+        :data:`MISSING`.  The loaded executable replays with zero trace and
+        zero compile — the ACCL+ precompiled-plan restart.  Any failure
+        (absent, torn, version-mismatched, device-mismatched, old-jax pickle
+        drift) is a rebuildable miss."""
+        import pickle
+        try:
+            canon = canonical_key(key)
+        except TypeError:
+            return MISSING
+        path = self._exec_path(canon)
+        if not path.exists():
+            _DISK_STATS["disk_misses"].inc()
+            return MISSING
+        try:
+            from jax.experimental import serialize_executable
+            with path.open("rb") as f:
+                entry = pickle.load(f)
+            if (entry.get("schema") != SCHEMA_VERSION
+                    or entry.get("key") != canon):
+                raise ValueError("stale or mismatched program entry")
+            compiled = serialize_executable.deserialize_and_load(
+                *entry["payload"])
+        except Exception:  # noqa: BLE001 — any bad program is a miss
+            _DISK_STATS["disk_corrupt"].inc()
+            _DISK_STATS["disk_misses"].inc()
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return MISSING
+        _DISK_STATS["disk_hits"].inc()
+        return compiled
+
+    def put_executable(self, key: Any, compiled: Any) -> bool:
+        """Serialize an AOT-compiled program (``jax.jit(f).lower(...)
+        .compile()`` result) atomically.  Returns False when the backend
+        cannot serialize executables or the key is non-canonical."""
+        import pickle
+        try:
+            canon = canonical_key(key)
+            from jax.experimental import serialize_executable
+            payload = serialize_executable.serialize(compiled)
+            blob = pickle.dumps({"schema": SCHEMA_VERSION, "key": canon,
+                                 "payload": payload})
+        except Exception:  # noqa: BLE001 — persistence never raises
+            return False
+        path = self._exec_path(canon)
+        tmp = path.with_name(
+            f"{path.name}.{os.getpid()}.{threading.get_ident()}.tmp")
+        try:
+            self.programs_path.mkdir(parents=True, exist_ok=True)
+            tmp.write_bytes(blob)
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                tmp.unlink()
+            except OSError:
+                pass
+            return False
+        _DISK_STATS["disk_writes"].inc()
+        return True
+
+    def entry_count(self) -> int:
+        try:
+            return (sum(1 for _ in self.plans_path.glob("*.json"))
+                    + sum(1 for _ in self.programs_path.glob("*.pkl")))
+        except OSError:
+            return 0
+
+    def clear(self) -> None:
+        """Delete every plan and program entry (the XLA compilation cache
+        is left to jax)."""
+        for pattern, root in (("*.json", self.plans_path),
+                              ("*.pkl", self.programs_path)):
+            try:
+                for p in root.glob(pattern):
+                    try:
+                        p.unlink()
+                    except OSError:
+                        pass
+            except OSError:
+                pass

@@ -2,7 +2,9 @@
 
 The always-on half of the observability substrate (tracing is opt-in, a
 counter bump is a dict lookup + integer add): the plan cache's hit/miss
-counters, per-edge byte counters, exchange round counts, sweep latency
+counters (including the disk tier's ``plans.disk_hits`` / ``disk_misses`` /
+``disk_writes`` / ``disk_corrupt``), per-edge byte counters, exchange round
+counts, sweep latency
 histograms, and the watchdog's straggler/dropped-event counters all live
 here.  ACCL+ exposes per-collective timing from its collective engine to
 drive tuning; this registry is that feed for ACCL-X — ``snapshot()`` is what

@@ -80,6 +80,10 @@ class StepWatchdog:
         if self._t0 is None:
             return None
         dt = time.perf_counter() - self._t0
+        # Consume the start mark: a second end_step at the same boundary is
+        # a no-op instead of appending the duration twice (which would skew
+        # the median and could emit a phantom straggler).
+        self._t0 = None
         hist = list(self.durations)[-self.window:]
         event = None
         if len(hist) >= self.warmup:

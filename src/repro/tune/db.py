@@ -199,20 +199,28 @@ class TuneDB:
         path.parent.mkdir(parents=True, exist_ok=True)
         payload = {"version": DB_VERSION,
                    "entries": [dataclasses.asdict(e) for e in self.entries]}
-        tmp = path.with_suffix(".tmp")
+        # Unique temp name + atomic replace: two processes saving the same
+        # DB concurrently never collide on the temp file or tear the target.
+        tmp = path.with_name(f"{path.name}.{os.getpid()}.tmp")
         tmp.write_text(json.dumps(payload, indent=1, sort_keys=True))
         tmp.replace(path)
         return path
 
     @classmethod
     def load(cls, path: os.PathLike | str | None = None) -> "TuneDB":
+        """Load a DB; a missing, torn, corrupt, or schema-incompatible file
+        yields an empty DB (the sweep rebuilds and overwrites) — a damaged
+        cache must never take the tuner down."""
         path = Path(path) if path is not None else default_db_path()
         if not path.exists():
             return cls()
-        payload = json.loads(path.read_text())
-        if payload.get("version") != DB_VERSION:
+        try:
+            payload = json.loads(path.read_text())
+            if payload.get("version") != DB_VERSION:
+                return cls()
+            return cls([TuneEntry(**e) for e in payload.get("entries", ())])
+        except (OSError, ValueError, TypeError):
             return cls()
-        return cls([TuneEntry(**e) for e in payload.get("entries", ())])
 
 
 def select_config(collective: str, msg_bytes: int, mesh=None,

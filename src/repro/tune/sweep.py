@@ -20,15 +20,17 @@ CLI::
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
 from functools import partial
+from pathlib import Path
 from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core import plans
+from repro.core import plans, planstore
 from repro.core.config import CommConfig, CommMode, Scheduling, V5E
 from repro.core.topology import TorusSpec
 from repro.obs import metrics as obs_metrics
@@ -307,7 +309,11 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
     n = mesh.devices.size
     if per_dev_shape is None:
         per_dev_shape = (_payload_elems(msg_bytes, n),)
-    x = jnp.zeros((n,) + tuple(per_dev_shape), jnp.float32)
+    # Committed to the output sharding up front: every call (including the
+    # first) then presents one input layout, so the program compiles once
+    # and an AOT-serialized executable replays for all of them.
+    x = jax.device_put(jnp.zeros((n,) + tuple(per_dev_shape), jnp.float32),
+                       jax.sharding.NamedSharding(mesh, spec))
 
     def build_single():
         return jax.jit(compat.shard_map(
@@ -328,7 +334,8 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
 
         if cache_key is not None:
             fn = plans.jitted_program(
-                cache_key + ("many", inner, tuple(per_dev_shape)), build_many)
+                cache_key + ("many", inner, tuple(per_dev_shape)), build_many,
+                example_args=(x,))
         else:
             fn = build_many()
         for _ in range(warmup):
@@ -342,7 +349,8 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
     # Host scheduling: one dispatch per op, host blocks between dispatches.
     if cache_key is not None:
         single = plans.jitted_program(
-            cache_key + ("single", tuple(per_dev_shape)), build_single)
+            cache_key + ("single", tuple(per_dev_shape)), build_single,
+            example_args=(x,))
     else:
         single = build_single()
     for _ in range(warmup):
@@ -460,7 +468,8 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     reg = obs_metrics.registry()
     cache_ctrs = {k: reg.counter(f"plans.{k}") for k in
                   ("plan_hits", "plan_misses",
-                   "program_hits", "program_misses")}
+                   "program_hits", "program_misses",
+                   "disk_hits", "disk_misses")}
     cache_before = {k: int(c.value) for k, c in cache_ctrs.items()}
     t_start = time.perf_counter()
 
@@ -638,6 +647,9 @@ def sweep_summary(stats: dict) -> str:
              f"{stats.get('program_misses', 0)} misses, "
              f"{stats.get('plan_hits', 0)} plan hits / "
              f"{stats.get('plan_misses', 0)} misses")
+    if stats.get("disk_hits", 0) or stats.get("disk_misses", 0):
+        line += (f" — plan store: {stats.get('disk_hits', 0)} disk hits / "
+                 f"{stats.get('disk_misses', 0)} disk misses")
     hists = stats.get("latency_hist") or {}
     for name, h in sorted(hists.items()):
         if h.get("count"):
@@ -663,7 +675,76 @@ def _ensure_devices(n: int) -> None:
                  [sys.executable, "-m", "repro.tune.sweep"] + sys.argv[1:])
 
 
+def _dump_stats_json(stats: dict) -> None:
+    """Machine-readable stats channel: when REPRO_SWEEP_STATS_JSON names a
+    path, the (first) sweep's stats dict is written there — how the
+    cross-process warm check (and CI) reads a child sweep's wall clock and
+    disk hit counts without parsing log lines."""
+    path = os.environ.get("REPRO_SWEEP_STATS_JSON")
+    if not path:
+        return
+    payload = {k: v for k, v in stats.items() if k != "latency_hist"}
+    Path(path).write_text(json.dumps(payload))
+
+
+def _cross_process_warm_check(child_argv: Sequence[str],
+                              cold_s: float) -> int:
+    """The second half of ``--warm-check`` when a plan store is active:
+    re-run this exact sweep in a FRESH python process against the populated
+    plan dir.  The child must replay plans from disk (``plans.disk_hits``
+    > 0) and report a sweep wall clock >= 30% below this process's cold
+    run — proving the *disk* store and the persistent compilation cache,
+    not the in-process cache, are what make a restart start warm."""
+    import subprocess
+    import tempfile
+
+    argv = [a for a in child_argv if a != "--warm-check"]
+    fd, stats_path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    env = dict(os.environ)
+    env.pop("REPRO_TUNE_NO_REEXEC", None)
+    env["REPRO_SWEEP_STATS_JSON"] = stats_path
+    env[planstore.ENV_VAR] = str(planstore.plan_dir())
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.tune.sweep", *argv],
+            capture_output=True, text=True, env=env)
+        if proc.returncode != 0:
+            print("CROSS-PROCESS WARM-CHECK FAILED: child sweep exited "
+                  f"{proc.returncode}\n{proc.stdout[-2000:]}"
+                  f"\n{proc.stderr[-2000:]}", file=sys.stderr)
+            return 5
+        try:
+            child = json.loads(Path(stats_path).read_text())
+        except (OSError, ValueError):
+            print("CROSS-PROCESS WARM-CHECK FAILED: child stats JSON "
+                  "missing/unreadable", file=sys.stderr)
+            return 5
+    finally:
+        try:
+            os.unlink(stats_path)
+        except OSError:
+            pass
+    warm_s = child.get("wall_s", float("inf"))
+    disk_hits = child.get("disk_hits", 0)
+    print(f"plan-store cross-process check: cold {cold_s:.1f}s -> "
+          f"fresh-process warm {warm_s:.1f}s "
+          f"({1.0 - warm_s / max(cold_s, 1e-9):.0%} lower), "
+          f"{disk_hits} disk hits / {child.get('disk_misses', 0)} misses")
+    if disk_hits <= 0:
+        print("CROSS-PROCESS WARM-CHECK FAILED: the fresh process replayed "
+              "zero plans from the disk store", file=sys.stderr)
+        return 5
+    if warm_s > 0.7 * cold_s:
+        print("CROSS-PROCESS WARM-CHECK FAILED: fresh-process wall clock "
+              "is not >= 30% lower than the cold run (disk store / "
+              "compilation cache ineffective)", file=sys.stderr)
+        return 5
+    return 0
+
+
 def main(argv: Sequence[str] | None = None) -> int:
+    raw_argv = list(argv) if argv is not None else sys.argv[1:]
     ap = argparse.ArgumentParser(
         prog="python -m repro.tune.sweep",
         description="Measured CommConfig sweep -> TuneDB JSON.")
@@ -708,15 +789,33 @@ def main(argv: Sequence[str] | None = None) -> int:
                     "hop-patterned collectives at (requires --topology); "
                     "each distance is recorded as TuneEntry.hops so "
                     "select_config(hops=...) answers per edge")
+    ap.add_argument("--plan-dir", default=None,
+                    help="disk-backed CommPlan/program store directory "
+                    "(also via REPRO_PLAN_DIR): plan schedules persist as "
+                    "versioned JSON and traced programs through JAX's "
+                    "persistent compilation cache, so a FRESH process "
+                    "rerunning this sweep starts warm")
     ap.add_argument("--warm-check", action="store_true",
                     help="run the sweep twice in this process (cold, then "
                     "warm against the populated plan cache) and exit "
                     "non-zero unless the warm sweep's wall clock is at "
-                    "least 30%% lower (plan-cache effectiveness guard)")
+                    "least 30%% lower (plan-cache effectiveness guard); "
+                    "with a plan dir active, additionally rerun the sweep "
+                    "in a FRESH subprocess and require plans.disk_hits > 0 "
+                    "plus the same 30%% wall-clock bar cross-process")
     args = ap.parse_args(argv)
 
     _ensure_devices(args.devices)
     import jax  # after XLA_FLAGS is settled
+
+    if args.plan_dir:
+        # Through the env so the re-exec above and the cross-process
+        # warm-check child both inherit the same store.
+        os.environ[planstore.ENV_VAR] = args.plan_dir
+    store = planstore.active()
+    if store is not None:
+        print(f"plan store: {store.root} "
+              f"({store.entry_count()} entries on disk)")
 
     if args.sizes in NAMED_SIZES:
         sizes = NAMED_SIZES[args.sizes]
@@ -763,6 +862,7 @@ def main(argv: Sequence[str] | None = None) -> int:
     path = db.save(args.out)
     print(f"wrote {len(db)} entries -> {path}")
     print(sweep_summary(stats))
+    _dump_stats_json(stats)
 
     if args.warm_check:
         warm_stats: dict = {}
@@ -788,6 +888,10 @@ def main(argv: Sequence[str] | None = None) -> int:
                   "lower than cold (plan cache ineffective)",
                   file=sys.stderr)
             return 4
+        if planstore.active() is not None:
+            rc = _cross_process_warm_check(raw_argv, cold_s)
+            if rc:
+                return rc
 
     if args.calibrate:
         from repro.tune.calibrate import calibrate_from_db, model_vs_measured

@@ -221,6 +221,24 @@ def test_watchdog_event_cap_and_dropped_counter():
     assert wd.durations.maxlen is not None
 
 
+def test_watchdog_double_end_step_is_noop():
+    """Regression: end_step must consume the start mark — a second call at
+    the same boundary used to append the duration twice (skewing the median)
+    and could emit a phantom straggler."""
+    from repro.runtime.fault_tolerance import StepWatchdog
+    wd = StepWatchdog(k=0.0, warmup=1, window=4)
+    wd.start_step(0)
+    wd.end_step()
+    assert len(wd.durations) == 1
+    assert wd.end_step() is None            # no start mark -> no-op
+    assert len(wd.durations) == 1
+    assert len(wd.events) == 0
+    # the next real step still measures normally
+    wd.start_step(1)
+    wd.end_step()
+    assert len(wd.durations) == 2
+
+
 def test_watchdog_emits_trace_instants():
     from repro.runtime.fault_tolerance import StepWatchdog
     trace.configure("1")

@@ -185,6 +185,27 @@ def test_cache_bypass_env(monkeypatch):
     assert p3 is p4
 
 
+def test_memo_caches_none_result():
+    """Regression: a build that legitimately returns None (or any falsy
+    value) must be cached like everything else — the old truthiness check
+    turned it into a perpetual miss that re-ran the build every call."""
+    plans = _fresh_plans()
+    calls = []
+
+    def build():
+        calls.append(1)
+        return None
+
+    r1 = plans._memo("regress", ("none-key",), build,
+                     "plan_hits", "plan_misses")
+    r2 = plans._memo("regress", ("none-key",), build,
+                     "plan_hits", "plan_misses")
+    assert r1 is None and r2 is None
+    assert len(calls) == 1
+    st = plans.cache_stats()
+    assert st["plan_hits"] == 1 and st["plan_misses"] == 1
+
+
 # ----------------------------------------------------------------------
 # Jitted-program replay: no retrace on the second call
 # ----------------------------------------------------------------------
@@ -236,6 +257,43 @@ def test_commplan_program_replay():
     p2 = plan.program(build)
     assert p1 is p2 and len(builds) == 1
     assert float(p1(jnp.zeros(()))) == 1.0
+
+
+def test_commplan_program_race_builds_once():
+    """Regression: CommPlan.program's check-then-set must hold the cache
+    lock — concurrent same-key callers used to race past the check and each
+    run the (expensive) build."""
+    import threading
+    import time
+    plans = _fresh_plans()
+    import jax
+    from repro.core.config import CommConfig
+
+    plan = plans.get_plan("all_reduce", None, CommConfig(), (8,), np.float32)
+    plans.reset_stats()
+    builds = []
+
+    def build():
+        builds.append(1)
+        time.sleep(0.05)               # widen the race window
+        return jax.jit(lambda v: v + 1.0)
+
+    barrier = threading.Barrier(4)
+    results = []
+
+    def worker():
+        barrier.wait()
+        results.append(plan.program(build))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(builds) == 1
+    assert all(r is results[0] for r in results)
+    st = plans.cache_stats()
+    assert st["program_misses"] == 1 and st["program_hits"] == 3
 
 
 # ----------------------------------------------------------------------
@@ -332,3 +390,73 @@ assert warm["wall_s"] < 0.7 * cold["wall_s"], (cold["wall_s"], warm["wall_s"])
 print("WARM SWEEP OK", round(cold["wall_s"], 2), round(warm["wall_s"], 2))
 """, timeout=540)
     assert "WARM SWEEP OK" in out
+
+
+# ----------------------------------------------------------------------
+# Disk store: a FRESH PROCESS warm-starts from REPRO_PLAN_DIR, bit-identical
+# ----------------------------------------------------------------------
+
+_DISK_PARITY_CODE = """
+import hashlib
+import dataclasses
+import numpy as np
+import jax
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import plans, collectives
+from repro.core.communicator import Communicator
+from repro.core.config import CommConfig, CommMode, Scheduling, Transport
+
+plans.reset_stats()
+mesh = jax.make_mesh((8,), ("x",))
+comm = Communicator.from_mesh(mesh, "x")
+x = np.random.RandomState(0).randn(8, 130).astype(np.float32)
+cfg = CommConfig(mode=CommMode.STREAMING, scheduling=Scheduling.FUSED,
+                 transport=Transport.ORDERED, chunk_bytes=512, window=2)
+
+@partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+def p2p(xs):
+    return collectives.sendrecv(xs[0], comm.ring_perm(), comm, cfg)[None]
+
+rcfg = dataclasses.replace(cfg, algorithm="ring")
+
+@partial(compat.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+def ar(xs):
+    return collectives.all_reduce(xs[0], comm, rcfg)[None]
+
+outs = [np.asarray(p2p(x)), np.asarray(ar(x))]
+digest = hashlib.sha256(b"".join(o.tobytes() for o in outs)).hexdigest()
+st = plans.cache_stats()
+print("DIGEST", digest)
+print("DISK", st["disk_hits"], st["disk_misses"], st["disk_writes"])
+"""
+
+
+def _parse_parity(out):
+    lines = dict(l.split(" ", 1) for l in out.splitlines()
+                 if l.startswith(("DIGEST", "DISK")))
+    hits, misses, writes = (int(v) for v in lines["DISK"].split())
+    return lines["DIGEST"], hits, misses, writes
+
+
+def test_disk_store_cross_process_warm_start_bitwise(tmp_path, monkeypatch):
+    """The PR's acceptance criterion: a fresh process pointed at a populated
+    REPRO_PLAN_DIR reports disk hits and produces bit-identical collective
+    results — and both match a run with the cache bypassed entirely."""
+    monkeypatch.setenv("REPRO_PLAN_DIR", str(tmp_path / "store"))
+
+    cold_digest, cold_hits, _, cold_writes = _parse_parity(
+        run_multidevice(_DISK_PARITY_CODE))
+    assert cold_hits == 0 and cold_writes > 0       # populated the store
+
+    warm_digest, warm_hits, _, _ = _parse_parity(
+        run_multidevice(_DISK_PARITY_CODE))         # fresh process, warm disk
+    assert warm_hits > 0, "fresh process must warm-start from the store"
+    assert warm_digest == cold_digest               # bitwise parity
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "0")     # disk + memory bypassed
+    bypass_digest, bypass_hits, _, bypass_writes = _parse_parity(
+        run_multidevice(_DISK_PARITY_CODE))
+    assert bypass_hits == 0 and bypass_writes == 0
+    assert bypass_digest == cold_digest
