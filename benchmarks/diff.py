@@ -38,14 +38,16 @@ from typing import Sequence
 # a bigger number is not a regression there.
 _NON_LATENCY_PREFIXES = ("fig3_", "table1_", "fig11_speedup",
                          "lmcoll_tp_reduce_speedup", "lmcoll_moe_a2a_speedup",
-                         "e2e_gain_", "topo_hop_ratio")
+                         "e2e_gain_", "topo_hop_ratio", "ft_reselect_speedup")
 
 # New rows that stay report-only until they have >= 2 committed baselines.
 # The e2e_ rows graduated with bench_pr5.json; the topo_ hop-scaling rows
 # graduated with their second committed baseline (bench_pr6.json;
-# topo_hop_ratio stays a non-latency ratio).  Currently empty — every row
-# is enforced.
-DEFAULT_REPORT_ONLY_PREFIXES = ()
+# topo_hop_ratio stays a non-latency ratio).  The ft_ fault-tolerance rows
+# are new this PR (recovery wall clock is dominated by jit rebuilds and
+# noisy on shared CI hosts — they ride report-only until a noise floor
+# exists; ft_reselect_speedup stays a non-latency ratio).
+DEFAULT_REPORT_ONLY_PREFIXES = ("ft_",)
 
 
 def load_rows(path: str) -> dict:

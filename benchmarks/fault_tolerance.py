@@ -1,0 +1,70 @@
+"""Fault-tolerance rows: recovery wall clock + model reselect vs resweep.
+
+The elastic runtime's pitch is quantitative: when a rank dies, re-selecting
+CommConfigs by extrapolating the calibrated Eq. 1 model over the TuneDB
+(``repro.tune.elastic.model_reselect``) costs milliseconds, while
+re-measuring (a sweep) costs seconds of wall clock exactly while the job is
+down.  These rows pin both sides of that trade:
+
+- ``ft_recovery_us``  — end-to-end rank-loss recovery inside the elastic SWE
+  segment loop (snapshot unwind + shrink + repartition + model reselect +
+  rebuild; derived: survivors and whether configs changed);
+- ``ft_reselect_us``  — model-based re-selection alone on the populated DB
+  (the recovery path's tuning cost);
+- ``ft_resweep_us``   — what re-measuring instead would cost: a fast sweep
+  of the same collective over the same config space;
+- ``ft_reselect_speedup`` — resweep/reselect ratio (non-latency row: bigger
+  means the no-resweep recovery policy buys more).
+
+New rows ride this PR report-only until a second committed baseline lands.
+"""
+from __future__ import annotations
+
+import time
+
+
+def run():
+    import jax
+    if jax.device_count() < 8:
+        return [("ft", 0.0, "skipped_lt8devices")]
+    from repro.core.topology import TorusSpec
+    from repro.runtime.elastic import run_swe_elastic
+    from repro.runtime.faults import FaultSchedule
+    from repro.tune.elastic import reselect_round_configs
+    from repro.tune.sweep import run_sweep
+    from repro.core.communicator import Communicator
+
+    rows = []
+    topo = TorusSpec.parse("4x2")
+
+    # -- end-to-end rank-loss recovery wall clock ----------------------
+    rep = run_swe_elastic(240, 8, topo, n_steps=20, segment=5,
+                          schedule=FaultSchedule.parse("rank_lost@5=r5"))
+    if rep.recoveries:
+        r = rep.recoveries[0]
+        rows.append(("ft_recovery_us", r.wall_s * 1e6,
+                     f"survivors{rep.n_parts[-1]}_"
+                     f"cfg_changed{int(r.config_changed())}_"
+                     f"sweeps{rep.sweep_runs_delta}"))
+
+    # -- model reselect vs a fresh sweep on the same fabric ------------
+    # The sweep populates the DB (and is timed: the cost recovery avoids);
+    # the reselect then re-ranks the measured space from the fitted model.
+    t0 = time.perf_counter()
+    db = run_sweep(collectives=("sendrecv", "multi_neighbor"), fast=True,
+                   topology=topo, hop_distances=(1, 2))
+    resweep_s = time.perf_counter() - t0
+
+    comm = Communicator(("data",), (8,), topo=topo)
+    rounds = [[(0, 1)], [(0, 5)]]     # a near round and a routed round
+    t0 = time.perf_counter()
+    reselect_round_configs(rounds, comm, 1 << 14, db=db)
+    reselect_s = time.perf_counter() - t0
+
+    rows.append(("ft_resweep_us", resweep_s * 1e6,
+                 f"entries{len(db.entries)}"))
+    rows.append(("ft_reselect_us", reselect_s * 1e6,
+                 f"cands_from{len(db.entries)}entries"))
+    rows.append(("ft_reselect_speedup", resweep_s / max(reselect_s, 1e-9),
+                 "resweep/reselect"))
+    return rows

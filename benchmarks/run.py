@@ -29,8 +29,9 @@ def _ensure_devices():
 
 def main() -> None:
     _ensure_devices()
-    from benchmarks import (b_eff, e2e_objective, lm_collectives, lm_roofline,
-                            plan_store, resources, swe_scaling, topology_hops)
+    from benchmarks import (b_eff, e2e_objective, fault_tolerance,
+                            lm_collectives, lm_roofline, plan_store,
+                            resources, swe_scaling, topology_hops)
 
     print("name,us_per_call,derived")
     modules = [("b_eff(fig4)", b_eff), ("resources(fig3)", resources),
@@ -39,7 +40,8 @@ def main() -> None:
                ("lm_collectives", lm_collectives),
                ("e2e_objective", e2e_objective),
                ("topology_hops", topology_hops),
-               ("plan_store", plan_store)]
+               ("plan_store", plan_store),
+               ("fault_tolerance", fault_tolerance)]
     only = None
     json_path = "BENCH_comm.json"
     for a in sys.argv[1:]:
@@ -89,6 +91,13 @@ def main() -> None:
         if name == "pstore_warm_ratio":
             print(f"# plan store {name}: fresh-process warm/cold = "
                   f"{row['us_per_call']:.2f}x, {row['derived']}",
+                  file=sys.stderr)
+    # Fault-tolerance report: model-based re-selection vs the resweep the
+    # elastic recovery path avoids (rows from fault_tolerance).
+    for name, row in sorted(results.items()):
+        if name == "ft_reselect_speedup":
+            print(f"# fault tolerance {name}: resweep/reselect = "
+                  f"{row['us_per_call']:.0f}x, {row['derived']}",
                   file=sys.stderr)
     if json_path:
         # Merge into any existing file so a partial (--only=...) run updates

@@ -2,19 +2,27 @@
 reshard-on-restore (elastic scaling).
 
 Format: one ``.npz`` per checkpoint step holding every leaf (flattened key
-paths) + a JSON manifest (step, pytree structure fingerprint, mesh shape).
-On a real multi-host deployment each host writes its own shard file; on this
-single-process container the full arrays are written — the *restore* path is
-the part that matters for elasticity: ``restore(..., target_sharding=...)``
-re-shards to ANY new mesh via ``jax.device_put``, which is exactly the
-recovery path after losing a node and re-meshing.
+paths) + a JSON manifest (step, pytree structure fingerprint, mesh shape) +
+a terminal ``COMMIT`` marker.  On a real multi-host deployment each host
+writes its own shard file; on this single-process container the full arrays
+are written — the *restore* path is the part that matters for elasticity:
+``restore(..., target_sharding=...)`` re-shards to ANY new mesh via
+``jax.device_put``, which is exactly the recovery path after losing a node
+and re-meshing.
 
 Fault-tolerance features:
 - ``AsyncCheckpointer.save`` snapshots device arrays to host then writes on a
   background thread (training continues immediately).
 - ``emergency_save`` is synchronous and minimal — called from the preemption
-  signal handler (see repro.runtime.preemption).
-- saves are atomic (tmp file + rename); ``latest_step`` scans the directory.
+  signal handler (see repro.runtime.fault_tolerance); it can carry the
+  optimizer state alongside the params so a same-mesh resume is
+  bitwise-continuous (Adam moments included).
+- every file write is atomic (unique tmp + rename), and a checkpoint only
+  *exists* once its ``COMMIT`` marker lands: the marker is written last, so
+  a crash mid-checkpoint leaves a torn step that ``latest_step`` skips
+  (counting it in the ``ckpt.skipped_partial`` obs counter) and restore
+  falls back to the newest committed step — a mid-write crash can never
+  wedge restart.
 """
 from __future__ import annotations
 
@@ -27,6 +35,8 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
 
 
 def _flatten_with_names(tree):
@@ -48,33 +58,65 @@ class Checkpointer:
     def __init__(self, directory: str | Path):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
+        # Torn steps already counted by THIS instance — latest_step may scan
+        # repeatedly; each partial checkpoint bumps the counter once.
+        self._counted_partial: set[int] = set()
 
     def _path(self, step: int) -> Path:
         return self.dir / f"ckpt_{step:08d}.npz"
 
-    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
-        names, leaves, _ = _flatten_with_names(tree)
-        host = [_to_numpy_storable(jax.device_get(l)) for l in leaves]
-        tmp = self._path(step).with_suffix(".tmp.npz")
+    def _commit_path(self, step: int) -> Path:
+        return self.dir / f"ckpt_{step:08d}.COMMIT"
+
+    def _write_payload(self, step: int, names, host, extra: Optional[dict]):
+        """The one write body (sync and async saves share it): npz, then
+        manifest, then the COMMIT marker — each atomically, in that order,
+        so the marker's existence implies the whole step is durable."""
+        tmp = self._path(step).with_suffix(f".{os.getpid()}.tmp.npz")
         np.savez(tmp, **{n: a for n, a in zip(names, host)})
         os.replace(tmp, self._path(step))
         manifest = {"step": step, "names": names,
                     "time": time.time(), **(extra or {})}
-        mtmp = self.dir / f"manifest_{step:08d}.tmp"
+        mtmp = self.dir / f"manifest_{step:08d}.{os.getpid()}.tmp"
         mtmp.write_text(json.dumps(manifest))
         os.replace(mtmp, self.dir / f"manifest_{step:08d}.json")
+        ctmp = self._commit_path(step).with_suffix(f".{os.getpid()}.ctmp")
+        ctmp.write_text(json.dumps({"step": step, "time": time.time()}))
+        os.replace(ctmp, self._commit_path(step))
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        names, leaves, _ = _flatten_with_names(tree)
+        host = [_to_numpy_storable(jax.device_get(l)) for l in leaves]
+        self._write_payload(step, names, host, extra)
 
     def latest_step(self) -> Optional[int]:
-        steps = sorted(int(p.stem.split("_")[1])
-                       for p in self.dir.glob("ckpt_*.npz"))
-        return steps[-1] if steps else None
+        """Newest *committed* step.  A ``ckpt_*.npz`` without its ``COMMIT``
+        marker is a torn write (crash between the array file and the
+        marker): it is skipped — counted once per instance in
+        ``ckpt.skipped_partial`` — and the scan falls back to the next
+        newest committed step, or None when nothing committed survives."""
+        steps = set()
+        for p in self.dir.glob("ckpt_*.npz"):
+            try:
+                steps.add(int(p.stem.split("_")[1]))
+            except ValueError:
+                continue   # a leaked tmp file, not a checkpoint
+        for step in sorted(steps, reverse=True):
+            if self._commit_path(step).exists():
+                return step
+            if step not in self._counted_partial:
+                self._counted_partial.add(step)
+                obs_metrics.registry().counter("ckpt.skipped_partial").inc()
+        return None
 
     def restore(self, step: int, like: Any, target_sharding: Any = None) -> Any:
         """Restore into the structure of ``like``; optionally reshard.
 
         ``target_sharding``: pytree of jax.sharding.Sharding (or None) — the
         elastic-recovery path: a checkpoint from a 256-chip mesh restores
-        onto a 192-chip mesh by simply passing the new shardings.
+        onto a 192-chip mesh by simply passing the new shardings.  Extra npz
+        names (e.g. a drained optimizer state riding an emergency save) are
+        ignored — only the names present in ``like`` are read.
         """
         data = np.load(self._path(step))
         names, leaves, treedef = _flatten_with_names(like)
@@ -110,14 +152,7 @@ class AsyncCheckpointer(Checkpointer):
 
         def _write():
             try:
-                tmp = self._path(step).with_suffix(".tmp.npz")
-                np.savez(tmp, **{n: a for n, a in zip(names, host)})
-                os.replace(tmp, self._path(step))
-                manifest = {"step": step, "names": names,
-                            "time": time.time(), **(extra or {})}
-                mtmp = self.dir / f"manifest_{step:08d}.tmp"
-                mtmp.write_text(json.dumps(manifest))
-                os.replace(mtmp, self.dir / f"manifest_{step:08d}.json")
+                self._write_payload(step, names, host, extra)
             finally:
                 with self._lock:
                     self.pending -= 1
@@ -130,8 +165,19 @@ class AsyncCheckpointer(Checkpointer):
             self._thread.join()
 
 
-def emergency_save(directory, step: int, tree: Any):
-    """Synchronous minimal-latency save for preemption handlers."""
+def emergency_save(directory, step: int, tree: Any,
+                   opt_state: Any = None):
+    """Synchronous minimal-latency save for preemption handlers.
+
+    With ``opt_state`` given, the optimizer state is saved alongside under
+    ``<directory>/opt`` — a same-mesh resume then continues with the exact
+    Adam moments, making the drained loss stream bitwise-identical to the
+    uninterrupted run (restores that only want params are unaffected: extra
+    state lives in its own subdirectory).
+    """
     ck = Checkpointer(directory)
     ck.save(step, tree, extra={"emergency": True})
+    if opt_state is not None:
+        Checkpointer(Path(directory) / "opt").save(
+            step, opt_state, extra={"emergency": True})
     return ck._path(step)

@@ -51,11 +51,24 @@ class TorusSpec:
     ``placement``      — rank -> cell (row-major linear index); identity when
                          omitted.  ``snake_placement`` makes the rank ring
                          hop-1.
+    ``link_slowdowns`` — degraded physical links, ``(((a, b), factor), ...)``
+                         with ``a``/``b`` adjacent ranks and ``factor >= 1``:
+                         the fault-injection ground truth.  A traversal of a
+                         degraded hop is emulated by ``ceil(factor) - 1``
+                         extra store-and-forward hold rounds, so measured
+                         latency genuinely grows (values are unchanged).
+    ``reroute``        — the runtime's *belief*: when True, routing picks the
+                         cheaper dimension order around degraded links.  Off
+                         by default — a freshly degraded fabric keeps its old
+                         routes until the :class:`~repro.runtime.faults.
+                         DegradationMonitor` notices and re-routes.
     """
     shape: Tuple[int, int]
     per_hop_ns: float = 500.0
     bisection_gbps: float = 400.0
     placement: Optional[Tuple[int, ...]] = None
+    link_slowdowns: Optional[Tuple[Tuple[Tuple[int, int], float], ...]] = None
+    reroute: bool = False
 
     def __post_init__(self):
         rows, cols = self.shape
@@ -69,6 +82,23 @@ class TorusSpec:
                     f"placement must be a permutation of range({self.n_ranks})"
                     f", got {p}")
             object.__setattr__(self, "placement", p)
+        if self.link_slowdowns is not None:
+            canon = {}
+            for (a, b), f in self.link_slowdowns:
+                a, b, f = int(a), int(b), float(f)
+                if f < 1.0:
+                    raise ValueError(f"link slowdown must be >= 1, got {f}")
+                if self.hops(a, b) != 1:
+                    raise ValueError(
+                        f"({a},{b}) is not a single-hop link on {self.name} "
+                        f"(hops={self.hops(a, b)}); degrade physical links "
+                        f"only")
+                key = (min(a, b), max(a, b))
+                canon[key] = max(f, canon.get(key, 1.0))
+            canon = {k: f for k, f in canon.items() if f > 1.0}
+            object.__setattr__(
+                self, "link_slowdowns",
+                tuple(sorted(canon.items())) if canon else None)
 
     # ------------------------------------------------------------------
     # Construction helpers
@@ -106,9 +136,79 @@ class TorusSpec:
         return f"{self.shape[0]}x{self.shape[1]}{tag}"
 
     def key(self) -> tuple:
-        """Value identity for plan-cache keying (placement included)."""
+        """Value identity for plan-cache keying (placement included).
+        Degradation state is part of the identity — a degraded fabric must
+        never reuse the healthy fabric's routed plans (hold rounds differ),
+        while ``name`` stays stable so TuneDB entries remain addressable."""
         return (self.shape, self.per_hop_ns, self.bisection_gbps,
-                self.placement)
+                self.placement, self.link_slowdowns, self.reroute)
+
+    # ------------------------------------------------------------------
+    # Degradation state
+    # ------------------------------------------------------------------
+    def link_slowdown(self, a: int, b: int) -> float:
+        """Slowdown factor on the physical link ``{a, b}`` (1.0 = healthy)."""
+        if not self.link_slowdowns:
+            return 1.0
+        key = (min(int(a), int(b)), max(int(a), int(b)))
+        for k, f in self.link_slowdowns:
+            if k == key:
+                return f
+        return 1.0
+
+    @property
+    def degraded_links(self) -> Tuple[Tuple[int, int], ...]:
+        """Canonical (lo, hi) rank pairs currently degraded."""
+        if not self.link_slowdowns:
+            return ()
+        return tuple(k for k, _ in self.link_slowdowns)
+
+    def with_link_slowdown(self, a: int, b: int,
+                           factor: float) -> "TorusSpec":
+        """A copy with link ``{a, b}`` degraded by ``factor`` (>= 1;
+        ``factor == 1`` heals the link).  Other degradations are kept."""
+        if float(factor) < 1.0:
+            raise ValueError(f"link slowdown must be >= 1, got {factor}")
+        key = (min(int(a), int(b)), max(int(a), int(b)))
+        kept = [(k, f) for k, f in (self.link_slowdowns or ()) if k != key]
+        if float(factor) > 1.0:
+            kept.append((key, float(factor)))
+        return dataclasses.replace(
+            self, link_slowdowns=tuple(sorted(kept)) or None)
+
+    def with_reroute(self, reroute: bool = True) -> "TorusSpec":
+        """A copy with cost-aware routing switched on/off (the monitor's
+        lever after hysteresis confirms a degraded link)."""
+        return dataclasses.replace(self, reroute=bool(reroute))
+
+    def without_degradations(self) -> "TorusSpec":
+        """The healthy twin: same placement/costs, no slowdowns, no reroute."""
+        return dataclasses.replace(self, link_slowdowns=None, reroute=False)
+
+    def path_cost(self, ranks: Sequence[int]) -> float:
+        """Sum of per-hop slowdown factors along a rank path (hops cost 1.0
+        when healthy) — the route comparator under ``reroute``."""
+        return sum(self.link_slowdown(ranks[i], ranks[i + 1])
+                   for i in range(len(ranks) - 1))
+
+    def shrink(self, n_survivors: int) -> "TorusSpec":
+        """The sub-torus the elastic runtime rebuilds on the survivors.
+
+        The squarest ``R' x C'`` factorization of ``n_survivors`` (minimal
+        diameter), with the bisection bandwidth scaled by the survivor
+        fraction — fewer boards, fewer links.  Placement and degradation
+        state are dropped: survivors are renumbered ``0..n-1`` on a fresh
+        fabric, and the dead rank's links die with it.
+        """
+        n = int(n_survivors)
+        if not 1 <= n <= self.n_ranks:
+            raise ValueError(
+                f"n_survivors must be in [1, {self.n_ranks}], got {n}")
+        rows = max(r for r in range(1, int(math.isqrt(n)) + 1) if n % r == 0)
+        return TorusSpec(
+            shape=(rows, n // rows),
+            per_hop_ns=self.per_hop_ns,
+            bisection_gbps=self.bisection_gbps * n / self.n_ranks)
 
     # ------------------------------------------------------------------
     # Coordinates and distances
@@ -235,23 +335,51 @@ class RoutedPerm:
         return sum(len(b.rounds) for b in self.batches)
 
 
-def route(spec: TorusSpec, src: int, dst: int) -> list[int]:
-    """Dimension-ordered minimal route (ranks visited, incl. endpoints):
-    rows first, then columns, each along the shorter wrap direction.  Length
-    is exactly ``spec.hops(src, dst) + 1``."""
+def _dim_route(spec: TorusSpec, src: int, dst: int,
+               rows_first: bool) -> list[int]:
+    """Minimal dimension-ordered route in the requested order (ranks
+    visited, incl. endpoints), each dimension along the shorter wrap."""
     rows, cols = spec.shape
     r, c = spec.coords(src)
     tr, tc = spec.coords(dst)
     cells = [r * cols + c]
-    while r != tr:
-        step = 1 if (tr - r) % rows <= (r - tr) % rows else -1
-        r = (r + step) % rows
-        cells.append(r * cols + c)
-    while c != tc:
-        step = 1 if (tc - c) % cols <= (c - tc) % cols else -1
-        c = (c + step) % cols
-        cells.append(r * cols + c)
+
+    def walk_rows():
+        nonlocal r
+        while r != tr:
+            step = 1 if (tr - r) % rows <= (r - tr) % rows else -1
+            r = (r + step) % rows
+            cells.append(r * cols + c)
+
+    def walk_cols():
+        nonlocal c
+        while c != tc:
+            step = 1 if (tc - c) % cols <= (c - tc) % cols else -1
+            c = (c + step) % cols
+            cells.append(r * cols + c)
+
+    if rows_first:
+        walk_rows(), walk_cols()
+    else:
+        walk_cols(), walk_rows()
     return [spec.rank_at(cell) for cell in cells]
+
+
+def route(spec: TorusSpec, src: int, dst: int) -> list[int]:
+    """Dimension-ordered minimal route (ranks visited, incl. endpoints):
+    rows first, then columns, each along the shorter wrap direction.  Length
+    is exactly ``spec.hops(src, dst) + 1``.
+
+    Under ``spec.reroute`` with degraded links, the column-first minimal
+    route is also considered and the cheaper one (by summed link slowdown)
+    wins; ties keep rows-first, so healthy fabrics route identically."""
+    primary = _dim_route(spec, src, dst, rows_first=True)
+    if not (spec.reroute and spec.link_slowdowns):
+        return primary
+    alt = _dim_route(spec, src, dst, rows_first=False)
+    if spec.path_cost(alt) < spec.path_cost(primary):
+        return alt
+    return primary
 
 
 def _lockstep_rounds(routes: Sequence[Sequence[int]]
@@ -296,11 +424,34 @@ def route_rounds(spec: TorusSpec, edges: Sequence[Tuple[int, int]]
                 rest.append(e)
         assert sched is not None  # a single route always schedules
         batches.append(RouteBatch(
-            rounds=tuple(tuple(r) for r in sched),
+            rounds=tuple(_degrade_rounds(spec, sched)),
             dests=tuple(d for _, d in batch)))
         pending = rest
     return RoutedPerm(edges=edges, batches=tuple(batches),
                       max_hops=spec.max_hops(edges))
+
+
+def _degrade_rounds(spec: TorusSpec, sched: Sequence[Sequence[Tuple[int, int]]]
+                    ) -> list[tuple[Tuple[int, int], ...]]:
+    """Expand a lockstep schedule with hold rounds for degraded hops.
+
+    A round whose worst traversed link is slowed by factor ``f`` is followed
+    by ``ceil(f) - 1`` hold rounds (every in-flight message forwards to
+    itself), so the batch physically executes ~``f`` ppermutes for that hop —
+    measured latency grows with the injected degradation while the delivered
+    values stay bitwise identical (a self-forward is value-preserving).
+    """
+    out: list[tuple[Tuple[int, int], ...]] = []
+    for rnd in sched:
+        rnd = tuple(rnd)
+        out.append(rnd)
+        if not spec.link_slowdowns:
+            continue
+        worst = max((spec.link_slowdown(s, d) for s, d in rnd if s != d),
+                    default=1.0)
+        hold = tuple((d, d) for _, d in rnd)
+        out.extend(hold for _ in range(math.ceil(worst) - 1))
+    return out
 
 
 def routed_perm(comm, perm: Sequence[Tuple[int, int]]):
@@ -311,7 +462,8 @@ def routed_perm(comm, perm: Sequence[Tuple[int, int]]):
     are identical either way)."""
     spec = getattr(comm, "topo", None)
     edges = tuple((int(s), int(d)) for s, d in perm)
-    if spec is None or spec.max_hops(edges) <= 1:
+    if spec is None or (spec.max_hops(edges) <= 1 and not any(
+            spec.link_slowdown(s, d) > 1.0 for s, d in edges if s != d)):
         return edges
     from repro.core import plans
     return plans._memo("route", (spec.key(), edges),

@@ -43,6 +43,23 @@ def _render(name: str, lk: tuple) -> str:
     return name + "{" + ",".join(f"{k}={v}" for k, v in lk) + "}"
 
 
+def parse_labels(rendered: str) -> tuple[str, dict]:
+    """Invert :func:`_render`: ``"comm.edge_bytes{hops=2}"`` ->
+    ``("comm.edge_bytes", {"hops": "2"})``.  The decoder consumers of
+    ``Registry.find``/``snapshot`` use to get label values back out of a
+    series name (e.g. the DegradationMonitor splitting per-hop traffic)."""
+    if "{" not in rendered:
+        return rendered, {}
+    name, _, body = rendered.partition("{")
+    labels = {}
+    for pair in body.rstrip("}").split(","):
+        if not pair:
+            continue
+        k, _, v = pair.partition("=")
+        labels[k] = v
+    return name, labels
+
+
 class Counter:
     """Monotonic (between resets) integer/float counter."""
     __slots__ = ("name", "_value")

@@ -117,25 +117,56 @@ class StepWatchdog:
 
 class PreemptionGuard:
     """SIGTERM/SIGINT -> set a flag; the training loop checkpoints and exits
-    at the next step boundary."""
+    at the next step boundary.
 
-    def __init__(self, signals=(signal.SIGTERM,)):
+    Contract details that matter in production:
+
+    - **SIGINT is guarded by default** — a Ctrl-C drains exactly like a
+      scheduler's SIGTERM instead of stack-tracing mid-step.
+    - **Pre-existing custom handlers are chained**, not dropped: if the
+      launcher installed its own SIGTERM hook, the guard sets its flag and
+      then calls the old handler.  Default dispositions (``SIG_DFL``,
+      ``SIG_IGN``, Python's KeyboardInterrupt handler) are *replaced* — the
+      whole point is to turn them into a drain.
+    - **Nested / re-entrant use restores correctly**: each ``__enter__``
+      pushes the handlers it displaced and ``__exit__`` pops exactly that
+      frame, so an inner guard (e.g. an eval loop inside the train loop)
+      hands the signals back to the outer one, not to the defaults.
+    """
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
         self._requested = threading.Event()
-        self._old = {}
-        self._signals = signals
+        self._stack: list[dict] = []
+        self._signals = tuple(signals)
+
+    @staticmethod
+    def _chainable(old) -> bool:
+        """Is ``old`` a custom handler worth chaining?  Dispositions and
+        Python's default KeyboardInterrupt raiser are not — replacing them
+        IS the guard's job."""
+        return callable(old) and old is not signal.default_int_handler
 
     def __enter__(self):
+        frame = {}
         for sig in self._signals:
-            self._old[sig] = signal.signal(sig, self._handler)
+            old = signal.getsignal(sig)
+            frame[sig] = old
+            chain = old if self._chainable(old) else None
+
+            def handler(signum, sframe, _chain=chain):
+                self._requested.set()
+                if _chain is not None:
+                    _chain(signum, sframe)
+
+            signal.signal(sig, handler)
+        self._stack.append(frame)
         return self
 
     def __exit__(self, *exc):
-        for sig, old in self._old.items():
+        frame = self._stack.pop()
+        for sig, old in frame.items():
             signal.signal(sig, old)
         return False
-
-    def _handler(self, signum, frame):
-        self._requested.set()
 
     @property
     def preempted(self) -> bool:
@@ -149,8 +180,30 @@ class PreemptionGuard:
 # Elastic re-meshing
 # ----------------------------------------------------------------------
 
+def survivor_topology(topology, new_mesh):
+    """The :class:`~repro.core.topology.TorusSpec` the survivors re-form on:
+    ``topology.shrink`` at the new mesh's device count (identity when the
+    count is unchanged or there was no torus)."""
+    if topology is None:
+        return None
+    n_new = int(np.prod(list(new_mesh.shape.values())))
+    return topology if n_new == topology.n_ranks else topology.shrink(n_new)
+
+
+def _ring_hops(spec) -> int:
+    """Worst-case hop distance of the rank ring on ``spec`` (the LM TP
+    combine's wire pattern) — what the re-selection prices the new fabric
+    at."""
+    if spec is None:
+        return 1
+    n = spec.n_ranks
+    return max((spec.hops(i, (i + 1) % n) for i in range(n)), default=1)
+
+
 def elastic_restore(ckpt_dir, cfg, new_mesh, comm, oc, step: Optional[int] = None,
-                    fsdp: bool = False):
+                    fsdp: bool = False, reselect: bool = False,
+                    tune_db_path=None, topology=None,
+                    objective: str = "latency"):
     """Rebuild a training session on a NEW mesh from a checkpoint.
 
     The checkpoint stores full (unsharded) arrays; the session on the
@@ -158,6 +211,16 @@ def elastic_restore(ckpt_dir, cfg, new_mesh, comm, oc, step: Optional[int] = Non
     slices are NOT restored (their layout depends on the dead mesh) — they
     are reconstructed deterministically, which costs one step of Adam
     history on re-scale; params and step counter survive exactly.
+
+    ``reselect=True`` makes recovery tuner-aware: the dead mesh's
+    ``topology`` (a TorusSpec, optional) is shrunk onto the survivors
+    (:func:`survivor_topology`) and the session's CommConfig is re-selected
+    by extrapolating the calibrated Eq. 1 model over the TuneDB
+    (:func:`repro.tune.elastic.model_reselect`) at the new ring's hop
+    distance — the previously optimal config was tuned for a fabric that no
+    longer exists, and re-measuring it mid-recovery would cost a sweep.  No
+    sweep runs on this path (``sweep.runs`` stays flat); a cold DB falls
+    back to nearest-measured selection.
     """
     from jax.sharding import NamedSharding
     from repro.checkpoint.checkpointer import Checkpointer
@@ -167,6 +230,21 @@ def elastic_restore(ckpt_dir, cfg, new_mesh, comm, oc, step: Optional[int] = Non
     step = ck.latest_step() if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    if reselect:
+        from repro.core.config import CommConfig
+        from repro.tune import topology_key
+        from repro.tune.db import TuneDB
+        from repro.tune.elastic import model_reselect
+        new_topo = survivor_topology(topology, new_mesh)
+        db = TuneDB.load(tune_db_path)
+        n_new = int(np.prod(list(new_mesh.shape.values())))
+        fallback_kw = {}
+        if isinstance(comm, CommConfig):
+            fallback_kw["fallback"] = comm   # keep the old config on a cold DB
+        comm = model_reselect(
+            "all_reduce", 4 * cfg.d_model * 1024, db=db,
+            hops=_ring_hops(new_topo), objective=objective,
+            topo=topology_key(n_devices=n_new), **fallback_kw)
     sess = setup.build_session(cfg, new_mesh, comm, oc=oc, fsdp=fsdp,
                                concrete=True)
     shardings = jax.tree.map(lambda s: NamedSharding(new_mesh, s),
@@ -179,4 +257,42 @@ def elastic_restore(ckpt_dir, cfg, new_mesh, comm, oc, step: Optional[int] = Non
     sess.opt_state["step"] = jax.device_put(
         jnp.asarray(step, jnp.int32),
         NamedSharding(new_mesh, jax.sharding.PartitionSpec()))
+    return sess, step
+
+
+def resume_session(ckpt_dir, sess, step: Optional[int] = None):
+    """Same-mesh resume after a preemption drain.
+
+    Restores params at the newest committed step, and — when the drain also
+    persisted the optimizer state (``emergency_save(..., opt_state=...)``
+    writes it under ``<ckpt_dir>/opt``) — restores the exact Adam moments
+    too, so the resumed loss stream is bitwise-identical to the
+    uninterrupted run.  Without a drained opt state the optimizer is
+    re-initialized (one step of Adam history lost), matching
+    :func:`elastic_restore`.
+    """
+    from pathlib import Path
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.launch import setup
+
+    ck = Checkpointer(ckpt_dir)
+    step = ck.latest_step() if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    shardings = jax.tree.map(lambda s: NamedSharding(sess.mesh, s),
+                             sess.param_spec)
+    sess.params = ck.restore(step, sess.params, target_sharding=shardings)
+    opt_ck = Checkpointer(Path(ckpt_dir) / "opt")
+    if opt_ck.latest_step() == step:
+        opt_shardings = jax.tree.map(
+            lambda s: NamedSharding(sess.mesh, s), sess.opt_spec)
+        sess.opt_state = opt_ck.restore(step, sess.opt_state,
+                                        target_sharding=opt_shardings)
+    else:
+        sess.opt_state = setup.init_opt_state(sess)
+    sess.opt_state["step"] = jax.device_put(
+        jnp.asarray(step, jnp.int32),
+        NamedSharding(sess.mesh, jax.sharding.PartitionSpec()))
     return sess, step

@@ -78,11 +78,43 @@ def _select_round_configs(rounds, comm, halo_bytes: int, tune_db_path=None,
     return cfgs
 
 
+def flatten_state(sim: "Simulation", state) -> np.ndarray:
+    """Partitioned ``(P, E_max, 3)`` state -> global element order
+    ``(E, 3)``.
+
+    The RCB partition is a pure function of (mesh, n_parts), so the same
+    mesh flattens identically from ANY partition count — which is what makes
+    the global state the elastic runtime's portable checkpoint: a snapshot
+    taken on 8 partitions restores bitwise onto 7 survivors
+    (``build_simulation(..., initial_state=flatten_state(...))``), and final
+    states digest-compare across fault/no-fault runs.
+    """
+    from repro.swe.partition import _rcb
+    s = np.asarray(state)
+    part = _rcb(sim.mesh.centroids, sim.pm.n_parts)
+    counts = np.zeros(sim.pm.n_parts, int)
+    vals = np.zeros((sim.mesh.n_elements, 3), s.dtype)
+    for e in range(sim.mesh.n_elements):
+        p = part[e]
+        vals[e] = s[p, counts[p]]
+        counts[p] += 1
+    return vals
+
+
+def state_digest(sim: "Simulation", state) -> str:
+    """sha256 of the global-order state — the result-stream fingerprint the
+    kill-and-resume smoke compares against its no-fault reference."""
+    import hashlib
+    return hashlib.sha256(
+        np.ascontiguousarray(flatten_state(sim, state)).tobytes()).hexdigest()
+
+
 def build_simulation(n_elements: int, device_mesh: Mesh,
                      comm_cfg: CommConfig | str, swe: SWEConfig = SWEConfig(),
                      seed: int = 0, tune_db_path=None,
                      objective: str = "latency",
-                     topology=None) -> Simulation:
+                     topology=None,
+                     initial_state: Optional[np.ndarray] = None) -> Simulation:
     """Build the partitioned simulation.
 
     ``comm_cfg="auto"`` asks the autotuner for the fastest measured config
@@ -101,10 +133,16 @@ def build_simulation(n_elements: int, device_mesh: Mesh,
     structure / scheduling) is the worst-hop round's winner; per-round wire
     configs apply on the serially scheduled paths, and their scheduling is
     unified with the representative so the step structure stays coherent.
+
+    ``initial_state`` (global ``(E, 3)``, e.g. from :func:`flatten_state`)
+    seeds the partitions with a mid-run snapshot instead of the t=0 hump —
+    the elastic-recovery path restoring onto a different partition count.
     """
     mesh = generate_bight_mesh(n_elements, seed=seed)
     n_parts = device_mesh.shape["data"]
-    pm = partition_mesh(mesh, n_parts, dg_solver.initial_state(mesh))
+    if initial_state is None:
+        initial_state = dg_solver.initial_state(mesh)
+    pm = partition_mesh(mesh, n_parts, np.asarray(initial_state))
     round_cfgs = None
     if not isinstance(comm_cfg, CommConfig):
         from repro.core.collectives import resolve_config

@@ -29,7 +29,27 @@ class LoopConfig:
 
 
 def train(sess: setup_mod.Session, data_cfg: DataConfig, loop: LoopConfig,
-          log: Callable[[str], None] = print):
+          log: Callable[[str], None] = print,
+          guard: Optional[PreemptionGuard] = None,
+          faults=None):
+    """Run the training loop.
+
+    ``guard`` lets a caller share one :class:`PreemptionGuard` across
+    loops (or pre-arm a software drain via ``guard.request()``); by default
+    the loop installs its own.  ``faults`` (a
+    :class:`repro.runtime.faults.FaultInjector`) is polled at every step
+    boundary: stragglers inject host delay, ``Preempt`` events request the
+    drain, and ``RankLost`` raises
+    :class:`~repro.runtime.faults.RankLostError` out of the loop — after an
+    emergency checkpoint at the last completed step, so the elastic restart
+    (``elastic_restore``) resumes from exactly where the rank died.
+
+    A preemption drain persists the optimizer state alongside the params
+    (``emergency_save(..., opt_state=...)``): a same-mesh resume via
+    :func:`repro.runtime.fault_tolerance.resume_session` then continues
+    with identical Adam moments, making the post-resume loss stream
+    bitwise-identical to an uninterrupted run.
+    """
     mesh = sess.mesh
     daxes = tuple(a for a in mesh.axis_names if a != "model")
     bspec = {"tokens": P(daxes), "labels": P(daxes)}
@@ -55,8 +75,33 @@ def train(sess: setup_mod.Session, data_cfg: DataConfig, loop: LoopConfig,
         return {k: jax.device_put(jnp.asarray(batch[k]), sharding[k])
                 for k in bspec}
 
-    with PreemptionGuard() as guard:
+    own_guard = guard is None
+    if own_guard:
+        guard = PreemptionGuard()
+        guard.__enter__()
+    try:
         for i in range(start_step, start_step + loop.n_steps):
+            if faults is not None:
+                try:
+                    faults.poll(i, guard=guard)
+                except Exception:
+                    # Rank death: checkpoint the last completed step so the
+                    # elastic restart loses at most the in-flight step, then
+                    # let the error unwind to the recovery driver.
+                    if loop.ckpt_dir:
+                        from repro.checkpoint.checkpointer import \
+                            emergency_save
+                        emergency_save(loop.ckpt_dir, i, params,
+                                       opt_state=opt_state)
+                    sess.params, sess.opt_state = params, opt_state
+                    raise
+            if guard.preempted:
+                log(f"[preempt] draining at step {i}")
+                if loop.ckpt_dir:
+                    from repro.checkpoint.checkpointer import emergency_save
+                    emergency_save(loop.ckpt_dir, i, params,
+                                   opt_state=opt_state)
+                break
             batch = next(loader)
             watchdog.start_step(i)
             with obs_trace.span("train.step", cat="train", step=i):
@@ -78,8 +123,12 @@ def train(sess: setup_mod.Session, data_cfg: DataConfig, loop: LoopConfig,
                 log(f"[preempt] draining at step {i}")
                 if loop.ckpt_dir:
                     from repro.checkpoint.checkpointer import emergency_save
-                    emergency_save(loop.ckpt_dir, i + 1, params)
+                    emergency_save(loop.ckpt_dir, i + 1, params,
+                                   opt_state=opt_state)
                 break
+    finally:
+        if own_guard:
+            guard.__exit__(None, None, None)
     if ckpt:
         ckpt.wait()
     loader.close()

@@ -28,6 +28,8 @@ from repro.tune.calibrate import (CalibrationResult, calibrate_from_db,
                                   fit_latency_model, model_vs_measured)
 from repro.tune.prune import (calibration_from_db, predicted_e2e,
                               predicted_latency, prune_candidates)
+from repro.tune.elastic import (degraded_calibration, model_reselect,
+                                reselect_round_configs)
 
 
 def run_sweep(*args, **kwargs):
@@ -39,8 +41,9 @@ def run_sweep(*args, **kwargs):
 __all__ = [
     "CalibrationResult", "TuneDB", "TuneEntry", "calibrate_from_db",
     "calibration_from_db", "config_from_dict", "config_to_dict",
-    "default_db_path", "enumerate_configs", "fit_latency_model",
-    "model_vs_measured", "predicted_e2e", "predicted_latency",
-    "prune_candidates", "run_sweep", "select_config", "space_size",
+    "default_db_path", "degraded_calibration", "enumerate_configs",
+    "fit_latency_model", "model_reselect", "model_vs_measured",
+    "predicted_e2e", "predicted_latency", "prune_candidates",
+    "reselect_round_configs", "run_sweep", "select_config", "space_size",
     "topology_key",
 ]

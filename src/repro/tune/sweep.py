@@ -466,6 +466,9 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     # behind plans.cache_stats()), so the warm-sweep report shares one
     # source of truth with every other telemetry consumer.
     reg = obs_metrics.registry()
+    # Witness for the elastic runtime's no-resweep guarantee: recovery tests
+    # assert this counter stays flat across model-based re-selection.
+    reg.counter("sweep.runs").inc()
     cache_ctrs = {k: reg.counter(f"plans.{k}") for k in
                   ("plan_hits", "plan_misses",
                    "program_hits", "program_misses",
