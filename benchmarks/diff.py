@@ -38,7 +38,8 @@ from typing import Sequence
 # a bigger number is not a regression there.
 _NON_LATENCY_PREFIXES = ("fig3_", "table1_", "fig11_speedup",
                          "lmcoll_tp_reduce_speedup", "lmcoll_moe_a2a_speedup",
-                         "e2e_gain_", "topo_hop_ratio", "ft_reselect_speedup")
+                         "e2e_gain_", "topo_hop_ratio", "ft_reselect_speedup",
+                         "rt_guaranteed_overhead", "rt_loss5_penalty")
 
 # New rows that stay report-only until they have >= 2 committed baselines.
 # The e2e_ rows graduated with bench_pr5.json; the topo_ hop-scaling rows
@@ -46,8 +47,10 @@ _NON_LATENCY_PREFIXES = ("fig3_", "table1_", "fig11_speedup",
 # topo_hop_ratio stays a non-latency ratio).  The ft_ fault-tolerance rows
 # are new this PR (recovery wall clock is dominated by jit rebuilds and
 # noisy on shared CI hosts — they ride report-only until a noise floor
-# exists; ft_reselect_speedup stays a non-latency ratio).
-DEFAULT_REPORT_ONLY_PREFIXES = ("ft_",)
+# exists; ft_reselect_speedup stays a non-latency ratio).  The rt_
+# reliable-transport rows are likewise new (rt_guaranteed_overhead and
+# rt_loss5_penalty stay non-latency ratios).
+DEFAULT_REPORT_ONLY_PREFIXES = ("ft_", "rt_")
 
 
 def load_rows(path: str) -> dict:

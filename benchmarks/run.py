@@ -31,7 +31,8 @@ def main() -> None:
     _ensure_devices()
     from benchmarks import (b_eff, e2e_objective, fault_tolerance,
                             lm_collectives, lm_roofline, plan_store,
-                            resources, swe_scaling, topology_hops)
+                            reliability, resources, swe_scaling,
+                            topology_hops)
 
     print("name,us_per_call,derived")
     modules = [("b_eff(fig4)", b_eff), ("resources(fig3)", resources),
@@ -41,7 +42,8 @@ def main() -> None:
                ("e2e_objective", e2e_objective),
                ("topology_hops", topology_hops),
                ("plan_store", plan_store),
-               ("fault_tolerance", fault_tolerance)]
+               ("fault_tolerance", fault_tolerance),
+               ("reliability", reliability)]
     only = None
     json_path = "BENCH_comm.json"
     for a in sys.argv[1:]:

@@ -95,7 +95,8 @@ def sendrecv(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
                         if isinstance(perm, topology.RoutedPerm)
                         else len(perm),
                         mode=cfg.mode, transport=cfg.transport,
-                        scheduling=cfg.scheduling):
+                        scheduling=cfg.scheduling,
+                        reliability=cfg.reliability):
         if cfg.mode == CommMode.STREAMING:
             return streaming.chunked_permute(x, perm, comm.axis, cfg)
         return streaming.buffered_permute(x, perm, comm.axis, cfg)
@@ -154,7 +155,8 @@ def multi_neighbor_exchange(payloads: Sequence[jnp.ndarray],
         "multi_neighbor", cat="collective", rounds=len(rounds),
         hops=comm.max_hops([e for r in rounds for e in r]),
         nbytes=_nbytes(payloads[0]) if payloads else 0,
-        mode=cfg.mode, transport=cfg.transport, scheduling=cfg.scheduling)
+        mode=cfg.mode, transport=cfg.transport, scheduling=cfg.scheduling,
+        reliability=cfg.reliability)
     if cfg.scheduling == Scheduling.OVERLAPPED:
         if round_cfgs is not None and any(c != cfg for c in round_cfgs):
             raise ValueError(
@@ -325,6 +327,7 @@ def all_reduce(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
                         nbytes=_nbytes(x), algorithm=cfg.algorithm,
                         mode=cfg.mode, transport=cfg.transport,
                         scheduling=cfg.scheduling,
+                        reliability=cfg.reliability,
                         hops=comm.max_hops(comm.ring_perm())
                         if cfg.algorithm == "ring" and comm.single_axis
                         else 1):
@@ -354,7 +357,8 @@ def all_gather(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
                axis: int = 0, tiled: bool = True) -> jnp.ndarray:
     with obs_trace.span("all_gather", cat="collective", nbytes=_nbytes(x),
                         algorithm=cfg.algorithm, mode=cfg.mode,
-                        transport=cfg.transport, scheduling=cfg.scheduling):
+                        transport=cfg.transport, scheduling=cfg.scheduling,
+                        reliability=cfg.reliability):
         if cfg.algorithm == "ring" and comm.single_axis:
             stacked = ring_all_gather(x, comm, cfg)
             if not tiled:
@@ -370,7 +374,8 @@ def reduce_scatter(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
     with obs_trace.span("reduce_scatter", cat="collective",
                         nbytes=_nbytes(x), algorithm=cfg.algorithm,
                         mode=cfg.mode, transport=cfg.transport,
-                        scheduling=cfg.scheduling):
+                        scheduling=cfg.scheduling,
+                        reliability=cfg.reliability):
         if cfg.algorithm == "ring" and comm.single_axis:
             return ring_reduce_scatter(x, comm, cfg, op)
         assert op == "sum"
@@ -389,7 +394,8 @@ def all_to_all(x: jnp.ndarray, comm: Communicator, cfg: CommConfig,
     """
     with obs_trace.span("all_to_all", cat="collective", nbytes=_nbytes(x),
                         mode=cfg.mode, transport=cfg.transport,
-                        scheduling=cfg.scheduling):
+                        scheduling=cfg.scheduling,
+                        reliability=cfg.reliability):
         if (cfg.scheduling == Scheduling.OVERLAPPED
                 and cfg.mode == CommMode.STREAMING):
             return streaming.chunked_all_to_all(x, comm, cfg, split_axis,
@@ -425,7 +431,8 @@ def hierarchical_all_reduce(x: jnp.ndarray, inner: Communicator,
                         nbytes=_nbytes(x), inner=inner.size,
                         outer=outer.size, mode=cfg.mode,
                         transport=cfg.transport,
-                        scheduling=cfg.scheduling):
+                        scheduling=cfg.scheduling,
+                        reliability=cfg.reliability):
         flat = x.reshape(-1)
         n = inner.size
         pad = (-flat.shape[0]) % n

@@ -51,6 +51,14 @@ class Compression(str, enum.Enum):
     BF16 = "bf16"    # wire-cast to bf16 (2x fewer bytes vs f32)
 
 
+class Reliability(str, enum.Enum):
+    """The paper's network-stack axis: ACCL runs over TCP (guaranteed
+    delivery, retransmits priced in) or UDP (best effort, lowest latency,
+    loss is the application's problem)."""
+    BEST_EFFORT = "best_effort"  # UDP-like: no seq/ack/retransmit machinery
+    GUARANTEED = "guaranteed"    # TCP-like: seq stamps, acks, retransmission
+
+
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
     mode: CommMode = CommMode.STREAMING
@@ -69,6 +77,17 @@ class CommConfig:
     algorithm: str = "native"
     # Quantization block size for the int8 wire format.
     quant_block: int = 256
+    # Reliable-wire protocol (repro.core.reliable).  BEST_EFFORT is the
+    # UDP-like default: the chunk pipeline runs with zero protocol overhead
+    # and injected wire faults are unrecoverable.  GUARANTEED adds sequence
+    # stamps, receiver dedup/reassembly, ack-timeout detection and capped
+    # exponential backoff retransmission — each recovery step is a real
+    # extra permute round with a measurable latency price.
+    reliability: Reliability = Reliability.BEST_EFFORT
+    ack_timeout: int = 2       # slots without an ack before a retransmit
+    max_retransmits: int = 4   # attempts per chunk before the wire "relents"
+    backoff_base: int = 1      # hold slots before the 1st retransmit
+    backoff_cap: int = 4       # backoff ceiling in hold slots
 
     def __post_init__(self):
         if self.compression != Compression.NONE and not self.enable_compression_plugin:
@@ -84,6 +103,17 @@ class CommConfig:
             raise ValueError("window must be >= 1")
         if self.chunk_bytes < 512:
             raise ValueError("chunk_bytes must be >= 512")
+        if self.ack_timeout < 1:
+            raise ValueError("ack_timeout must be >= 1 slot")
+        if self.max_retransmits < 1:
+            raise ValueError("max_retransmits must be >= 1 (a transport that "
+                             "never retransmits is BEST_EFFORT, not a "
+                             "zero-retry GUARANTEED)")
+        if self.backoff_base < 0:
+            raise ValueError("backoff_base must be >= 0")
+        if self.backoff_cap < self.backoff_base:
+            raise ValueError("backoff_cap must be >= backoff_base (the cap "
+                             "bounds the exponential schedule from above)")
 
 
 # Paper-faithful baseline: buffered communication scheduled from the host —

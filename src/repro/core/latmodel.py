@@ -20,7 +20,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.config import CommConfig, CommMode, Compression, HardwareSpec, Scheduling, V5E
+from repro.core.config import (CommConfig, CommMode, Compression, HardwareSpec,
+                               Reliability, Scheduling, V5E)
 
 
 def wire_bytes(msg_bytes: int, cfg: CommConfig) -> float:
@@ -66,8 +67,39 @@ def l_c(msg_bytes: int, cfg: CommConfig, hw: HardwareSpec = V5E,
     return lat + wire_bytes(msg_bytes, cfg) / hw.ici_bw
 
 
+def expected_retransmit_factor(cfg: CommConfig, loss: float) -> float:
+    """Expected wire slots per chunk under per-transmission loss rate
+    ``loss`` — the reliability layer's Eq. 1 term.
+
+    A chunk that fails its first ``k`` transmissions costs, beyond the one
+    lossless slot, ``k`` retransmission slots plus each retry's ack-timeout
+    wait and capped-exponential backoff holds
+    (:func:`repro.core.reliable.backoff_holds`).  Summing over the loss
+    geometric series (truncated at ``max_retransmits`` — the emulated wire
+    relents within the cap):
+
+        E[slots] = 1 + sum_{k>=1} p^k (ack_timeout + backoff(k) + 1)
+
+    BEST_EFFORT has no protocol, so loss never costs it slots (it costs it
+    the delivery guarantee instead); the factor is 1.0.  This is what makes
+    ``select_config`` answer "jumbo frames win clean links, small segments
+    win lossy ones": the factor multiplies *per-chunk* serialization, and a
+    buffered/jumbo transfer re-pays its whole message per retransmit while
+    small segments only re-pay the lost chunk.
+    """
+    if loss <= 0.0 or cfg.reliability != Reliability.GUARANTEED:
+        return 1.0
+    if not 0.0 <= loss < 1.0:
+        raise ValueError(f"loss rate must be in [0, 1), got {loss}")
+    factor = 1.0
+    for k in range(1, cfg.max_retransmits + 1):
+        backoff = min(cfg.backoff_base * (2 ** (k - 1)), cfg.backoff_cap)
+        factor += (loss ** k) * (cfg.ack_timeout + backoff + 1.0)
+    return factor
+
+
 def pingping_latency(msg_bytes: int, cfg: CommConfig, hw: HardwareSpec = V5E,
-                     hops: int = 1) -> float:
+                     hops: int = 1, loss: float = 0.0) -> float:
     """Eq. 1 with the multi-hop route term.  At ``hops == 1`` this is the
     classic model; a routed ``h``-hop edge (the virtual torus transport's
     store-and-forward lowering) additionally pays:
@@ -85,24 +117,33 @@ def pingping_latency(msg_bytes: int, cfg: CommConfig, hw: HardwareSpec = V5E,
     chunks win direct links (fewer scheduled commands), small chunks win
     long routes (pipelining) — and it mirrors what the emulated transport
     physically executes (one permute per chunk per hop).
+
+    ``loss`` prices the GUARANTEED reliability protocol on a lossy wire:
+    per-chunk serialization (and its scheduled command) is multiplied by
+    :func:`expected_retransmit_factor` — buffered mode's single jumbo
+    "chunk" re-pays the whole message per retransmit, streaming re-pays one
+    segment, which flips the jumbo-vs-segment winner as loss grows.
     """
     h = max(1, hops)
     lat = hw.ici_latency + (h - 1) * hw.ici_hop_latency
     wire = wire_bytes(msg_bytes, cfg)
+    rf = expected_retransmit_factor(cfg, loss)
     if cfg.mode == CommMode.BUFFERED:
         return (2.0 * l_k(cfg, hw) + l_m(msg_bytes, hw) + lat
-                + h * wire / hw.ici_bw)
+                + rf * h * wire / hw.ici_bw)
     # Streaming: no staging copy; every chunk is one scheduled command
     # (n_commands — sub-µs fused on real hardware, dominant on host-CPU
     # substrates), and chunks pipeline across the route's hops.
     n = n_commands(msg_bytes, cfg)
-    return n * l_k(cfg, hw) + lat + (n + h - 1) * (wire / n) / hw.ici_bw
+    return (rf * n * l_k(cfg, hw) + lat
+            + rf * (n + h - 1) * (wire / n) / hw.ici_bw)
 
 
 def effective_bandwidth(msg_bytes: int, cfg: CommConfig,
-                        hw: HardwareSpec = V5E, hops: int = 1) -> float:
+                        hw: HardwareSpec = V5E, hops: int = 1,
+                        loss: float = 0.0) -> float:
     """B/s delivered for a message of msg_bytes (the b_eff metric)."""
-    return msg_bytes / pingping_latency(msg_bytes, cfg, hw, hops)
+    return msg_bytes / pingping_latency(msg_bytes, cfg, hw, hops, loss=loss)
 
 
 def buffered_peak_bw(hw: HardwareSpec = V5E) -> float:
@@ -193,7 +234,8 @@ def eq2_throughput_overlap(w: SWEWorkload, cfg: CommConfig,
 
 
 def e2e_consumer_latency(msg_bytes: int, cfg: CommConfig, compute_s: float,
-                         hw: HardwareSpec = V5E, hops: int = 1) -> float:
+                         hw: HardwareSpec = V5E, hops: int = 1,
+                         loss: float = 0.0) -> float:
     """Overlap-aware Eq. 2 applied to a consumer loop: predicted seconds per
     iteration of (hideable compute + collective) under ``cfg``.
 
@@ -205,7 +247,7 @@ def e2e_consumer_latency(msg_bytes: int, cfg: CommConfig, compute_s: float,
     the one that scales the consuming kernel), and what lets ``tune.prune``
     rank candidates end-to-end without measuring them.
     """
-    comm_s = pingping_latency(msg_bytes, cfg, hw, hops)
+    comm_s = pingping_latency(msg_bytes, cfg, hw, hops, loss=loss)
     ov = overlap_fraction(cfg)
     return ov * max(compute_s, comm_s) + (1.0 - ov) * (compute_s + comm_s)
 

@@ -64,7 +64,7 @@ ENV_VAR = "REPRO_PLAN_DIR"
 # plans._memo kinds whose values serialize to JSON and persist here.
 # "program" (compiled callables) is deliberately absent: it persists through
 # the JAX compilation cache wired by _wire_jax_cache instead.
-DISK_KINDS = frozenset({"chunks", "rounds", "ring", "perm", "plan"})
+DISK_KINDS = frozenset({"chunks", "rounds", "ring", "perm", "plan", "wire"})
 
 #: Sentinel returned by :meth:`PlanStore.get` when no usable entry exists
 #: (distinct from a legitimately-cached ``None`` value).
@@ -202,6 +202,13 @@ def _encode_value(kind: str, value: Any) -> Any:
     if kind == "chunks":
         return {"n_chunks": value.n_chunks, "chunk_elems": value.chunk_elems,
                 "ack_of": list(value.ack_of)}
+    if kind == "wire":
+        return {"n_chunks": value.n_chunks,
+                "slots": [[s.seq, s.action, s.attempt] for s in value.slots],
+                "retransmits": value.retransmits,
+                "dup_dropped": value.dup_dropped,
+                "timeouts": value.timeouts,
+                "backoff_holds": value.backoff_holds}
     if kind == "plan":
         chunks = None
         if value.chunks is not None:
@@ -224,6 +231,16 @@ def _decode_value(kind: str, payload: Any) -> Any:
         return plans.ChunkPlan(n_chunks=int(payload["n_chunks"]),
                                chunk_elems=int(payload["chunk_elems"]),
                                ack_of=tuple(int(a) for a in payload["ack_of"]))
+    if kind == "wire":
+        from repro.core import reliable
+        return reliable.DeliveryPlan(
+            n_chunks=int(payload["n_chunks"]),
+            slots=tuple(reliable.Slot(int(s), str(a), int(k))
+                        for s, a, k in payload["slots"]),
+            retransmits=int(payload["retransmits"]),
+            dup_dropped=int(payload["dup_dropped"]),
+            timeouts=int(payload["timeouts"]),
+            backoff_holds=int(payload["backoff_holds"]))
     if kind == "plan":
         chunks = (None if payload["chunks"] is None
                   else _decode_value("chunks", payload["chunks"]))

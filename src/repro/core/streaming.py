@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.config import CommConfig, CommMode, Compression, Transport
-from repro.core import plans, plugins
+from repro.core import plans, plugins, reliable
 from repro.obs import trace as obs_trace
 
 
@@ -98,6 +98,72 @@ def split_chunks(x: jnp.ndarray, n: int):
     return chunks, unsplit
 
 
+def _reliable_stream(rplan, chunks, perm, axis_name: str, cfg: CommConfig,
+                     consume: Callable | None = None, init=None):
+    """Execute a :class:`repro.core.reliable.DeliveryPlan`: one real wire
+    round per slot, value-preserving.
+
+    Every slot — original transmission, lost transmission, duplicate,
+    backoff hold — runs a full ``wire_permute`` of its sequence's chunk, so
+    recovery costs real permute rounds (the topology layer's hold-round
+    idiom at wire granularity).  Only ``DELIVER`` slots land in the
+    receiver's reassembly buffer; the wire output of every other slot is
+    threaded through ``lax.optimization_barrier`` into the next slot's
+    payload (or the final message), which (a) stops XLA dead-code-eliminating
+    the unused permute and (b) serializes recovery after the fault it
+    repairs.  Ordered transport chains slot *j* on slot *j - window*'s wire
+    output — the ack window at slot granularity, covering retransmissions
+    too.
+
+    ``consume(carry, seq, chunk)`` is fired in sequence order via the
+    reassembly flush: seq *i* is folded only once every seq ``<= i`` has
+    been delivered, so a pipelined consumer's fold order — and therefore
+    its float accumulation — is bitwise-identical under any wire reorder.
+
+    Returns ``(carry, [chunk_0, ..., chunk_{n-1}])`` in sequence order.
+    """
+    reliable.record(rplan, cfg)
+    ordered = cfg.transport == Transport.ORDERED
+    received: dict = {}
+    outs: list = []
+    waste = None
+    carry = init
+    next_flush = 0
+    for j, slot in enumerate(rplan.slots):
+        payload = chunks[slot.seq]
+        with obs_trace.span("wire.slot", cat="wire", slot=j, of=len(rplan.slots),
+                            seq=slot.seq, action=slot.action,
+                            attempt=slot.attempt):
+            deps = []
+            if ordered and j >= cfg.window:
+                deps.append(outs[j - cfg.window])
+            if waste is not None:
+                deps.append(waste)
+                waste = None
+            if deps:
+                bar = lax.optimization_barrier((payload, *deps))
+                payload = bar[0]
+            enc, dec = plugins.wire_encode(payload, cfg)
+            out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm),
+                               enc)
+            outs.append(out)
+            if slot.action == reliable.DELIVER:
+                received[slot.seq] = dec(out)
+            else:
+                waste = out
+        if consume is not None:
+            while next_flush in received:
+                carry = consume(carry, next_flush, received[next_flush])
+                next_flush += 1
+    if waste is not None:
+        # A trailing non-delivered slot (e.g. a duplicate of the last chunk):
+        # anchor its wire output on the final message so it survives DCE.
+        last = max(received)
+        merged = lax.optimization_barrier((received[last], waste))
+        received[last] = merged[0]
+    return carry, [received[i] for i in range(rplan.n_chunks)]
+
+
 def chunked_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
                     axis_name: str, cfg: CommConfig) -> jnp.ndarray:
     """Streaming point-to-point transfer of ``x`` along ``perm``.
@@ -109,6 +175,10 @@ def chunked_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     plan = plans.chunk_plan(x.shape, x.dtype, cfg, equal_split=True)
     n = plan.n_chunks
     chunks, unsplit = split_chunks(x, n)
+    rplan = reliable.plan_for(cfg, n)
+    if rplan is not None:
+        _, seq_chunks = _reliable_stream(rplan, chunks, perm, axis_name, cfg)
+        return unsplit(jnp.stack(seq_chunks))
     received = []
     for i in range(n):
         payload = chunks[i]
@@ -135,6 +205,13 @@ def buffered_permute(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     landed (the paper's l_m staging-copy term, which also halves effective
     peak throughput to (1/bw_link + 1/bw_mem)^-1).
     """
+    rplan = reliable.plan_for(cfg, 1)
+    if rplan is not None:
+        # Buffered = a one-chunk message: losing it on the wire costs a
+        # whole-message retransmit (why small segments win lossy links).
+        _, seq_chunks = _reliable_stream(rplan, [x], perm, axis_name, cfg)
+        out = lax.optimization_barrier(seq_chunks[0])
+        return out
     with obs_trace.span("wire.message", cat="wire", elems=int(x.size)):
         enc, dec = plugins.wire_encode(x, cfg)
         out = jax.tree.map(lambda t: wire_permute(t, axis_name, perm), enc)
@@ -165,6 +242,13 @@ def pipelined_consume(x: jnp.ndarray, perm: Sequence[tuple[int, int]],
     if pad:
         flat = jnp.pad(flat, (0, pad))
     chunks = flat.reshape(n, chunk_elems)
+    rplan = reliable.plan_for(cfg, n)
+    if rplan is not None:
+        carry, seq_chunks = _reliable_stream(rplan, chunks, perm, axis_name,
+                                             cfg, consume=consume, init=init)
+        msg = (jnp.stack(seq_chunks).reshape(-1)[: x.size]
+               .reshape(x.shape).astype(x.dtype))
+        return carry, msg
     carry = init
     received = []
     for i in range(n):

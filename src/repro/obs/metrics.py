@@ -242,6 +242,19 @@ class Registry:
             inst.reset()
 
 
+def percentile_of(samples: Sequence[float], p: float,
+                  bounds: Optional[Sequence[float]] = None) -> float:
+    """Interpolated percentile of a raw sample list, computed through the
+    same fixed-bucket machinery the registry histograms use — so a
+    per-candidate tail estimate (the sweep's ``TuneEntry.p95_us``) agrees
+    bucket-for-bucket with the aggregate ``sweep.us`` series.  Empty input
+    returns 0.0 (the "no tail data" sentinel ``TuneDB._rank`` respects)."""
+    h = Histogram("adhoc", bounds=bounds)
+    for v in samples:
+        h.observe(v)
+    return h.percentile(p)
+
+
 _REGISTRY = Registry()
 
 

@@ -31,6 +31,7 @@ no-fault reference run.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import time
@@ -39,6 +40,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import reliable
+from repro.core.config import Reliability
 from repro.obs import metrics as obs_metrics
 from repro.runtime.faults import (DegradationMonitor, FaultInjector,
                                   FaultSchedule, RankLostError)
@@ -48,7 +51,7 @@ from repro.runtime.faults import (DegradationMonitor, FaultInjector,
 class Recovery:
     """One recovery action taken mid-run."""
     step: int
-    kind: str                  # "rank_lost" | "degraded_link"
+    kind: str                  # "rank_lost" | "degraded_link" | "lossy_wire"
     detail: str
     wall_s: float
     configs_before: list
@@ -68,6 +71,11 @@ class ElasticReport:
     recoveries: list         # list[Recovery]
     sweep_runs_delta: int    # MUST be 0: no sweep during recovery
     drained: bool = False
+    # Reliable-wire deltas over the run (0 on a clean wire — the fault-free
+    # self-check; > 0 is the witness that chunk-loss recovery actually fired).
+    wire_retransmits: int = 0
+    wire_dup_dropped: int = 0
+    wire_timeouts: int = 0
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -96,16 +104,20 @@ def _physical_edges(spec) -> list:
             for a, b in _torus_links(spec.shape)]
 
 
-def reselect_swe(pm, topology, db, objective: str, fallback):
+def reselect_swe(pm, topology, db, objective: str, fallback,
+                 loss: float = 0.0):
     """Model-based per-round selection for an SWE exchange pattern on
     ``topology`` — the recovery-time twin of ``build_simulation``'s
-    measured selection.  Returns ``(representative_cfg, round_cfgs)``."""
+    measured selection.  Returns ``(representative_cfg, round_cfgs)``.
+    ``loss`` > 0 prices candidates for a lossy wire (guaranteed delivery
+    with the Eq. 1 retransmit surcharge)."""
     from repro.core.communicator import Communicator
     from repro.tune.elastic import reselect_round_configs
     halo_bytes = int(pm.s_max) * 3 * 4
     comm = Communicator(("data",), (pm.n_parts,), topo=topology)
     return reselect_round_configs(pm.rounds, comm, halo_bytes, db=db,
-                                  objective=objective, fallback=fallback)
+                                  objective=objective, loss=loss,
+                                  fallback=fallback)
 
 
 def run_swe_elastic(n_elements: int, n_devices: int, topology,
@@ -146,6 +158,14 @@ def run_swe_elastic(n_elements: int, n_devices: int, topology,
     recoveries: list = []
     drained = False
 
+    # Reliable-wire bookkeeping: counter baseline for the report deltas,
+    # the currently injected WireFaults (None = clean wire), and the
+    # per-trace counter delta replays re-charge (see the segment loop).
+    wire0 = reliable.wire_counters()
+    wire_stack = contextlib.ExitStack()
+    active_wire = None
+    last_trace_delta: dict = {}
+
     # Segment-boundary snapshot (global order) — the in-memory checkpoint
     # rank-loss recovery unwinds to.
     snap_state = driver.flatten_state(sim, np.asarray(state))
@@ -167,107 +187,183 @@ def run_swe_elastic(n_elements: int, n_devices: int, topology,
         return s
 
     step = 0
-    while step < n_steps:
-        n_inner = min(segment, n_steps - step)
-        try:
-            fired = injector.poll(step, guard=guard)
-        except RankLostError as e:
-            # --- rank-loss recovery: survivors re-form from the snapshot
-            t0 = time.perf_counter()
-            before = _sim_configs(sim)
-            survivors = sim.pm.n_parts - 1
-            if survivors < 1:
-                raise
-            new_topo = (believed_spec.shrink(survivors)
-                        if believed_spec is not None else None)
-            from repro.swe.partition import partition_mesh
-            pm = partition_mesh(sim.mesh, survivors, snap_state)
-            rep, rcfgs = reselect_swe(pm, new_topo, db, objective,
-                                      fallback_cfg)
-            sim = rebuild(new_topo, survivors, snap_state, rep, rcfgs)
-            believed_spec = new_topo
-            injector.active_slowdowns.clear()   # dead rank's fabric is gone
-            state, t = sim.state, snap_t
-            step = snap_step
-            recoveries.append(Recovery(
-                step=e.step, kind="rank_lost",
-                detail=f"rank {e.rank} lost; {survivors} survivors on "
-                       f"{new_topo.name if new_topo else 'flat'}",
-                wall_s=time.perf_counter() - t0,
-                configs_before=before, configs_after=_sim_configs(sim)))
-            log(f"[elastic] rank {e.rank} lost at step {e.step}: resumed "
-                f"from step {snap_step} on {survivors} partitions")
-            continue
-
-        if guard is not None and guard.preempted:
-            drained = True
-            break
-
-        if any(ev.kind == "degraded_link" for ev in fired):
-            # Wire-layer injection: physics change, belief doesn't.  The
-            # degraded spec's routed plans carry the hold rounds; routes and
-            # configs stay what the healthy fabric chose.
-            phys = injector.degrade_spec(
-                believed_spec.without_degradations()
-                if believed_spec is not None else None)
-            if phys is not None:
-                sim = rebuild(phys, sim.pm.n_parts,
-                              driver.flatten_state(sim, np.asarray(state)),
-                              sim.comm_cfg, sim.round_cfgs)
-                state = sim.state
-                log(f"[elastic] degraded links now "
-                    f"{dict(injector.active_slowdowns)}")
-
-        run = driver.make_sim_runner(sim, n_inner)
-        state = run(state, t)
-        import jax
-        jax.block_until_ready(state)
-        t += sim.swe.dt * n_inner
-        step += n_inner
-
-        # Segment boundary: snapshot + digest + telemetry -> monitor.
-        snap_state = driver.flatten_state(sim, np.asarray(state))
-        snap_step, snap_t = step, t
-        digests.append((step, driver.state_digest(sim, np.asarray(state))))
-        n_parts_hist.append(sim.pm.n_parts)
-
-        spec_now = getattr(sim, "topology", None)
-        if spec_now is not None:
-            samples = injector.edge_latency_samples(
-                step, _physical_edges(spec_now))
-            confirmed = monitor.observe(step, samples)
-            if confirmed:
-                # --- degraded-but-alive recovery: re-route + re-select
+    try:
+        while step < n_steps:
+            n_inner = min(segment, n_steps - step)
+            try:
+                fired = injector.poll(step, guard=guard)
+            except RankLostError as e:
+                # --- rank-loss recovery: survivors re-form from the snapshot
                 t0 = time.perf_counter()
                 before = _sim_configs(sim)
-                believed = believed_spec.without_degradations() \
-                    if believed_spec is not None else None
-                for (a, b) in sorted(monitor.confirmed):
-                    f = injector.active_slowdowns.get((a, b), 1.0)
-                    if f > 1.0 and believed is not None:
-                        believed = believed.with_link_slowdown(a, b, f)
-                phys = believed.with_reroute(True) if believed is not None \
-                    else None
-                rep, rcfgs = reselect_swe(sim.pm, phys, db, objective,
+                survivors = sim.pm.n_parts - 1
+                if survivors < 1:
+                    raise
+                new_topo = (believed_spec.shrink(survivors)
+                            if believed_spec is not None else None)
+                from repro.swe.partition import partition_mesh
+                pm = partition_mesh(sim.mesh, survivors, snap_state)
+                rep, rcfgs = reselect_swe(pm, new_topo, db, objective,
                                           fallback_cfg)
-                sim = rebuild(phys, sim.pm.n_parts, snap_state, rep, rcfgs)
-                believed_spec = phys
-                state = sim.state
+                sim = rebuild(new_topo, survivors, snap_state, rep, rcfgs)
+                believed_spec = new_topo
+                injector.active_slowdowns.clear()   # dead rank's fabric is gone
+                state, t = sim.state, snap_t
+                step = snap_step
                 recoveries.append(Recovery(
-                    step=step, kind="degraded_link",
-                    detail=f"confirmed {sorted(confirmed)}; rerouted + "
-                           f"model-reselected",
+                    step=e.step, kind="rank_lost",
+                    detail=f"rank {e.rank} lost; {survivors} survivors on "
+                           f"{new_topo.name if new_topo else 'flat'}",
                     wall_s=time.perf_counter() - t0,
                     configs_before=before, configs_after=_sim_configs(sim)))
-                log(f"[elastic] degradation confirmed on {sorted(confirmed)}"
-                    f": rerouted and re-selected")
+                log(f"[elastic] rank {e.rank} lost at step {e.step}: resumed "
+                    f"from step {snap_step} on {survivors} partitions")
+                continue
 
+            if guard is not None and guard.preempted:
+                drained = True
+                break
+
+            if any(ev.kind == "degraded_link" for ev in fired):
+                # Wire-layer injection: physics change, belief doesn't.  The
+                # degraded spec's routed plans carry the hold rounds; routes and
+                # configs stay what the healthy fabric chose.
+                phys = injector.degrade_spec(
+                    believed_spec.without_degradations()
+                    if believed_spec is not None else None)
+                if phys is not None:
+                    sim = rebuild(phys, sim.pm.n_parts,
+                                  driver.flatten_state(sim, np.asarray(state)),
+                                  sim.comm_cfg, sim.round_cfgs)
+                    state = sim.state
+                    log(f"[elastic] degraded links now "
+                        f"{dict(injector.active_slowdowns)}")
+
+            wf = injector.wire_faults()
+            if wf != active_wire:
+                # chunk_loss fired (or escalated): inject the chunk-level
+                # schedule and promote the run's configs to guaranteed delivery
+                # — best-effort messages cannot survive a dropping wire.
+                wire_stack.close()
+                wire_stack = contextlib.ExitStack()
+                if wf is not None:
+                    wire_stack.enter_context(reliable.inject(wf))
+                active_wire = wf
+                last_trace_delta = {}
+                if wf is not None and wf.lossy():
+                    rep = dataclasses.replace(
+                        sim.comm_cfg, reliability=Reliability.GUARANTEED)
+                    rcfgs = ([dataclasses.replace(
+                        c, reliability=Reliability.GUARANTEED)
+                        for c in sim.round_cfgs] if sim.round_cfgs else None)
+                    if (rep, rcfgs) != (sim.comm_cfg, sim.round_cfgs):
+                        sim = rebuild(
+                            getattr(sim, "topology", believed_spec),
+                            sim.pm.n_parts,
+                            driver.flatten_state(sim, np.asarray(state)),
+                            rep, rcfgs)
+                        state = sim.state
+                    log(f"[elastic] chunk loss active (drop={wf.drop:.1%}): "
+                        f"wire promoted to guaranteed delivery")
+
+            run = driver.make_sim_runner(sim, n_inner)
+            seg_wire = reliable.wire_counters()
+            state = run(state, t)
+            import jax
+            jax.block_until_ready(state)
+            if active_wire is not None:
+                # wire.* counters increment at TRACE time; a replayed program
+                # still EXECUTES its recovery rounds, so re-charge the last
+                # traced delta once per replayed segment — that steady
+                # per-observation signal is what the monitor's retransmit
+                # streak detects.
+                now = reliable.wire_counters()
+                delta = {k: now[k] - seg_wire[k] for k in seg_wire}
+                if any(delta.values()):
+                    last_trace_delta = delta
+                elif last_trace_delta:
+                    for k, v in last_trace_delta.items():
+                        if v:
+                            reg.counter(f"wire.{k}").inc(v)
+            t += sim.swe.dt * n_inner
+            step += n_inner
+
+            # Segment boundary: snapshot + digest + telemetry -> monitor.
+            snap_state = driver.flatten_state(sim, np.asarray(state))
+            snap_step, snap_t = step, t
+            digests.append((step, driver.state_digest(sim, np.asarray(state))))
+            n_parts_hist.append(sim.pm.n_parts)
+
+            spec_now = getattr(sim, "topology", None)
+            if spec_now is not None:
+                samples = injector.edge_latency_samples(
+                    step, _physical_edges(spec_now))
+                confirmed = monitor.observe(step, samples)
+                if confirmed:
+                    # --- degraded-but-alive recovery: re-route + re-select
+                    t0 = time.perf_counter()
+                    before = _sim_configs(sim)
+                    believed = believed_spec.without_degradations() \
+                        if believed_spec is not None else None
+                    for (a, b) in sorted(monitor.confirmed):
+                        f = injector.active_slowdowns.get((a, b), 1.0)
+                        if f > 1.0 and believed is not None:
+                            believed = believed.with_link_slowdown(a, b, f)
+                    phys = believed.with_reroute(True) if believed is not None \
+                        else None
+                    rep, rcfgs = reselect_swe(sim.pm, phys, db, objective,
+                                              fallback_cfg)
+                    sim = rebuild(phys, sim.pm.n_parts, snap_state, rep, rcfgs)
+                    believed_spec = phys
+                    state = sim.state
+                    recoveries.append(Recovery(
+                        step=step, kind="degraded_link",
+                        detail=f"confirmed {sorted(confirmed)}; rerouted + "
+                               f"model-reselected",
+                        wall_s=time.perf_counter() - t0,
+                        configs_before=before, configs_after=_sim_configs(sim)))
+                    log(f"[elastic] degradation confirmed on {sorted(confirmed)}"
+                        f": rerouted and re-selected")
+                if monitor.wire_confirmed:
+                    # --- lossy-wire recovery: the retransmit streak confirmed a
+                    # dropping wire; re-select with the Eq. 1 loss surcharge so
+                    # segment sizes suit the lossy link (no sweep runs).
+                    t0 = time.perf_counter()
+                    before = _sim_configs(sim)
+                    loss_est = (active_wire.drop
+                                if active_wire is not None else 0.0)
+                    rep, rcfgs = reselect_swe(sim.pm, spec_now, db, objective,
+                                              fallback_cfg, loss=loss_est)
+                    rep = dataclasses.replace(
+                        rep, reliability=Reliability.GUARANTEED)
+                    rcfgs = ([dataclasses.replace(
+                        c, reliability=Reliability.GUARANTEED) for c in rcfgs]
+                        if rcfgs else None)
+                    sim = rebuild(spec_now, sim.pm.n_parts, snap_state, rep,
+                                  rcfgs)
+                    state = sim.state
+                    recoveries.append(Recovery(
+                        step=step, kind="lossy_wire",
+                        detail=f"retransmit streak confirmed (last delta "
+                               f"{monitor.last_retransmit_delta}); loss-aware "
+                               f"model re-selection at loss={loss_est:g}",
+                        wall_s=time.perf_counter() - t0,
+                        configs_before=before, configs_after=_sim_configs(sim)))
+                    log(f"[elastic] lossy wire confirmed at step {step}: "
+                        f"re-selected for loss={loss_est:g}")
+
+    finally:
+        wire_stack.close()
+    wire1 = reliable.wire_counters()
     final = driver.state_digest(sim, np.asarray(state))
     return ElasticReport(
         digests=digests, final_digest=final, steps_run=step,
         n_parts=n_parts_hist, recoveries=recoveries,
         sweep_runs_delta=reg.counter("sweep.runs").value - sweep_runs0,
-        drained=drained)
+        drained=drained,
+        wire_retransmits=int(wire1["retransmits"] - wire0["retransmits"]),
+        wire_dup_dropped=int(wire1["dup_dropped"] - wire0["dup_dropped"]),
+        wire_timeouts=int(wire1["timeouts"] - wire0["timeouts"]))
 
 
 # ----------------------------------------------------------------------
@@ -300,6 +396,16 @@ def main(argv=None) -> int:
     p.add_argument("--expect-recovery", action="store_true",
                    help="fail unless >=1 recovery happened (and no sweep "
                         "ran during it)")
+    p.add_argument("--chunk-loss", type=float, default=0.0,
+                   help="wire chunk-drop probability from step 0 "
+                        "(shorthand for a chunk_loss@0 schedule event)")
+    p.add_argument("--chunk-dup", type=float, default=0.0,
+                   help="wire chunk-duplicate probability from step 0")
+    p.add_argument("--chunk-reorder", type=float, default=0.0,
+                   help="wire chunk-reorder probability from step 0")
+    p.add_argument("--expect-retransmits", action="store_true",
+                   help="fail unless the run retransmitted at least one "
+                        "chunk (the chaos smoke's recovery witness)")
     args = p.parse_args(argv)
 
     # Must precede the first jax import.
@@ -314,6 +420,13 @@ def main(argv=None) -> int:
         schedule = FaultSchedule.load(args.schedule_file)
     elif args.schedule:
         schedule = FaultSchedule.parse(args.schedule)
+    if args.chunk_loss or args.chunk_dup or args.chunk_reorder:
+        from repro.runtime.faults import ChunkLoss
+        ev = ChunkLoss(0, drop=args.chunk_loss, dup=args.chunk_dup,
+                       reorder=args.chunk_reorder)
+        schedule = FaultSchedule(
+            events=(schedule.events if schedule else ()) + (ev,),
+            seed=schedule.seed if schedule else None)
 
     report = run_swe_elastic(
         args.elements, args.devices, topology, n_steps=args.steps,
@@ -322,7 +435,8 @@ def main(argv=None) -> int:
 
     print(f"steps_run={report.steps_run} final={report.final_digest[:16]} "
           f"recoveries={len(report.recoveries)} "
-          f"sweep_runs_delta={report.sweep_runs_delta}")
+          f"sweep_runs_delta={report.sweep_runs_delta} "
+          f"wire_retransmits={report.wire_retransmits}")
     for r in report.recoveries:
         print(f"  [{r.kind}@{r.step}] {r.detail} "
               f"({r.wall_s*1e3:.0f}ms, config_changed={r.config_changed()})")
@@ -338,6 +452,17 @@ def main(argv=None) -> int:
             print(f"FAIL: {report.sweep_runs_delta} sweep(s) ran during "
                   f"the faulted run — recovery must be model-based")
             rc = 1
+    has_chunk_loss = (schedule is not None
+                      and any(ev.kind == "chunk_loss"
+                              for ev in schedule.events))
+    if args.expect_retransmits and report.wire_retransmits <= 0:
+        print("FAIL: expected chunk retransmissions, wire_retransmits=0 "
+              "(chunk-loss injection never reached the wire)")
+        rc = 1
+    if not has_chunk_loss and report.wire_retransmits != 0:
+        print(f"FAIL: {report.wire_retransmits} retransmission(s) on a "
+              f"clean wire — the zero-fault fast path must be overhead-free")
+        rc = 1
     if args.check_against:
         ref = json.loads(Path(args.check_against).read_text())
         if ref["final_digest"] != report.final_digest:

@@ -88,8 +88,23 @@ class Preempt:
     kind: str = dataclasses.field(default="preempt", repr=False)
 
 
+@dataclasses.dataclass(frozen=True)
+class ChunkLoss:
+    """The wire starts losing chunks from ``step`` on — the step-level
+    handle on :mod:`repro.core.reliable`'s chunk-granularity fault
+    injection.  ``drop``/``dup``/``reorder`` are per-transmission
+    probabilities; outcomes are drawn deterministically from the schedule
+    seed, so two runs under the same schedule fault identically."""
+    step: int
+    drop: float
+    dup: float = 0.0
+    reorder: float = 0.0
+    kind: str = dataclasses.field(default="chunk_loss", repr=False)
+
+
 _KINDS = {"degraded_link": DegradedLink, "rank_lost": RankLost,
-          "straggler": Straggler, "preempt": Preempt}
+          "straggler": Straggler, "preempt": Preempt,
+          "chunk_loss": ChunkLoss}
 
 
 class RankLostError(RuntimeError):
@@ -187,30 +202,65 @@ class FaultSchedule:
         - ``rank_lost@10=r5``          (rank 5 dies before step 10)
         - ``straggler@7=r2x4.0``       (rank 2 runs 4x slower from step 7)
         - ``preempt@30``
+        - ``chunk_loss@5=0.05``        (wire drops 5% of chunks from step 5;
+          optional ``d``/``r`` suffixes add duplicate/reorder rates, e.g.
+          ``chunk_loss@5=0.05d0.02r0.1``)
+
+        Malformed items — an unknown kind, a missing/negative step, a
+        missing or trailing argument, a slowdown/straggler factor below 1,
+        a self-loop edge, an out-of-range loss rate — and exact duplicate
+        events all raise ``ValueError`` naming the offending item: a bad
+        compact string must never silently drop or double-fire an event.
         """
         events: list = []
+        seen: set = set()
         for item in filter(None, (s.strip() for s in text.split(";"))):
             head, _, arg = item.partition("=")
-            kind, _, step_s = head.partition("@")
+            kind, at, step_s = head.partition("@")
             try:
+                if not at or not step_s:
+                    raise ValueError("missing '@step'")
                 step = int(step_s)
+                if step < 0:
+                    raise ValueError(f"step must be >= 0, got {step}")
                 if kind == "degraded_link":
-                    edge_s, _, slow_s = arg.partition("x")
-                    a, _, b = edge_s.partition("-")
-                    events.append(DegradedLink(step, (int(a), int(b)),
-                                               float(slow_s)))
+                    edge_s, x, slow_s = arg.partition("x")
+                    a_s, dash, b_s = edge_s.partition("-")
+                    if not (x and dash):
+                        raise ValueError("expected A-BxSLOWDOWN")
+                    a, b, slow = int(a_s), int(b_s), float(slow_s)
+                    if a == b:
+                        raise ValueError(f"edge {a}-{b} is a self-loop")
+                    if slow < 1.0:
+                        raise ValueError(
+                            f"slowdown must be >= 1, got {slow}")
+                    ev = DegradedLink(step, (a, b), slow)
                 elif kind == "rank_lost":
-                    events.append(RankLost(step, int(arg.lstrip("r"))))
+                    ev = RankLost(step, _parse_rank(arg))
                 elif kind == "straggler":
-                    rank_s, _, fac_s = arg.partition("x")
-                    events.append(Straggler(step, int(rank_s.lstrip("r")),
-                                            float(fac_s)))
+                    rank_s, x, fac_s = arg.partition("x")
+                    if not x:
+                        raise ValueError("expected rRANKxFACTOR")
+                    fac = float(fac_s)
+                    if fac < 1.0:
+                        raise ValueError(f"factor must be >= 1, got {fac}")
+                    ev = Straggler(step, _parse_rank(rank_s), fac)
                 elif kind == "preempt":
-                    events.append(Preempt(step))
+                    if arg:
+                        raise ValueError(
+                            f"preempt takes no argument, got {arg!r}")
+                    ev = Preempt(step)
+                elif kind == "chunk_loss":
+                    ev = ChunkLoss(step, **_parse_rates(arg))
                 else:
                     raise ValueError(f"unknown fault kind {kind!r}")
             except (ValueError, TypeError) as e:
                 raise ValueError(f"bad fault item {item!r}: {e}") from None
+            if ev in seen:
+                raise ValueError(f"duplicate fault item {item!r}: the event "
+                                 f"would fire twice")
+            seen.add(ev)
+            events.append(ev)
         return cls(events=tuple(events))
 
     # -- persistence ----------------------------------------------------
@@ -247,6 +297,38 @@ class FaultSchedule:
     @classmethod
     def load(cls, path) -> "FaultSchedule":
         return cls.from_json(Path(path).read_text())
+
+
+def _parse_rank(arg: str) -> int:
+    """``r5`` or ``5`` -> 5; anything else (``rr5``, ``r-1``, empty) raises."""
+    s = arg[1:] if arg.startswith("r") else arg
+    if not s.isdigit():
+        raise ValueError(f"expected a rank like 'r5', got {arg!r}")
+    return int(s)
+
+
+def _parse_rates(arg: str) -> dict:
+    """``0.05[d<dup>][r<reorder>]`` -> ChunkLoss rate kwargs."""
+    out = {"drop": arg, "dup": "0", "reorder": "0"}
+    rest = arg
+    for key, mark in (("reorder", "r"), ("dup", "d")):
+        head, sep, tail = rest.rpartition(mark)
+        if sep:
+            out[key] = tail
+            rest = head
+    out["drop"] = rest
+    rates = {}
+    for key, s in out.items():
+        try:
+            v = float(s)
+        except ValueError:
+            raise ValueError(f"bad {key} rate {s!r} in {arg!r}") from None
+        if not 0.0 <= v < 1.0:
+            raise ValueError(f"{key} rate must be in [0, 1), got {v}")
+        rates[key] = v
+    if not any(rates.values()):
+        raise ValueError(f"chunk_loss needs a non-zero rate, got {arg!r}")
+    return rates
 
 
 def _torus_links(shape: tuple[int, int]) -> list[tuple[int, int]]:
@@ -297,6 +379,7 @@ class FaultInjector:
         self._fired: set[int] = set()       # indices into schedule.events
         self.active_slowdowns: dict[tuple[int, int], float] = {}
         self._stragglers: list[Straggler] = []
+        self._chunk_loss: dict[str, float] = {}
         self.fired_events: list = []
 
     def poll(self, step: int, guard=None) -> list:
@@ -320,6 +403,10 @@ class FaultInjector:
                     ev.slowdown, self.active_slowdowns.get(key, 1.0))
             elif isinstance(ev, Straggler):
                 self._stragglers.append(ev)
+            elif isinstance(ev, ChunkLoss):
+                for key in ("drop", "dup", "reorder"):
+                    self._chunk_loss[key] = max(
+                        getattr(ev, key), self._chunk_loss.get(key, 0.0))
             elif isinstance(ev, Preempt):
                 if guard is not None:
                     guard.request()
@@ -339,6 +426,27 @@ class FaultInjector:
             if s.step <= step < s.step + s.duration:
                 extra = max(extra, self.base_step_s * (s.factor - 1.0))
         return extra
+
+    def wire_faults(self):
+        """The chunk-level :class:`repro.core.reliable.WireFaults` schedule
+        the fired ``chunk_loss`` events imply (None while none has fired).
+        The caller activates it with ``reliable.inject`` around its traced
+        step — the wire-granularity extension of the step-level schedule.
+        Seeded from the FaultSchedule seed, so outcomes replay exactly."""
+        if not self._chunk_loss:
+            return None
+        from repro.core import reliable
+        drop = self._chunk_loss.get("drop", 0.0)
+        # A requested loss rate guarantees at least one observable loss:
+        # the first transmission of the first message is pinned dropped, so
+        # short traces (few messages on the wire) still exercise recovery
+        # instead of depending on how early the seeded draws happen to hit.
+        pinned = frozenset({(0, 0, 0)}) if drop > 0.0 else frozenset()
+        return reliable.WireFaults(seed=self.schedule.seed or 0,
+                                   drop=drop,
+                                   dup=self._chunk_loss.get("dup", 0.0),
+                                   reorder=self._chunk_loss.get("reorder", 0.0),
+                                   drop_events=pinned)
 
     def degrade_spec(self, spec):
         """Fold the active link slowdowns into ``spec`` (a TorusSpec) —
@@ -395,6 +503,7 @@ class DegradationMonitor:
 
     def __init__(self, threshold: float = 1.5, hysteresis: int = 3,
                  cooldown: int = 20, alpha: float = 0.2,
+                 retransmit_threshold: int = 0,
                  registry: Optional[obs_metrics.Registry] = None):
         if hysteresis < 1:
             raise ValueError("hysteresis must be >= 1")
@@ -402,6 +511,9 @@ class DegradationMonitor:
         self.hysteresis = hysteresis
         self.cooldown = cooldown
         self.alpha = alpha
+        # wire.retransmits deltas above this per observation count toward a
+        # wire-degradation streak (0 = any retransmission is evidence).
+        self.retransmit_threshold = retransmit_threshold
         self._reg = registry or obs_metrics.registry()
         self._baseline: dict[tuple, float] = {}
         self._streak: dict[tuple, int] = {}
@@ -409,6 +521,11 @@ class DegradationMonitor:
         self._last_counts: dict[str, float] = {}
         self.confirmed: set[tuple] = set()
         self.last_straggler_delta = 0
+        self._wire_streak = 0
+        self._wire_cooldown_until = -1
+        self.last_retransmit_delta = 0
+        self.wire_confirmed = False      # newly confirmed this observe()
+        self.wire_confirmations = 0
 
     # -- obs substrate --------------------------------------------------
     def registry_deltas(self) -> dict:
@@ -418,7 +535,10 @@ class DegradationMonitor:
         snap = self._reg.find("comm.edge_bytes")
         snap["watchdog.stragglers"] = self._reg.counter(
             "watchdog.stragglers").value
-        deltas: dict = {"edge_bytes": {}, "stragglers": 0, "traffic": 0.0}
+        snap["wire.retransmits"] = self._reg.counter(
+            "wire.retransmits").value
+        deltas: dict = {"edge_bytes": {}, "stragglers": 0, "traffic": 0.0,
+                        "retransmits": 0}
         for rendered, val in snap.items():
             prev = self._last_counts.get(rendered, 0)
             self._last_counts[rendered] = val
@@ -429,6 +549,8 @@ class DegradationMonitor:
                 deltas["edge_bytes"][hops] = (
                     deltas["edge_bytes"].get(hops, 0) + d)
                 deltas["traffic"] += d
+            elif name == "wire.retransmits":
+                deltas["retransmits"] += d
             else:
                 deltas["stragglers"] += d
         return deltas
@@ -440,6 +562,7 @@ class DegradationMonitor:
         confirmed* degraded this step (usually empty)."""
         deltas = self.registry_deltas()
         self.last_straggler_delta = deltas["stragglers"]
+        self._observe_wire(step, deltas["retransmits"])
         if require_traffic and deltas["traffic"] <= 0:
             return []
         confirmed_now: list[tuple] = []
@@ -466,6 +589,27 @@ class DegradationMonitor:
                 confirmed_now.append(edge)
                 self._reg.counter("monitor.confirmations").inc()
         return confirmed_now
+
+    def _observe_wire(self, step: int, retransmit_delta: float) -> None:
+        """The retransmit-rate degradation signal (PR 9): sustained
+        ``wire.retransmits`` growth across ``hysteresis`` consecutive
+        observations confirms a lossy wire — same streak + cooldown
+        discipline as the per-edge latency signal, surfaced via
+        :attr:`wire_confirmed` for one observe() so the elastic loop can
+        re-select loss-priced configs exactly once per episode."""
+        self.last_retransmit_delta = retransmit_delta
+        self.wire_confirmed = False
+        if retransmit_delta > self.retransmit_threshold:
+            self._wire_streak += 1
+        else:
+            self._wire_streak = 0
+        if (self._wire_streak >= self.hysteresis
+                and step >= self._wire_cooldown_until):
+            self._wire_cooldown_until = step + self.cooldown
+            self._wire_streak = 0
+            self.wire_confirmed = True
+            self.wire_confirmations += 1
+            self._reg.counter("monitor.wire_confirmations").inc()
 
     def baseline(self, edge: tuple) -> Optional[float]:
         return self._baseline.get((min(edge), max(edge)))

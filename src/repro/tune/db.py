@@ -69,6 +69,17 @@ class TuneEntry:
     # §5 result says actually decides the scaling config.  0.0 = not
     # measured (latency-only sweep).
     e2e_us: float = 0.0
+    # p95 of the sweep's per-rep samples (µs), from the same
+    # ``sweep.us{collective=}`` histogram machinery the registry exports —
+    # the dispersion the variance-aware selection breaks near-ties on.
+    # 0.0 = not recorded (point-estimate-only entry).
+    p95_us: float = 0.0
+    # Injected per-transmission chunk-loss rate the measurement ran under
+    # (sweep --loss-rate); 0.0 = clean wire.  Entries measured under
+    # different loss rates are distinct data points — the jumbo-vs-segment
+    # winner flips with loss, so a lossy-wire answer must come from a
+    # lossy-wire measurement.
+    loss: float = 0.0
 
     @property
     def latency_us(self) -> float:
@@ -107,11 +118,13 @@ class TuneDB:
         cfg_key = tuple(sorted(entry.config.items()))
         for i, e in enumerate(self.entries):
             if (e.key() == entry.key() and e.hops == entry.hops
-                    and e.torus == entry.torus
+                    and e.torus == entry.torus and e.loss == entry.loss
                     and tuple(sorted(e.config.items())) == cfg_key):
                 # Merge: fastest latency wins; an e2e measurement is kept
                 # even when it rides a slower latency rerun (and the
-                # fastest e2e wins when both entries carry one).
+                # fastest e2e wins when both entries carry one).  p95
+                # follows the winning latency measurement (dispersion is a
+                # property of the run that produced the point estimate).
                 e2e = (min(e.e2e_us, entry.e2e_us)
                        if e.e2e_us > 0.0 and entry.e2e_us > 0.0
                        else max(e.e2e_us, entry.e2e_us))
@@ -125,7 +138,8 @@ class TuneDB:
     # ------------------------------------------------------------------
     def candidates(self, collective: str, topo: str | None = None,
                    hops: int | None = None,
-                   torus: str | None = None) -> list[TuneEntry]:
+                   torus: str | None = None,
+                   loss: float | None = None) -> list[TuneEntry]:
         """Entries for ``collective`` (optionally per topology).
 
         With ``torus`` given (a ``TorusSpec.name``), prefer entries measured
@@ -136,7 +150,10 @@ class TuneDB:
         exactly that hop distance; when none exist, relax to the nearest
         measured distance — a 3-hop edge is better served by a 2-hop
         measurement than a 1-hop one (the direct-link vs routed cost
-        structures differ).
+        structures differ).  ``loss`` works the same way for the injected
+        chunk-loss rate: a lossy caller prefers lossy-wire measurements
+        (jumbo frames win clean links, small segments win lossy ones) and
+        relaxes to the nearest measured rate.
         """
         cands = [e for e in self.entries
                  if e.collective == collective
@@ -145,6 +162,14 @@ class TuneDB:
             matched = [e for e in cands if e.torus == torus]
             if matched:
                 cands = matched
+        if loss is not None and cands:
+            matched = [e for e in cands if e.loss == loss]
+            if matched:
+                cands = matched
+            else:
+                nearest_l = min({e.loss for e in cands},
+                                key=lambda l: abs(l - loss))
+                cands = [e for e in cands if e.loss == nearest_l]
         if hops is not None and cands:
             matched = [e for e in cands if e.hops == hops]
             if matched:
@@ -154,35 +179,61 @@ class TuneDB:
             return [e for e in cands if e.hops == nearest_h]
         return cands
 
-    @staticmethod
-    def _rank(entries: list[TuneEntry], objective: str
+    #: Entries within this fraction of the best metric are a "near-tie" and
+    #: re-rank by measured p95 — the variance-aware slice of selection: two
+    #: configs indistinguishable on the mean are distinguishable on tail
+    #: latency, which is what the latency-sensitive paths feel.
+    NEAR_TIE = 0.05
+
+    @classmethod
+    def _rank(cls, entries: list[TuneEntry], objective: str
               ) -> Optional[TuneEntry]:
         """Fastest entry under ``objective``.  For ``e2e``, entries with a
         measured consumer-loop time outrank latency-only entries (a measured
-        e2e beats a proxy); with none measured, fall back to bare latency."""
+        e2e beats a proxy); with none measured, fall back to bare latency.
+        Entries within :data:`NEAR_TIE` of the winner's metric break the
+        tie on recorded ``p95_us``; entries without a recorded p95 cannot
+        win a near-tie (an unknown tail never beats a measured one), and a
+        DB with no dispersion recorded ranks exactly as before."""
         if not entries:
             return None
+        metric = None
         if objective == "e2e":
             with_e2e = [e for e in entries if e.e2e_us > 0.0]
             if with_e2e:
-                return min(with_e2e, key=lambda e: e.e2e_us)
-        return min(entries, key=lambda e: e.us_per_call)
+                entries = with_e2e
+                metric = lambda e: e.e2e_us  # noqa: E731
+        if metric is None:
+            metric = lambda e: e.us_per_call  # noqa: E731
+        best = min(entries, key=metric)
+        near = [e for e in entries
+                if metric(e) <= metric(best) * (1.0 + cls.NEAR_TIE)]
+        with_p95 = [e for e in near if e.p95_us > 0.0]
+        if len(near) > 1 and with_p95:
+            # Variance-aware: the lowest measured tail wins the near-tie.
+            # Entries without recorded dispersion cannot win it — an
+            # unknown tail must not beat a measured one on missing data.
+            return min(with_p95, key=lambda e: (e.p95_us, metric(e)))
+        return best
 
     def best(self, collective: str, msg_bytes: int, topo: str | None = None,
              hops: int | None = None, objective: str = "latency",
-             torus: str | None = None) -> Optional[TuneEntry]:
+             torus: str | None = None,
+             loss: float | None = None) -> Optional[TuneEntry]:
         """Fastest entry at exactly ``msg_bytes`` (None if not measured)."""
-        exact = [e for e in self.candidates(collective, topo, hops, torus)
+        exact = [e for e in self.candidates(collective, topo, hops, torus,
+                                            loss)
                  if e.msg_bytes == msg_bytes]
         return self._rank(exact, objective)
 
     def nearest(self, collective: str, msg_bytes: int, topo: str | None = None,
                 hops: int | None = None, objective: str = "latency",
-                torus: str | None = None) -> Optional[TuneEntry]:
+                torus: str | None = None,
+                loss: float | None = None) -> Optional[TuneEntry]:
         """Fastest entry at the measured message size closest (in log space)
         to ``msg_bytes`` — message-size behaviour is scale-free, so log
         distance is the right metric (1 KiB is "nearer" 4 KiB than 64 KiB)."""
-        cands = self.candidates(collective, topo, hops, torus)
+        cands = self.candidates(collective, topo, hops, torus, loss)
         if not cands:
             return None
         target = math.log(max(1, msg_bytes))
@@ -230,6 +281,7 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
                   hops: int | None = None,
                   objective: str = "latency",
                   torus: str | None = None,
+                  loss: float | None = None,
                   fallback: CommConfig = OPTIMIZED_CONFIG) -> CommConfig:
     """The autotuner's answer to "how should I communicate?".
 
@@ -255,6 +307,12 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
     torus must not be answered by an unrouted flat-mesh measurement that
     happens to share a hop count (and relaxes to any entry when that
     placement was never swept).
+
+    ``loss`` prefers entries measured under that injected chunk-loss rate
+    (nearest measured rate when no exact match): on a lossy wire the
+    GUARANTEED small-segment configs that looked slow on the clean sweep
+    are the ones that actually win, and only lossy-wire measurements can
+    say so.
     """
     if objective not in ("latency", "e2e"):
         raise ValueError(f"objective must be 'latency' or 'e2e', "
@@ -264,14 +322,15 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
     if topo is None:
         topo = topology_key(mesh) if mesh is not None else topology_key()
     platform = topo.split(":", 1)[0]
-    entry = (db.best(collective, msg_bytes, topo, hops, objective, torus)
+    entry = (db.best(collective, msg_bytes, topo, hops, objective, torus,
+                     loss)
              or db.nearest(collective, msg_bytes, topo, hops, objective,
-                           torus))
+                           torus, loss))
     if entry is None:
         same_platform = TuneDB([e for e in db.entries
                                 if e.topo.split(":", 1)[0] == platform])
         entry = same_platform.nearest(collective, msg_bytes, None, hops,
-                                      objective, torus)
+                                      objective, torus, loss)
     if entry is None:
         return fallback
     return entry.comm_config

@@ -27,7 +27,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
-from repro.core.config import CommConfig, OPTIMIZED_CONFIG, Scheduling
+from repro.core.config import (CommConfig, OPTIMIZED_CONFIG, Reliability,
+                               Scheduling)
 from repro.obs import metrics as obs_metrics
 from repro.tune.calibrate import CalibrationResult
 from repro.tune.db import TuneDB, select_config
@@ -69,6 +70,7 @@ def model_reselect(collective: str, msg_bytes: int, *,
                    objective: str = "latency",
                    compute_s: float = 0.0,
                    link_slowdown: float = 1.0,
+                   loss: float = 0.0,
                    calibration: Optional[CalibrationResult] = None,
                    topo: Optional[str] = None,
                    fallback: CommConfig = OPTIMIZED_CONFIG) -> CommConfig:
@@ -83,6 +85,13 @@ def model_reselect(collective: str, msg_bytes: int, *,
     ``objective="e2e"`` ranks by the consumer-loop prediction with
     ``compute_s`` of hideable compute (Eq. 2), mirroring the sweep's own
     ``--objective e2e``.
+
+    ``loss`` > 0 re-selects for a LOSSY wire: every candidate is promoted
+    to ``Reliability.GUARANTEED`` (best-effort delivery cannot survive
+    chunk loss) and priced with the Eq. 1 retransmit surcharge — which is
+    what flips the winner from jumbo frames to small segments when the
+    fabric starts dropping chunks.  Measured-DB fallbacks prefer entries
+    swept at a matching loss rate.
     """
     if objective not in ("latency", "e2e"):
         raise ValueError(f"objective must be 'latency' or 'e2e', "
@@ -91,28 +100,47 @@ def model_reselect(collective: str, msg_bytes: int, *,
     reg.counter("tune.model_reselects", collective=collective).inc()
     if calibration is None:
         calibration = calibration_from_db(db, topo)
+    loss = max(0.0, float(loss))
+    loss_pref = loss if loss > 0.0 else None
     if calibration is None:
         # Cold DB: nothing to fit.  Nearest-measured lookup (or the paper's
         # OPTIMIZED_CONFIG on a fully cold cache) — never a sweep.
         reg.counter("tune.reselect_cold_fallbacks").inc()
-        return select_config(collective, msg_bytes, db=db, topo=topo,
-                             hops=hops, objective=objective,
-                             fallback=fallback)
+        return _harden(select_config(collective, msg_bytes, db=db, topo=topo,
+                                     hops=hops, objective=objective,
+                                     loss=loss_pref, fallback=fallback), loss)
     cands = _measured_configs(db, collective)
+    if loss > 0.0:
+        promoted, seen = [], set()
+        for c in cands:
+            g = dataclasses.replace(c, reliability=Reliability.GUARANTEED)
+            if g not in seen:
+                seen.add(g)
+                promoted.append(g)
+        cands = promoted
     if not cands:
         reg.counter("tune.reselect_cold_fallbacks").inc()
-        return select_config(collective, msg_bytes, db=db, topo=topo,
-                             hops=hops, objective=objective,
-                             fallback=fallback)
+        return _harden(select_config(collective, msg_bytes, db=db, topo=topo,
+                                     hops=hops, objective=objective,
+                                     loss=loss_pref, fallback=fallback), loss)
     cal = degraded_calibration(calibration, link_slowdown)
     hops = max(1, int(hops))
     if objective == "e2e":
         preds = [predicted_e2e(c, msg_bytes, cal, compute_s, collective,
-                               hops=hops) for c in cands]
+                               hops=hops, loss=loss) for c in cands]
     else:
-        preds = [predicted_latency(c, msg_bytes, cal, collective, hops=hops)
-                 for c in cands]
+        preds = [predicted_latency(c, msg_bytes, cal, collective, hops=hops,
+                                   loss=loss) for c in cands]
     return cands[min(range(len(cands)), key=preds.__getitem__)]
+
+
+def _harden(cfg: CommConfig, loss: float) -> CommConfig:
+    """Promote a fallback-selected config to guaranteed delivery when the
+    wire is lossy — the selection layer must never hand a best-effort
+    config to a fabric that drops chunks."""
+    if loss > 0.0 and cfg.reliability != Reliability.GUARANTEED:
+        return dataclasses.replace(cfg, reliability=Reliability.GUARANTEED)
+    return cfg
 
 
 def reselect_round_configs(rounds: Sequence[Sequence[tuple]], comm,
@@ -120,6 +148,7 @@ def reselect_round_configs(rounds: Sequence[Sequence[tuple]], comm,
                            db: TuneDB,
                            objective: str = "latency",
                            compute_s: float = 0.0,
+                           loss: float = 0.0,
                            calibration: Optional[CalibrationResult] = None,
                            topo: Optional[str] = None,
                            fallback: CommConfig = OPTIMIZED_CONFIG
@@ -159,7 +188,8 @@ def reselect_round_configs(rounds: Sequence[Sequence[tuple]], comm,
         slow = round_slowdown(perm)
         cfg = model_reselect("multi_neighbor", msg_bytes, db=db, hops=hops,
                              objective=objective, compute_s=compute_s,
-                             link_slowdown=slow, calibration=calibration,
+                             link_slowdown=slow, loss=loss,
+                             calibration=calibration,
                              topo=topo, fallback=fallback)
         per_round.append(cfg)
         worst_key = max(worst_key, (hops, slow))
@@ -167,7 +197,7 @@ def reselect_round_configs(rounds: Sequence[Sequence[tuple]], comm,
     if not per_round:
         rep = model_reselect("multi_neighbor", msg_bytes, db=db, hops=1,
                              objective=objective, compute_s=compute_s,
-                             calibration=calibration, topo=topo,
+                             loss=loss, calibration=calibration, topo=topo,
                              fallback=fallback)
         return rep, None
     # Representative = the worst (hops, slowdown) round's winner; unify

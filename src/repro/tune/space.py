@@ -18,8 +18,8 @@ import dataclasses
 import itertools
 from typing import Iterator, Sequence
 
-from repro.core.config import (CommConfig, CommMode, Compression, Scheduling,
-                               Transport)
+from repro.core.config import (CommConfig, CommMode, Compression, Reliability,
+                               Scheduling, Transport)
 
 # Default tuning axes.  ``window``/``chunk_bytes`` follow the paper's §3.3
 # transport tuning (window scaling, jumbo frames); the rest is the §3.1/§3.2
@@ -106,9 +106,21 @@ def _canonicalize(cfg: CommConfig, collective: str | None,
                 if f not in relevant:
                     updates[f] = getattr(_DEFAULTS, f)
     merged = dataclasses.replace(cfg, **updates) if updates else cfg
+    # The retransmit/timeout/backoff knobs are only consulted by the
+    # GUARANTEED protocol; best-effort configs differing only in them are
+    # the same program.
+    if merged.reliability == Reliability.BEST_EFFORT:
+        merged = dataclasses.replace(
+            merged, ack_timeout=_DEFAULTS.ack_timeout,
+            max_retransmits=_DEFAULTS.max_retransmits,
+            backoff_base=_DEFAULTS.backoff_base,
+            backoff_cap=_DEFAULTS.backoff_cap)
     # window is only consulted when chunks form an ack chain (ordered
-    # transport); unordered configs differing only in window are identical.
-    if merged.transport == Transport.UNORDERED and merged.window != _DEFAULTS.window:
+    # transport) or by the GUARANTEED send window; best-effort unordered
+    # configs differing only in window are identical.
+    if (merged.transport == Transport.UNORDERED
+            and merged.reliability == Reliability.BEST_EFFORT
+            and merged.window != _DEFAULTS.window):
         merged = dataclasses.replace(merged, window=_DEFAULTS.window)
     # Overlapped scheduling only changes behaviour for the multi-round halo
     # exchange (double-buffered delivery) and the chunk-tiled all_to_all
@@ -191,7 +203,8 @@ def space_size(axes: dict[str, Sequence] | None = None) -> int:
 # ----------------------------------------------------------------------
 
 _ENUM_FIELDS = {"mode": CommMode, "scheduling": Scheduling,
-                "transport": Transport, "compression": Compression}
+                "transport": Transport, "compression": Compression,
+                "reliability": Reliability}
 
 
 def config_to_dict(cfg: CommConfig) -> dict:

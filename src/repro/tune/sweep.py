@@ -20,18 +20,21 @@ CLI::
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
 import time
+from contextlib import nullcontext
 from functools import partial
 from pathlib import Path
 from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core import plans, planstore
-from repro.core.config import CommConfig, CommMode, Scheduling, V5E
+from repro.core import plans, planstore, reliable
+from repro.core.config import (CommConfig, CommMode, Reliability, Scheduling,
+                               V5E)
 from repro.core.topology import TorusSpec
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
@@ -286,6 +289,15 @@ def _build_consumer_op(collective: str, comm, cfg: CommConfig,
                      f"(consumers: {tuple(CONSUMERS)})")
 
 
+# Per-rep seconds of the most recent _time_program call.  The sweep reads
+# this right after each measurement to estimate the candidate's tail
+# (TuneEntry.p95_us) without changing the timer's return contract; injected
+# test timers never populate it, so the sweep's p95 falls back to 0.0 (the
+# "no tail data" sentinel) instead of inheriting a stale run's samples —
+# run_sweep clears the list before every timer call.
+_LAST_SAMPLES: list[float] = []
+
+
 def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
                   warmup: int = 1, reps: int = 3, inner: int = 8,
                   per_dev_shape: tuple | None = None,
@@ -297,6 +309,10 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
     same collective/config/size/topology) replays the compiled program and
     pays zero rebuild/retrace — the plan-cache half of the sweep wall-clock
     win.
+
+    Each rep's per-op seconds are additionally appended to
+    :data:`_LAST_SAMPLES` (cleared on entry), the raw material for the
+    sweep's per-candidate tail estimate.
     """
     import jax
     from jax import numpy as jnp
@@ -340,10 +356,12 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
             fn = build_many()
         for _ in range(warmup):
             x = jax.block_until_ready(fn(x))
+        del _LAST_SAMPLES[:]
         t0 = time.perf_counter()
         for _ in range(reps):
-            x = fn(x)
-        jax.block_until_ready(x)
+            t1 = time.perf_counter()
+            x = jax.block_until_ready(fn(x))
+            _LAST_SAMPLES.append((time.perf_counter() - t1) / inner)
         return (time.perf_counter() - t0) / (reps * inner)
 
     # Host scheduling: one dispatch per op, host blocks between dispatches.
@@ -355,9 +373,13 @@ def _time_program(op: Callable, mesh, msg_bytes: int, cfg: CommConfig,
         single = build_single()
     for _ in range(warmup):
         x = jax.block_until_ready(single(x))
+    del _LAST_SAMPLES[:]
     t0 = time.perf_counter()
-    for _ in range(reps * inner):
-        x = jax.block_until_ready(single(x))
+    for _ in range(reps):
+        t1 = time.perf_counter()
+        for _ in range(inner):
+            x = jax.block_until_ready(single(x))
+        _LAST_SAMPLES.append((time.perf_counter() - t1) / inner)
     return (time.perf_counter() - t0) / (reps * inner)
 
 
@@ -410,6 +432,7 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
               stats: dict | None = None,
               topology: TorusSpec | None = None,
               hop_distances: Sequence[int] | None = None,
+              loss_rate: float = 0.0,
               timer: Callable | None = None) -> TuneDB:
     """Measure every candidate config and return the populated TuneDB.
 
@@ -438,6 +461,14 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     distance with ``TuneEntry.hops`` recording it, which is what lets
     ``select_config(hops=...)`` answer per edge.
 
+    ``loss_rate`` > 0 sweeps a LOSSY wire: every candidate is forced to
+    ``Reliability.GUARANTEED`` (best-effort delivery cannot survive chunk
+    loss), each measurement runs under a seeded
+    :class:`~repro.core.reliable.WireFaults` chunk-drop schedule at that
+    rate, and entries record ``TuneEntry.loss`` so selection can prefer
+    configs measured on a matching wire — the sweep half of the paper's
+    "jumbo frames win clean links, small segments win lossy ones" answer.
+
     ``timer`` overrides the measurement function (signature of
     :func:`_time_program`) — deterministic model-driven timers make the
     selection pipeline testable end-to-end without wall-clock noise.
@@ -449,6 +480,14 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     if objective not in OBJECTIVES:
         raise ValueError(f"objective must be one of {OBJECTIVES}, "
                          f"got {objective!r}")
+    if not 0.0 <= loss_rate < 1.0:
+        raise ValueError(f"loss_rate must be in [0, 1), got {loss_rate}")
+    # One seeded schedule for the whole sweep: every candidate faces the
+    # SAME drop pattern (reliable.inject resets the message counter per
+    # measurement), so latency differences are config, not luck.
+    wire = (reliable.WireFaults(seed=17, drop=loss_rate)
+            if loss_rate > 0.0 else None)
+    losskey: tuple = (("loss", loss_rate),) if wire is not None else ()
     if mesh is None:
         mesh = compat.make_mesh((jax.device_count(),), ("x",))
     if sizes is None:
@@ -523,6 +562,18 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
             subcomms = (inner_comm, outer_comm)
         cands = tune_space.enumerate_configs(coll, fast=fast,
                                              objective=objective)
+        if wire is not None:
+            # Best-effort candidates cannot deliver under chunk loss:
+            # promote everything to GUARANTEED and dedup (promotion can
+            # collide candidates that differed only in reliability).
+            forced, seen_cfg = [], set()
+            for c in cands:
+                g = dataclasses.replace(c,
+                                        reliability=Reliability.GUARANTEED)
+                if g not in seen_cfg:
+                    seen_cfg.add(g)
+                    forced.append(g)
+            cands = forced
         if max_configs is not None:
             cands = cands[:max_configs]
         # The per-edge axis: hop-patterned collectives sweep once per
@@ -548,7 +599,7 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                         cands, msg_bytes, calibration, prune_ratio,
                         collective=coll,
                         objective="e2e" if consumer else "latency",
-                        compute_s=compute_s, hops=hops)
+                        compute_s=compute_s, hops=hops, loss=loss_rate)
                     stats["pruned"] += len(skipped)
                     reg.counter("sweep.pruned").inc(len(skipped))
                     if skipped:
@@ -561,20 +612,30 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                     try:
                         op = _build_op(coll, comm, cfg, subcomms=subcomms,
                                        hop_distance=hop_d)
+                        del _LAST_SAMPLES[:]
                         with obs_trace.span("sweep.candidate", cat="sweep",
                                             collective=coll,
                                             msg_bytes=int(msg_bytes),
                                             hops=hops, cfg=i) as sp:
-                            sec = timer(
-                                op, bench_mesh, msg_bytes, cfg,
-                                reps=reps, inner=inner,
-                                cache_key=("sweep", topo, torus, hop_d or 0,
-                                           _mesh_key(bench_mesh),
-                                           coll, cfg_key(cfg),
-                                           int(msg_bytes)))
+                            with (reliable.inject(wire) if wire is not None
+                                  else nullcontext()):
+                                sec = timer(
+                                    op, bench_mesh, msg_bytes, cfg,
+                                    reps=reps, inner=inner,
+                                    cache_key=("sweep", topo, torus,
+                                               hop_d or 0,
+                                               _mesh_key(bench_mesh),
+                                               coll, cfg_key(cfg),
+                                               int(msg_bytes)) + losskey)
                             sp.set(us_per_call=sec * 1e6)
-                        reg.histogram("sweep.us",
-                                      collective=coll).observe(sec * 1e6)
+                        # Per-rep samples feed both the aggregate series and
+                        # this candidate's tail estimate; timers that report
+                        # only a mean contribute that single point.
+                        samples = [s * 1e6 for s in _LAST_SAMPLES]
+                        hist = reg.histogram("sweep.us", collective=coll)
+                        for v in (samples or [sec * 1e6]):
+                            hist.observe(v)
+                        p95_us = obs_metrics.percentile_of(samples, 95.0)
                     except Exception as e:  # noqa: BLE001 — skip unrunnable combos
                         stats["errors"] += 1
                         log(f"  skip {coll}/{msg_bytes}B cfg{i}: "
@@ -586,13 +647,17 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                             cop, shape = _build_consumer_op(
                                 coll, comm, cfg, msg_bytes,
                                 hop_distance=hop_d)
-                            e2e_sec = timer(
-                                cop, bench_mesh, msg_bytes, cfg,
-                                reps=reps, inner=inner, per_dev_shape=shape,
-                                cache_key=("sweep_e2e", topo, torus,
-                                           hop_d or 0,
-                                           _mesh_key(bench_mesh), coll,
-                                           cfg_key(cfg), int(msg_bytes)))
+                            with (reliable.inject(wire) if wire is not None
+                                  else nullcontext()):
+                                e2e_sec = timer(
+                                    cop, bench_mesh, msg_bytes, cfg,
+                                    reps=reps, inner=inner,
+                                    per_dev_shape=shape,
+                                    cache_key=("sweep_e2e", topo, torus,
+                                               hop_d or 0,
+                                               _mesh_key(bench_mesh), coll,
+                                               cfg_key(cfg),
+                                               int(msg_bytes)) + losskey)
                             e2e_us = e2e_sec * 1e6
                             stats["e2e_measured"] += 1
                             reg.histogram("sweep.e2e_us",
@@ -607,7 +672,8 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                         config=tune_space.config_to_dict(cfg),
                         us_per_call=sec * 1e6,
                         gbps=msg_bytes / sec / 1e9,
-                        hops=hops, e2e_us=e2e_us, torus=torus))
+                        hops=hops, e2e_us=e2e_us, torus=torus,
+                        p95_us=p95_us, loss=loss_rate))
                 best = db.best(coll, msg_bytes, topo, hops=hops)
                 if best is not None:
                     log(f"  {coll:15s} {msg_bytes:>8d}B h{hops} best "
@@ -657,7 +723,7 @@ def sweep_summary(stats: dict) -> str:
     for name, h in sorted(hists.items()):
         if h.get("count"):
             line += (f"\n  {name}: p50 {h['p50']:.1f} us, "
-                     f"p95 {h['p95']:.1f} us over {h['count']} candidates")
+                     f"p95 {h['p95']:.1f} us over {h['count']} samples")
     return line
 
 
@@ -792,6 +858,12 @@ def main(argv: Sequence[str] | None = None) -> int:
                     "hop-patterned collectives at (requires --topology); "
                     "each distance is recorded as TuneEntry.hops so "
                     "select_config(hops=...) answers per edge")
+    ap.add_argument("--loss-rate", type=float, default=0.0,
+                    help="sweep a lossy wire: seeded chunk-drop rate in "
+                    "[0, 1) injected under every measurement; candidates "
+                    "are forced to reliability=guaranteed and entries "
+                    "record TuneEntry.loss so select_config(loss=...) can "
+                    "prefer lossy-wire measurements")
     ap.add_argument("--plan-dir", default=None,
                     help="disk-backed CommPlan/program store directory "
                     "(also via REPRO_PLAN_DIR): plan schedules persist as "
@@ -860,7 +932,8 @@ def main(argv: Sequence[str] | None = None) -> int:
                   log=lambda s: print(s, flush=True),
                   prune=args.prune, prune_ratio=args.prune_ratio,
                   objective=args.objective,
-                  topology=topology, hop_distances=hop_distances)
+                  topology=topology, hop_distances=hop_distances,
+                  loss_rate=args.loss_rate)
     db = run_sweep(db=db, stats=stats, **kwargs)
     path = db.save(args.out)
     print(f"wrote {len(db)} entries -> {path}")

@@ -59,6 +59,56 @@ def test_schedule_parse_compact():
         FaultSchedule.parse("rank_lost@ten=r1")
 
 
+def test_schedule_parse_chunk_loss():
+    from repro.runtime.faults import ChunkLoss, FaultSchedule
+    s = FaultSchedule.parse("chunk_loss@5=0.05")
+    assert ChunkLoss(5, drop=0.05) in s.events
+    s = FaultSchedule.parse("chunk_loss@3=0.05d0.02r0.1")
+    assert ChunkLoss(3, drop=0.05, dup=0.02, reorder=0.1) in s.events
+    # a pure dup/reorder wire is a legal schedule (drop may be 0)
+    s = FaultSchedule.parse("chunk_loss@0=0d0.2")
+    assert ChunkLoss(0, drop=0.0, dup=0.2) in s.events
+
+
+def test_schedule_parse_rejects_malformed_items():
+    """Every malformed compact item raises a ValueError naming the item —
+    a bad string must never silently drop or double-fire an event."""
+    from repro.runtime.faults import FaultSchedule
+    bad = [
+        "degraded_link@5",                 # missing argument
+        "degraded_link@5=0-1",            # missing slowdown
+        "degraded_link@5=2-2x3.0",        # self-loop edge
+        "degraded_link@5=0-1x0.5",        # slowdown below 1
+        "rank_lost@-1=r0",                 # negative step
+        "rank_lost@5",                     # missing rank
+        "rank_lost@5=rr3",                 # mangled rank
+        "straggler@5=r1",                  # missing factor
+        "straggler@5=r1x0.2",              # factor below 1
+        "preempt@5=r1",                    # trailing argument
+        "preempt",                         # missing '@step'
+        "chunk_loss@5",                    # missing rate
+        "chunk_loss@5=1.0",                # rate out of [0, 1)
+        "chunk_loss@5=-0.1",               # negative rate
+        "chunk_loss@5=0.05d1.5",           # dup rate out of range
+        "chunk_loss@5=0",                  # all-zero rates
+        "chunk_loss@5=oops",               # non-numeric rate
+    ]
+    for item in bad:
+        with pytest.raises(ValueError, match="bad fault item|missing"):
+            FaultSchedule.parse(item)
+
+
+def test_schedule_parse_rejects_exact_duplicates():
+    from repro.runtime.faults import FaultSchedule
+    with pytest.raises(ValueError, match="would fire twice"):
+        FaultSchedule.parse("rank_lost@10=r5; rank_lost@10=r5")
+    with pytest.raises(ValueError, match="would fire twice"):
+        FaultSchedule.parse("chunk_loss@5=0.05;chunk_loss@5=0.05")
+    # same kind at a different step (or args) is fine
+    s = FaultSchedule.parse("chunk_loss@5=0.05; chunk_loss@9=0.1")
+    assert len(s.events) == 2
+
+
 def test_schedule_json_roundtrip(tmp_path):
     from repro.runtime.faults import FaultSchedule
     s = FaultSchedule.generate(3, 50, n_ranks=4, degraded_links=1,
@@ -281,6 +331,63 @@ def test_monitor_registry_deltas_and_traffic_gate():
     reg.counter("comm.edge_bytes", hops=1).inc(10)
     assert mon.observe(2, {e: 9.0}, require_traffic=True) == [e]
     assert mon.last_straggler_delta == 0
+
+
+def test_injector_chunk_loss_arms_wire_faults():
+    from repro.core.reliable import WireFaults
+    from repro.runtime.faults import FaultInjector, FaultSchedule
+    sched = FaultSchedule.parse("chunk_loss@5=0.05d0.02r0.1")
+    inj = FaultInjector(sched)
+    assert inj.wire_faults() is None         # not fired yet
+    inj.poll(5)
+    wf = inj.wire_faults()
+    assert isinstance(wf, WireFaults)
+    assert (wf.drop, wf.dup, wf.reorder) == (0.05, 0.02, 0.1)
+    # a requested drop rate pins the first transmission lost, so short
+    # traces deterministically exercise recovery
+    assert (0, 0, 0) in wf.drop_events
+    # pure dup/reorder wires pin nothing (no drop to guarantee)
+    inj2 = FaultInjector(FaultSchedule.parse("chunk_loss@0=0d0.2"))
+    inj2.poll(0)
+    assert inj2.wire_faults().drop_events == frozenset()
+
+
+def test_monitor_wire_signal_hysteresis_and_cooldown():
+    """Sustained wire.retransmits growth confirms a lossy wire exactly once
+    per episode — same streak/cooldown discipline as the edge signal."""
+    mon, reg = _private_monitor(threshold=1.5, hysteresis=3, cooldown=10)
+    e = (0, 1)
+    confirmations = []
+    for step in range(8):
+        reg.counter("wire.retransmits").inc(2)   # steady retransmit stream
+        mon.observe(step, {e: 1.0})
+        confirmations.append(mon.wire_confirmed)
+    # streak reaches hysteresis at the 3rd observation, then cooldown
+    # suppresses re-confirmation while the stream persists
+    assert confirmations == [False, False, True,
+                             False, False, False, False, False]
+    assert mon.wire_confirmations == 1
+    assert reg.counter("monitor.wire_confirmations").value == 1
+    assert mon.last_retransmit_delta == 2
+    # cooldown expiry + persistent loss re-confirms
+    for step in range(8, 14):
+        reg.counter("wire.retransmits").inc(1)
+        mon.observe(step, {e: 1.0})
+    assert mon.wire_confirmations == 2
+
+
+def test_monitor_wire_streak_resets_when_clean():
+    mon, reg = _private_monitor(threshold=1.5, hysteresis=3, cooldown=10)
+    e = (0, 1)
+    for step, delta in enumerate((3, 3, 0, 3, 3)):   # the gap breaks it
+        if delta:
+            reg.counter("wire.retransmits").inc(delta)
+        mon.observe(step, {e: 1.0})
+        assert not mon.wire_confirmed
+    reg.counter("wire.retransmits").inc(3)
+    mon.observe(5, {e: 1.0})
+    assert mon.wire_confirmed                        # 3rd consecutive delta
+    assert mon.confirmed == set()                    # edge signal untouched
 
 
 def test_parse_labels_roundtrip():

@@ -216,6 +216,76 @@ def test_select_config_returns_measured_best():
 
 
 # ----------------------------------------------------------------------
+# Variance-aware selection (p95 near-tie break) + lossy-wire selection
+# ----------------------------------------------------------------------
+
+def test_p95_breaks_near_ties():
+    """Two configs within NEAR_TIE on the mean: the lower measured tail
+    wins; an entry with no recorded p95 cannot win the tie-break."""
+    import dataclasses as dc
+    from repro.tune.db import TuneDB, select_config, topology_key
+    topo = topology_key()
+    db = TuneDB()
+    # 2% apart on the mean (inside the 5% near-tie band), tails disagree
+    db.add(dc.replace(_entry(1024, 100.0, topo=topo), p95_us=180.0))
+    db.add(dc.replace(_entry(1024, 102.0, topo=topo, window=8),
+                      p95_us=110.0))
+    cfg = select_config("all_reduce", 1024, db=db)
+    assert cfg.window == 8                   # steadier tail wins the tie
+    # an unknown tail never beats a measured one on missing data
+    db2 = TuneDB()
+    db2.add(_entry(1024, 100.0, topo=topo))              # p95 unrecorded
+    db2.add(dc.replace(_entry(1024, 102.0, topo=topo, window=8),
+                       p95_us=110.0))
+    assert select_config("all_reduce", 1024, db=db2).window == 8
+    # outside the near-tie band the mean decides, tails notwithstanding
+    db3 = TuneDB()
+    db3.add(dc.replace(_entry(1024, 100.0, topo=topo), p95_us=500.0))
+    db3.add(dc.replace(_entry(1024, 150.0, topo=topo, window=8),
+                       p95_us=101.0))
+    assert select_config("all_reduce", 1024, db=db3).window == 4
+
+
+def test_select_config_prefers_matching_loss():
+    """Jumbo frames win the clean sweep, small GUARANTEED segments win the
+    lossy one — the answer must come from the matching-loss measurement
+    (nearest measured rate when there is no exact match)."""
+    import dataclasses as dc
+    from repro.core.config import Reliability
+    from repro.tune.db import TuneDB, select_config, topology_key
+    topo = topology_key()
+    db = TuneDB()
+    db.add(_entry(1 << 20, 50.0, topo=topo, chunk_bytes=1 << 20))
+    db.add(dc.replace(
+        _entry(1 << 20, 80.0, topo=topo, chunk_bytes=4096,
+               reliability=Reliability.GUARANTEED), loss=0.05))
+    clean = select_config("all_reduce", 1 << 20, db=db)
+    assert clean.chunk_bytes == 1 << 20
+    lossy = select_config("all_reduce", 1 << 20, db=db, loss=0.05)
+    assert lossy.chunk_bytes == 4096
+    assert lossy.reliability == Reliability.GUARANTEED
+    # nearest measured rate answers an unswept loss
+    near = select_config("all_reduce", 1 << 20, db=db, loss=0.08)
+    assert near.chunk_bytes == 4096
+
+
+def test_reliability_config_json_roundtrip():
+    from repro.core.config import CommConfig, Reliability
+    from repro.tune.space import config_from_dict, config_to_dict
+    cfg = CommConfig(reliability=Reliability.GUARANTEED, ack_timeout=3,
+                     max_retransmits=5, backoff_base=2, backoff_cap=8)
+    wire = json.loads(json.dumps(config_to_dict(cfg)))
+    assert wire["reliability"] == "guaranteed"
+    back = config_from_dict(wire)
+    assert back == cfg
+    assert back.reliability is Reliability.GUARANTEED
+    # best-effort default survives too
+    assert config_from_dict(json.loads(json.dumps(
+        config_to_dict(CommConfig())))).reliability is \
+        Reliability.BEST_EFFORT
+
+
+# ----------------------------------------------------------------------
 # End-to-end objective (overlap-aware selection)
 # ----------------------------------------------------------------------
 
