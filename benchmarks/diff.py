@@ -39,7 +39,9 @@ from typing import Sequence
 _NON_LATENCY_PREFIXES = ("fig3_", "table1_", "fig11_speedup",
                          "lmcoll_tp_reduce_speedup", "lmcoll_moe_a2a_speedup",
                          "e2e_gain_", "topo_hop_ratio", "ft_reselect_speedup",
-                         "rt_guaranteed_overhead", "rt_loss5_penalty")
+                         "rt_guaranteed_overhead", "rt_loss5_penalty",
+                         "srv_phase_win", "srv_distinct_48",
+                         "srv_tok_s_rank_48")
 
 # New rows that stay report-only until they have >= 2 committed baselines.
 # The e2e_ rows graduated with bench_pr5.json; the topo_ hop-scaling rows
@@ -49,8 +51,10 @@ _NON_LATENCY_PREFIXES = ("fig3_", "table1_", "fig11_speedup",
 # noisy on shared CI hosts — they ride report-only until a noise floor
 # exists; ft_reselect_speedup stays a non-latency ratio).  The rt_
 # reliable-transport rows are likewise new (rt_guaranteed_overhead and
-# rt_loss5_penalty stay non-latency ratios).
-DEFAULT_REPORT_ONLY_PREFIXES = ("ft_", "rt_")
+# rt_loss5_penalty stay non-latency ratios).  The srv_ serving rows are new
+# this PR (srv_phase_win, srv_distinct_48 and srv_tok_s_rank_48 stay
+# non-latency: ratios/flags/throughput, bigger is not a regression).
+DEFAULT_REPORT_ONLY_PREFIXES = ("ft_", "rt_", "srv_")
 
 
 def load_rows(path: str) -> dict:

@@ -31,7 +31,7 @@ def main() -> None:
     _ensure_devices()
     from benchmarks import (b_eff, e2e_objective, fault_tolerance,
                             lm_collectives, lm_roofline, plan_store,
-                            reliability, resources, swe_scaling,
+                            reliability, resources, serving, swe_scaling,
                             topology_hops)
 
     print("name,us_per_call,derived")
@@ -43,7 +43,8 @@ def main() -> None:
                ("topology_hops", topology_hops),
                ("plan_store", plan_store),
                ("fault_tolerance", fault_tolerance),
-               ("reliability", reliability)]
+               ("reliability", reliability),
+               ("serving", serving)]
     only = None
     json_path = "BENCH_comm.json"
     for a in sys.argv[1:]:
@@ -101,6 +102,13 @@ def main() -> None:
             print(f"# fault tolerance {name}: resweep/reselect = "
                   f"{row['us_per_call']:.0f}x, {row['derived']}",
                   file=sys.stderr)
+    # Serving report: decode cost under its own winner vs the prefill
+    # winner, and whether 48 ranks resolved phase-distinct configs
+    # (rows from serving).
+    for name, row in sorted(results.items()):
+        if name in ("srv_phase_win", "srv_distinct_48"):
+            print(f"# serving {name}: {row['us_per_call']:.2f}, "
+                  f"{row['derived']}", file=sys.stderr)
     if json_path:
         # Merge into any existing file so a partial (--only=...) run updates
         # its rows without destroying the rest of the benchmark record.

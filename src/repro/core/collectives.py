@@ -49,7 +49,8 @@ def resolve_config(cfg, collective: str = "all_reduce",
                    msg_bytes: int = 1 << 20, mesh=None,
                    db_path=None, hops: int | None = None,
                    objective: str = "latency",
-                   torus: str | None = None) -> CommConfig:
+                   torus: str | None = None,
+                   consumer: str | None = None) -> CommConfig:
     """Resolve a ``CommConfig | "auto" | None`` to a concrete config.
 
     ``"auto"`` asks the autotuner (:func:`repro.tune.select_config`) for the
@@ -59,7 +60,10 @@ def resolve_config(cfg, collective: str = "all_reduce",
     multi-hop edges prefer configs measured at the same distance (the paper's
     direct-link vs Ethernet-switch distinction).  ``objective="e2e"`` ranks
     by the measured consumer-loop time instead of bare collective latency
-    (§5: what wins the microbench is not what scales the application).
+    (§5: what wins the microbench is not what scales the application);
+    ``consumer`` names which consumer loop's measurements to prefer
+    ("decode_step" vs "prefill" vs "row_parallel" — serving's phases
+    resolve different configs from the same TuneDB).
     Host-side only — call it before tracing, never inside ``shard_map``.
     """
     if isinstance(cfg, CommConfig):
@@ -67,7 +71,8 @@ def resolve_config(cfg, collective: str = "all_reduce",
     if cfg is None or cfg == "auto":
         from repro.tune import select_config
         return select_config(collective, msg_bytes, mesh=mesh, path=db_path,
-                             hops=hops, objective=objective, torus=torus)
+                             hops=hops, objective=objective, torus=torus,
+                             consumer=consumer)
     raise TypeError(f"comm config must be CommConfig or 'auto', got {cfg!r}")
 
 

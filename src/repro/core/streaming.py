@@ -361,8 +361,12 @@ def overlapped_matmul_allreduce(h: jnp.ndarray, w: jnp.ndarray,
     """
     tokens = h.shape[0]
     if n_chunks is None:
-        out_bytes = tokens * w.shape[1] * 4
-        n_chunks = num_chunks(out_bytes, cfg)
+        # Derive the chunk geometry through the plan cache (align = output
+        # row width, so a chunk never splits a token row): repeated per-layer
+        # combines of the same shape replay one cached ChunkPlan.
+        p = plans.chunk_plan((tokens, w.shape[1]), jnp.float32, cfg,
+                             align=w.shape[1])
+        n_chunks = p.n_chunks
     n_chunks = max(1, min(n_chunks, tokens))
     while tokens % n_chunks:
         n_chunks -= 1

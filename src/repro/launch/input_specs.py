@@ -254,6 +254,14 @@ def decode_caches_abstract(cfg: ModelConfig, shape: ShapeSpec, mesh):
     raise ValueError(cfg.family)
 
 
+def vocab_is_sharded(cfg: ModelConfig, tp: int) -> bool:
+    """Whether the vocab dim (embedding rows / logits columns) shards over
+    the model axis.  The single source of the divisibility rule — serving
+    specs and the logits combine must agree on it or the decode
+    in_specs/out_specs drift from the program's actual layout."""
+    return cfg.vocab_size % tp == 0 and tp > 1
+
+
 def decode_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh):
     """(abstract (token, ServeState), spec tree) for decode_step."""
     from repro.models import decode as dec
@@ -263,8 +271,8 @@ def decode_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh):
     B = shape.global_batch
     tp = mesh.shape["model"]
     caches, cache_spec = decode_caches_abstract(cfg, shape, mesh)
-    vshard = cfg.vocab_size // tp if cfg.vocab_size % tp == 0 and tp > 1 \
-        else cfg.vocab_size
+    vshard = (cfg.vocab_size // tp if vocab_is_sharded(cfg, tp)
+              else cfg.vocab_size)
     state = dec.ServeState(
         caches=caches,
         last_logits=_sds((B, vshard * (tp if vshard < cfg.vocab_size else 1)),

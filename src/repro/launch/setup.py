@@ -64,7 +64,8 @@ def build_session(cfg: ModelConfig, mesh: Mesh, comm: CommConfig | str,
         from repro.core.collectives import resolve_config
         msg_bytes = 4 * cfg.d_model * 1024
         comm = resolve_config(comm, "all_reduce", msg_bytes, mesh=mesh,
-                              db_path=tune_db_path, objective=objective)
+                              db_path=tune_db_path, objective=objective,
+                              consumer="row_parallel")
 
     init_fn = functools.partial(transformer.init_model, cfg=cfg, tp=tp)
     key = jax.random.PRNGKey(seed)

@@ -447,8 +447,15 @@ def decode_attention(params, x: jnp.ndarray, cache: KVCache, rt: Runtime,
     s_loc = jnp.sum(p, axis=-1)                           # (B,KV,rep)
     o_loc = jnp.einsum("bgrt,btgd->bgrd", p, cache.v.astype(jnp.float32))
     if sp > 1:
-        s = collectives.all_reduce(s_loc, rt.sp_comm(), rt.comm)
-        o = collectives.all_reduce(o_loc, rt.sp_comm(), rt.comm)
+        # Fused LSE combine: softmax denominator and weighted values share
+        # one sum all-reduce (psum of a concat == concat of psums, bitwise)
+        # — decode pays two small ACCL-X combines per layer (max + sum),
+        # not three, and the per-op dispatch cost is what dominates the
+        # latency-bound decode phase.
+        so = collectives.all_reduce(
+            jnp.concatenate([s_loc[..., None], o_loc], axis=-1),
+            rt.sp_comm(), rt.comm)
+        s, o = so[..., 0], so[..., 1:]
     else:
         s, o = s_loc, o_loc
     out = o / jnp.maximum(s[..., None], 1e-30)

@@ -194,8 +194,13 @@ def mla_decode(params, x: jnp.ndarray, cache: MLACache, rt: Runtime
     s_loc = jnp.sum(p, axis=-1)
     lat_loc = jnp.einsum("bht,btr->bhr", p, cache.ckv.astype(jnp.float32))
     if sp > 1:
-        denom = collectives.all_reduce(s_loc, rt.sp_comm(), rt.comm)
-        lat = collectives.all_reduce(lat_loc, rt.sp_comm(), rt.comm)
+        # Fused LSE combine (see attention.decode_attention): denominator
+        # and latent partials ride one sum all-reduce — bitwise-identical,
+        # one fewer per-layer collective on the latency-bound decode path.
+        dl = collectives.all_reduce(
+            jnp.concatenate([s_loc[..., None], lat_loc], axis=-1),
+            rt.sp_comm(), rt.comm)
+        denom, lat = dl[..., 0], dl[..., 1:]
     else:
         denom, lat = s_loc, lat_loc
     lat = lat / jnp.maximum(denom[..., None], 1e-30)      # (B,H,r)

@@ -80,6 +80,13 @@ class TuneEntry:
     # winner flips with loss, so a lossy-wire answer must come from a
     # lossy-wire measurement.
     loss: float = 0.0
+    # Which consumer loop produced ``e2e_us`` ("row_parallel",
+    # "decode_step", "prefill", "halo_fold", "moe_loop"; "" = bare-latency
+    # entry).  One collective serves phases with opposite cost structures —
+    # decode's tiny latency-bound per-token combines vs prefill's
+    # throughput-bound bulk reduces — so each consumer's measurement is a
+    # distinct data point and selection prefers a matching one.
+    consumer: str = ""
 
     @property
     def latency_us(self) -> float:
@@ -119,6 +126,7 @@ class TuneDB:
         for i, e in enumerate(self.entries):
             if (e.key() == entry.key() and e.hops == entry.hops
                     and e.torus == entry.torus and e.loss == entry.loss
+                    and e.consumer == entry.consumer
                     and tuple(sorted(e.config.items())) == cfg_key):
                 # Merge: fastest latency wins; an e2e measurement is kept
                 # even when it rides a slower latency rerun (and the
@@ -139,7 +147,8 @@ class TuneDB:
     def candidates(self, collective: str, topo: str | None = None,
                    hops: int | None = None,
                    torus: str | None = None,
-                   loss: float | None = None) -> list[TuneEntry]:
+                   loss: float | None = None,
+                   consumer: str | None = None) -> list[TuneEntry]:
         """Entries for ``collective`` (optionally per topology).
 
         With ``torus`` given (a ``TorusSpec.name``), prefer entries measured
@@ -153,11 +162,19 @@ class TuneDB:
         structures differ).  ``loss`` works the same way for the injected
         chunk-loss rate: a lossy caller prefers lossy-wire measurements
         (jumbo frames win clean links, small segments win lossy ones) and
-        relaxes to the nearest measured rate.
+        relaxes to the nearest measured rate.  ``consumer`` prefers entries
+        whose ``e2e_us`` was measured inside that consumer loop (a decode
+        caller must not be answered by a prefill-loop measurement when a
+        decode-loop one exists) and relaxes to every entry when the
+        consumer was never swept.
         """
         cands = [e for e in self.entries
                  if e.collective == collective
                  and (topo is None or e.topo == topo)]
+        if consumer is not None:
+            matched = [e for e in cands if e.consumer == consumer]
+            if matched:
+                cands = matched
         if torus is not None:
             matched = [e for e in cands if e.torus == torus]
             if matched:
@@ -219,21 +236,23 @@ class TuneDB:
     def best(self, collective: str, msg_bytes: int, topo: str | None = None,
              hops: int | None = None, objective: str = "latency",
              torus: str | None = None,
-             loss: float | None = None) -> Optional[TuneEntry]:
+             loss: float | None = None,
+             consumer: str | None = None) -> Optional[TuneEntry]:
         """Fastest entry at exactly ``msg_bytes`` (None if not measured)."""
         exact = [e for e in self.candidates(collective, topo, hops, torus,
-                                            loss)
+                                            loss, consumer)
                  if e.msg_bytes == msg_bytes]
         return self._rank(exact, objective)
 
     def nearest(self, collective: str, msg_bytes: int, topo: str | None = None,
                 hops: int | None = None, objective: str = "latency",
                 torus: str | None = None,
-                loss: float | None = None) -> Optional[TuneEntry]:
+                loss: float | None = None,
+                consumer: str | None = None) -> Optional[TuneEntry]:
         """Fastest entry at the measured message size closest (in log space)
         to ``msg_bytes`` — message-size behaviour is scale-free, so log
         distance is the right metric (1 KiB is "nearer" 4 KiB than 64 KiB)."""
-        cands = self.candidates(collective, topo, hops, torus, loss)
+        cands = self.candidates(collective, topo, hops, torus, loss, consumer)
         if not cands:
             return None
         target = math.log(max(1, msg_bytes))
@@ -282,6 +301,7 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
                   objective: str = "latency",
                   torus: str | None = None,
                   loss: float | None = None,
+                  consumer: str | None = None,
                   fallback: CommConfig = OPTIMIZED_CONFIG) -> CommConfig:
     """The autotuner's answer to "how should I communicate?".
 
@@ -313,6 +333,13 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
     GUARANTEED small-segment configs that looked slow on the clean sweep
     are the ones that actually win, and only lossy-wire measurements can
     say so.
+
+    ``consumer`` names the caller's consumer loop ("decode_step",
+    "prefill", "row_parallel", ...): entries whose ``e2e_us`` was measured
+    inside that loop are preferred, which is how serving's two phases
+    resolve *different* configs from the same TuneDB — a latency-bound
+    decode step and a throughput-bound prefill disagree about the winner
+    even at the same message size.
     """
     if objective not in ("latency", "e2e"):
         raise ValueError(f"objective must be 'latency' or 'e2e', "
@@ -323,14 +350,14 @@ def select_config(collective: str, msg_bytes: int, mesh=None,
         topo = topology_key(mesh) if mesh is not None else topology_key()
     platform = topo.split(":", 1)[0]
     entry = (db.best(collective, msg_bytes, topo, hops, objective, torus,
-                     loss)
+                     loss, consumer)
              or db.nearest(collective, msg_bytes, topo, hops, objective,
-                           torus, loss))
+                           torus, loss, consumer))
     if entry is None:
         same_platform = TuneDB([e for e in db.entries
                                 if e.topo.split(":", 1)[0] == platform])
         entry = same_platform.nearest(collective, msg_bytes, None, hops,
-                                      objective, torus, loss)
+                                      objective, torus, loss, consumer)
     if entry is None:
         return fallback
     return entry.comm_config

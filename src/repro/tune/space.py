@@ -82,10 +82,11 @@ _RELEVANT_FIELDS: dict[str, frozenset[str]] = {
 
 _DEFAULTS = CommConfig()
 
-# Collectives with an e2e consumer-loop benchmark whose *consumer* reads
+# Collectives with e2e consumer-loop benchmarks whose *consumers* read
 # Scheduling.OVERLAPPED even though the bare collective executes identically
-# to fused (row_parallel routes the combine through
-# overlapped_matmul_allreduce; the halo fold is double-buffered).  Under the
+# to fused (row_parallel, decode_step and prefill all route their combine
+# through overlapped_matmul_allreduce; the halo fold is double-buffered —
+# see sweep.CONSUMERS for the per-collective consumer sets).  Under the
 # e2e objective the overlapped variants must stay distinct candidates — the
 # whole point of the paper's §5 finding is that the microbench cannot rank
 # them but the consumer loop can.  all_to_all (the MoE dispatch/combine

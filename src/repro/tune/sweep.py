@@ -54,12 +54,22 @@ NAMED_SIZES = {"small": (1 << 14, 1 << 20), "full": FULL_SIZES}
 SWEEPABLE = ("sendrecv", "all_reduce", "all_gather", "reduce_scatter",
              "multi_neighbor", "all_to_all", "hierarchical_all_reduce")
 
-# Collectives with an end-to-end consumer-loop benchmark (the
-# hideable-compute consumers of the paper's §5 argument): the row-parallel
-# matmul+reduce layer, the halo-fold step, and the MoE
-# dispatch -> expert-FFN -> combine loop.
-CONSUMERS = {"all_reduce": "row_parallel", "multi_neighbor": "halo_fold",
-             "all_to_all": "moe_loop"}
+# Collectives with end-to-end consumer-loop benchmarks (the
+# hideable-compute consumers of the paper's §5 argument), one tuple per
+# collective.  all_reduce serves three phases with opposite cost
+# structures: the training row-parallel matmul+reduce layer, the serving
+# decode step (tiny latency-bound per-token combines with almost no
+# hideable compute), and prefill (throughput-bound bulk reduces behind a
+# large hideable matmul).  Under ``--objective e2e`` each consumer is
+# measured separately and recorded as its own TuneEntry (tagged
+# ``TuneEntry.consumer``) so ``select_config(consumer=...)`` can answer
+# per phase.  The first consumer in each tuple is the primary one — the
+# one the pruning model predicts with.
+CONSUMERS: dict[str, tuple[str, ...]] = {
+    "all_reduce": ("row_parallel", "decode_step", "prefill"),
+    "multi_neighbor": ("halo_fold",),
+    "all_to_all": ("moe_loop",),
+}
 
 # Collectives whose benchmark pattern is parameterized by a torus hop
 # distance (the --hop-distances axis): the perm is a translation of the
@@ -77,12 +87,30 @@ _ROWPAR_FF = 128
 # tokens*_MOE_D*4 = msg_bytes; each expert's FFN expands to _MOE_FF.
 _MOE_D = 32
 _MOE_FF = 64
+# decode_step consumer geometry: a (batch, _DEC_D) per-token activation with
+# batch*_DEC_D*4 = msg_bytes; the per-step matmul contracts over _DEC_D —
+# near-zero hideable compute, latency-bound (the serving decode phase).
+_DEC_D = 16
+# prefill consumer geometry: (tokens, _PRE_FF) activations with
+# tokens*_PRE_FF*4 = msg_bytes and a _PRE_FF-wide contraction — a large
+# hideable matmul per combine, throughput-bound (the serving prefill phase).
+_PRE_FF = 256
 
 
-def consumer_flops(collective: str, msg_bytes: int) -> float:
+def consumer_flops(collective: str, msg_bytes: int,
+                   consumer: str | None = None) -> float:
     """Hideable per-iteration compute (FLOPs) of a collective's consumer
-    loop — feeds the e2e prediction (compute_s = flops / peak)."""
+    loop — feeds the e2e prediction (compute_s = flops / peak).  With
+    ``consumer`` omitted, the collective's primary consumer is assumed."""
+    if consumer is None:
+        consumer = (CONSUMERS.get(collective) or ("",))[0]
     if collective == "all_reduce":
+        if consumer == "decode_step":
+            # tiny per-token matmul + the LSE max/sum pair: ~4 flops/elem
+            return 4.0 * (msg_bytes / 4.0)
+        if consumer == "prefill":
+            # bulk matmul: 2 * tokens * ff^2 with tokens*ff = msg_bytes/4
+            return 2.0 * _PRE_FF * (msg_bytes / 4.0)
         # matmul: 2 * tokens * ff * d with tokens*d = msg_bytes/4 elements
         return 2.0 * _ROWPAR_FF * (msg_bytes / 4.0)
     if collective == "multi_neighbor":
@@ -197,7 +225,8 @@ def _build_op(collective: str, comm, cfg: CommConfig,
 
 def _build_consumer_op(collective: str, comm, cfg: CommConfig,
                        msg_bytes: int,
-                       hop_distance: int | None = None
+                       hop_distance: int | None = None,
+                       consumer: str | None = None
                        ) -> tuple[Callable, tuple]:
     """One iteration of the collective's consumer loop: (op, per_dev_shape).
 
@@ -207,9 +236,60 @@ def _build_consumer_op(collective: str, comm, cfg: CommConfig,
     ``hop_distance`` (hop-patterned collectives on a virtual torus) swaps
     the exchange pattern for the same translation perm the bare benchmark
     measures, so a per-hop ``e2e_us`` really routed at that distance.
+    ``consumer`` picks one of the collective's loops from
+    :data:`CONSUMERS` (default: the primary one) — all_reduce serves
+    row_parallel (training TP), decode_step (latency-bound serving), and
+    prefill (throughput-bound serving).
     """
     from jax import numpy as jnp
     from repro.core import collectives, streaming
+
+    if consumer is None:
+        consumer = (CONSUMERS.get(collective) or ("",))[0]
+
+    if collective == "all_reduce" and consumer == "decode_step":
+        # Serving decode step: a tiny (batch, d) per-token activation, the
+        # LSE-combine pair (max reduce + sum reduce — exactly the partial-
+        # attention combine in models.attention.decode_attention) and a
+        # row-parallel output combine with a near-trivial matmul.  Almost
+        # no hideable compute: the config's fixed per-op cost dominates,
+        # which is what makes decode's winner differ from prefill's.
+        b = max(4, msg_bytes // 4 // _DEC_D)
+        w = jnp.asarray(
+            np.random.RandomState(2).randn(_DEC_D, _DEC_D) * 0.05,
+            jnp.float32)
+
+        def op(h):
+            m = collectives.all_reduce(h, comm, cfg, op="max")
+            if (cfg.mode == CommMode.STREAMING
+                    or cfg.scheduling == Scheduling.OVERLAPPED):
+                y = streaming.overlapped_matmul_allreduce(h, w, comm, cfg)
+            else:
+                partial = jnp.dot(h, w, preferred_element_type=jnp.float32)
+                y = collectives.all_reduce(partial, comm, cfg)
+            return jnp.tanh(h + 1e-3 * (y - 1e-3 * m))
+
+        return op, (b, _DEC_D)
+
+    if collective == "all_reduce" and consumer == "prefill":
+        # Serving prefill: bulk (tokens, ff) activations with a wide
+        # hideable matmul per combine — throughput-bound; the overlapped
+        # schedules can hide most of the wire time behind the contraction.
+        tokens = max(8, msg_bytes // 4 // _PRE_FF)
+        w = jnp.asarray(
+            np.random.RandomState(3).randn(_PRE_FF, _PRE_FF) * 0.05,
+            jnp.float32)
+
+        def op(h):
+            if (cfg.mode == CommMode.STREAMING
+                    or cfg.scheduling == Scheduling.OVERLAPPED):
+                y = streaming.overlapped_matmul_allreduce(h, w, comm, cfg)
+            else:
+                partial = jnp.dot(h, w, preferred_element_type=jnp.float32)
+                y = collectives.all_reduce(partial, comm, cfg)
+            return jnp.tanh(h + 1e-3 * y)
+
+        return op, (tokens, _PRE_FF)
 
     if collective == "all_reduce":
         # Row-parallel TP layer: per-device matmul + combine of the partial
@@ -285,8 +365,8 @@ def _build_consumer_op(collective: str, comm, cfg: CommConfig,
 
         return op, (tokens, _MOE_D)
 
-    raise ValueError(f"no consumer-loop benchmark for {collective!r} "
-                     f"(consumers: {tuple(CONSUMERS)})")
+    raise ValueError(f"no consumer-loop benchmark {consumer!r} for "
+                     f"{collective!r} (consumers: {CONSUMERS})")
 
 
 # Per-rep seconds of the most recent _time_program call.  The sweep reads
@@ -446,12 +526,15 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
     hit/miss deltas.
 
     ``objective="e2e"`` additionally measures each candidate *end-to-end*
-    for the collectives with a consumer-loop benchmark (:data:`CONSUMERS`:
-    the row-parallel matmul+reduce layer, the halo-fold step, and the MoE
-    dispatch→expert-FFN→combine loop), records ``TuneEntry.e2e_us``, keeps
-    consumer-distinct candidates (overlapped scheduling) in the space, and
-    — with ``prune=True`` — ranks candidates by the overlap-aware e2e
-    prediction instead of bare Eq. 1 latency.
+    for the collectives with consumer-loop benchmarks (:data:`CONSUMERS`:
+    the row-parallel matmul+reduce layer, the serving decode step and
+    prefill loops, the halo-fold step, and the MoE
+    dispatch→expert-FFN→combine loop) — one measurement and one tagged
+    ``TuneEntry`` per consumer, so ``select_config(consumer=...)`` answers
+    per phase from a single sweep — keeps consumer-distinct candidates
+    (overlapped scheduling) in the space, and — with ``prune=True`` —
+    ranks candidates by the overlap-aware e2e prediction instead of bare
+    Eq. 1 latency.
 
     ``topology`` places the bench communicator on a virtual multi-hop torus
     (:class:`~repro.core.topology.TorusSpec`): multi-hop edges physically
@@ -582,23 +665,27 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
             distances: list[int | None] = list(hop_distances)
         else:
             distances = [None]
-        consumer = CONSUMERS.get(coll) if objective == "e2e" else None
+        consumers = CONSUMERS.get(coll, ()) if objective == "e2e" else ()
         for hop_d in distances:
             hops = hop_d if hop_d is not None else _pattern_hops(coll, comm)
             log(f"[{topo}{'/' + torus if torus else ''}] {coll}: "
                 f"{len(cands)} configs x {len(sizes)} sizes "
                 f"(pattern hops={hops}"
-                + (f", e2e consumer={consumer}" if consumer else "") + ")")
+                + (f", e2e consumers={','.join(consumers)}"
+                   if consumers else "") + ")")
             for msg_bytes in sizes:
                 stats["total"] += len(cands)
                 to_measure = cands
                 if prune and calibration is not None:
+                    # The primary consumer's compute feeds the prediction;
+                    # pruning is shared across the consumer set (a config
+                    # hopeless for the primary loop is measured for none).
                     compute_s = (consumer_flops(coll, msg_bytes)
-                                 / V5E.peak_flops if consumer else 0.0)
+                                 / V5E.peak_flops if consumers else 0.0)
                     to_measure, skipped = tune_prune.prune_candidates(
                         cands, msg_bytes, calibration, prune_ratio,
                         collective=coll,
-                        objective="e2e" if consumer else "latency",
+                        objective="e2e" if consumers else "latency",
                         compute_s=compute_s, hops=hops, loss=loss_rate)
                     stats["pruned"] += len(skipped)
                     reg.counter("sweep.pruned").inc(len(skipped))
@@ -641,12 +728,15 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                         log(f"  skip {coll}/{msg_bytes}B cfg{i}: "
                             f"{type(e).__name__}: {e}")
                         continue
-                    e2e_us = 0.0
-                    if consumer:
+                    # One e2e measurement per consumer loop: the same bare
+                    # candidate yields one TuneEntry per consumer (tagged),
+                    # so selection can answer per phase from one sweep.
+                    consumer_e2e: dict[str, float] = {}
+                    for consumer in consumers:
                         try:
                             cop, shape = _build_consumer_op(
                                 coll, comm, cfg, msg_bytes,
-                                hop_distance=hop_d)
+                                hop_distance=hop_d, consumer=consumer)
                             with (reliable.inject(wire) if wire is not None
                                   else nullcontext()):
                                 e2e_sec = timer(
@@ -656,33 +746,39 @@ def run_sweep(mesh=None, collectives: Sequence[str] = SWEEPABLE,
                                     cache_key=("sweep_e2e", topo, torus,
                                                hop_d or 0,
                                                _mesh_key(bench_mesh), coll,
-                                               cfg_key(cfg),
+                                               consumer, cfg_key(cfg),
                                                int(msg_bytes)) + losskey)
-                            e2e_us = e2e_sec * 1e6
+                            consumer_e2e[consumer] = e2e_sec * 1e6
                             stats["e2e_measured"] += 1
                             reg.histogram("sweep.e2e_us",
-                                          collective=coll).observe(e2e_us)
+                                          collective=coll).observe(
+                                              e2e_sec * 1e6)
                         except Exception as e:  # noqa: BLE001
                             stats["errors"] += 1
-                            log(f"  skip e2e {coll}/{msg_bytes}B cfg{i}: "
+                            log(f"  skip e2e {coll}/{consumer}/"
+                                f"{msg_bytes}B cfg{i}: "
                                 f"{type(e).__name__}: {e}")
                     stats["measured"] += 1
-                    db.add(TuneEntry(
-                        topo=topo, collective=coll, msg_bytes=int(msg_bytes),
-                        config=tune_space.config_to_dict(cfg),
-                        us_per_call=sec * 1e6,
-                        gbps=msg_bytes / sec / 1e9,
-                        hops=hops, e2e_us=e2e_us, torus=torus,
-                        p95_us=p95_us, loss=loss_rate))
+                    for consumer, e2e_us in (consumer_e2e.items()
+                                             or ((None, 0.0),)):
+                        db.add(TuneEntry(
+                            topo=topo, collective=coll,
+                            msg_bytes=int(msg_bytes),
+                            config=tune_space.config_to_dict(cfg),
+                            us_per_call=sec * 1e6,
+                            gbps=msg_bytes / sec / 1e9,
+                            hops=hops, e2e_us=e2e_us, torus=torus,
+                            p95_us=p95_us, loss=loss_rate,
+                            consumer=consumer or ""))
                 best = db.best(coll, msg_bytes, topo, hops=hops)
                 if best is not None:
                     log(f"  {coll:15s} {msg_bytes:>8d}B h{hops} best "
                         f"{best.us_per_call:9.1f} us  ({best.gbps:6.3f} GB/s)  "
                         f"{best.config['mode']}/{best.config['scheduling']}"
                         f"/{best.config['algorithm']}")
-                if consumer:
+                for consumer in consumers:
                     be = db.best(coll, msg_bytes, topo, hops=hops,
-                                 objective="e2e")
+                                 objective="e2e", consumer=consumer)
                     if be is not None and be.e2e_us > 0.0:
                         log(f"  {coll:15s} {msg_bytes:>8d}B h{hops} best e2e "
                             f"{be.e2e_us:9.1f} us/iter "

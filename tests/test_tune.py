@@ -501,7 +501,7 @@ from repro import compat
 from repro.tune import TuneDB, run_sweep, select_config
 from repro.tune.sweep import CONSUMERS, consumer_flops
 
-assert CONSUMERS["all_to_all"] == "moe_loop"
+assert CONSUMERS["all_to_all"] == ("moe_loop",)
 assert consumer_flops("all_to_all", 1 << 14) > 0
 
 mesh = compat.make_mesh((8,), ("x",))
@@ -519,6 +519,45 @@ assert cfg == best.comm_config
 print("MOE E2E SWEEP OK")
 """)
     assert "MOE E2E SWEEP OK" in out
+
+
+def test_consumer_axis_prefers_matching_entries():
+    """The TuneDB's consumer axis: a decode_step caller is answered by the
+    decode_step-loop measurement when one exists, a prefill caller by the
+    prefill-loop one — distinct winners from the same DB — and an unswept
+    consumer relaxes to every entry instead of failing."""
+    from repro.core.config import CommConfig, CommMode, Scheduling
+    from repro.tune.db import TuneDB, TuneEntry, select_config
+    from repro.tune.space import config_to_dict
+
+    fast_small = CommConfig(scheduling=Scheduling.OVERLAPPED,
+                            chunk_bytes=4096)
+    fast_big = CommConfig(mode=CommMode.BUFFERED)
+    db = TuneDB()
+    for consumer, winner, loser in (("decode_step", fast_small, fast_big),
+                                    ("prefill", fast_big, fast_small)):
+        db.add(TuneEntry(topo="cpu:8", collective="all_reduce",
+                         msg_bytes=16384, config=config_to_dict(winner),
+                         us_per_call=10.0, e2e_us=20.0, consumer=consumer))
+        db.add(TuneEntry(topo="cpu:8", collective="all_reduce",
+                         msg_bytes=16384, config=config_to_dict(loser),
+                         us_per_call=9.0, e2e_us=55.0, consumer=consumer))
+    # 4 distinct (config, consumer) entries survive add()'s merge.
+    assert len(db.entries) == 4
+    pick = lambda c: select_config(  # noqa: E731
+        "all_reduce", 16384, db=db, topo="cpu:8", objective="e2e",
+        consumer=c)
+    assert pick("decode_step") == fast_small
+    assert pick("prefill") == fast_big
+    # Unswept consumer: relax to all entries (global e2e winner), and the
+    # bare-latency objective ignores the consumer-loop measurements.
+    assert pick("halo_fold") == fast_small
+    assert select_config("all_reduce", 16384, db=db, topo="cpu:8",
+                         objective="latency") == fast_big
+    # Round-trips through JSON (old DBs load with consumer="" defaults).
+    entries = TuneDB([TuneEntry(**d) for d in
+                      [dataclasses.asdict(e) for e in db.entries]])
+    assert {e.consumer for e in entries.entries} == {"decode_step", "prefill"}
 
 
 # ----------------------------------------------------------------------
